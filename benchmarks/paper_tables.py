@@ -1,0 +1,173 @@
+"""One benchmark per paper table/figure (deliverable d).
+
+Synthetic road networks stand in for the DIMACS USA graphs (offline
+container; DESIGN.md §6); each function validates the paper's
+*structural* claim at reduced scale and prints a CSV row per graph.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import dijkstra
+from repro.core.agent_wrap import AgentAccelerated, PlainDijkstra
+from repro.core.agents import compute_dras
+from repro.core.arcflags import ArcFlags
+from repro.core.ch import CH
+from repro.core.device_engine import build_device_index, serve_step
+from repro.core.engine import DislandEngine
+from repro.core.graph import Graph, road_like
+from repro.core.landmarks import (hybrid_cover, landmark_cover_2approx,
+                                  landmark_cover_cost)
+from repro.core.partition import partition_bgp
+from repro.core.supergraph import build_index
+from repro.data.queries import grid_distance_queries
+
+GRAPH_SIZES = (1000, 2500, 6000, 12000)
+
+
+def _graphs(sizes=GRAPH_SIZES):
+    for n in sizes:
+        yield f"road{n // 1000}k" if n >= 1000 else f"road{n}", \
+            road_like(n, seed=n)
+
+
+def table1_landmark_overhead(out: List[str]) -> None:
+    """Table I: direct landmark covers are impractical."""
+    out.append("table1,graph,n,m,|D|,frac_nodes,cover_bytes,"
+               "graph_bytes,ratio,time_s")
+    for name, g in _graphs((600, 1200, 2500)):
+        t0 = time.perf_counter()
+        cover, _ = landmark_cover_2approx(g)
+        dt = time.perf_counter() - t0
+        c = landmark_cover_cost(g, cover)
+        out.append(
+            f"table1,{name},{g.n},{g.m},{c['n_landmarks']},"
+            f"{c['frac_nodes']:.3f},{c['cover_bytes']},"
+            f"{c['graph_bytes']},{c['ratio']:.1f},{dt:.2f}")
+
+
+def table3_agents(out: List[str]) -> None:
+    """Table III: agents/DRA counts + compDRAs runtime."""
+    out.append("table3,graph,n,agents,agents_frac,represented,"
+               "rep_frac,time_s")
+    for name, g in _graphs():
+        t0 = time.perf_counter()
+        dras = compute_dras(g)
+        dt = time.perf_counter() - t0
+        rep = int(dras.represented_mask().sum())
+        out.append(f"table3,{name},{g.n},{dras.n_nontrivial_agents},"
+                   f"{dras.n_nontrivial_agents / g.n:.3f},{rep},"
+                   f"{rep / g.n:.3f},{dt:.2f}")
+
+
+def table4_partitions(out: List[str]) -> None:
+    """Table IV: BGP fragment/boundary statistics on shrink graphs."""
+    out.append("table4,graph,shrink_n,fragments,avg_nodes,"
+               "boundary_frac,time_s")
+    for name, g in _graphs():
+        dras = compute_dras(g)
+        shrink, _ = g.subgraph(dras.shrink_nodes())
+        gamma = 2 * int(np.sqrt(g.n))
+        t0 = time.perf_counter()
+        part = partition_bgp(shrink, gamma)
+        dt = time.perf_counter() - t0
+        b = part.boundary_mask(shrink).sum()
+        out.append(f"table4,{name},{shrink.n},{part.n_fragments},"
+                   f"{shrink.n / max(part.n_fragments, 1):.1f},"
+                   f"{b / max(shrink.n, 1):.3f},{dt:.2f}")
+
+
+def table5_hybrid_covers(out: List[str]) -> None:
+    """Table V: hybrid covers with vs without the cost model."""
+    out.append("table5,graph,with_cm_lm,with_cm_edges,"
+               "without_cm_lm,without_cm_edges")
+    for name, g in _graphs((2500,)):
+        ix = build_index(g, use_cost_model=True)
+        lm_w = np.mean([f.cover.landmarks.size for f in ix.fragments])
+        e_w = np.mean([f.cover.n_enforced_edges for f in ix.fragments])
+        ix2 = build_index(g, use_cost_model=False)
+        lm_o = np.mean([f.cover.landmarks.size for f in ix2.fragments])
+        e_o = np.mean([f.cover.n_enforced_edges for f in ix2.fragments])
+        out.append(f"table5,{name},{lm_w:.1f},{e_w:.1f},{lm_o:.1f},"
+                   f"{e_o:.1f}")
+
+
+def table6_super_graphs(out: List[str]) -> None:
+    """Table VI: SUPER graph sizes relative to the input."""
+    out.append("table6,graph,super_nodes_frac,super_edges_frac")
+    for name, g in _graphs():
+        ix = build_index(g)
+        sup = ix.super_graph.graph
+        out.append(f"table6,{name},{sup.n / g.n:.4f},{sup.m / g.m:.4f}")
+
+
+def exp4_preprocessing(out: List[str]) -> None:
+    """Exp-4: preprocessing time + extra space across approaches."""
+    out.append("exp4,graph,approach,prep_s,extra_edges_or_bits")
+    name, g = next(_graphs((2500,)))
+    t0 = time.perf_counter()
+    ix = build_index(g)
+    disland_t = time.perf_counter() - t0
+    out.append(f"exp4,{name},disland,{disland_t:.2f},"
+               f"{ix.extra_space_edges()['total']}")
+    t0 = time.perf_counter()
+    ch = CH(g)
+    out.append(f"exp4,{name},ch,{time.perf_counter() - t0:.2f},"
+               f"{ch.extra_edges()}")
+    t0 = time.perf_counter()
+    af = ArcFlags(g, n_regions=12)
+    out.append(f"exp4,{name},arcflags,{time.perf_counter() - t0:.2f},"
+               f"{af.extra_bits()}")
+    t0 = time.perf_counter()
+    ac = AgentAccelerated(g, lambda s: CH(s))
+    out.append(f"exp4,{name},agent+ch,{time.perf_counter() - t0:.2f},"
+               f"{ac.inner.extra_edges()}")
+
+
+def exp5_query_latency(out: List[str]) -> None:
+    """Exp-5 / Figs 9-10: query latency per grid-distance bucket."""
+    out.append("exp5,graph,bucket,algo,us_per_query")
+    name, g = next(_graphs((6000,)))
+    queries = grid_distance_queries(g, n_per_set=40, n_sets=6, seed=1)
+    ix = build_index(g)
+    eng = DislandEngine(ix)
+    dix = build_device_index(ix)
+    import jax
+    import jax.numpy as jnp
+    jit_serve = jax.jit(lambda s, t: serve_step(dix, s, t))
+    ch = CH(g)
+    af = ArcFlags(g, n_regions=12)
+    abd = AgentAccelerated(g, lambda s: PlainDijkstra(s,
+                                                      bidirectional=True))
+    algos: Dict[str, Callable] = {
+        "dijkstra": lambda s, t: dijkstra.pair(g, s, t),
+        "bidijkstra": lambda s, t: dijkstra.bidirectional(g, s, t),
+        "agent+bidij": abd.query,
+        "ch": ch.query,
+        "arcflags": af.query,
+        "disland": eng.query,
+    }
+    for bucket, pairs in queries.items():
+        for algo, fn in algos.items():
+            t0 = time.perf_counter()
+            for s, t in pairs:
+                fn(int(s), int(t))
+            dt = (time.perf_counter() - t0) / len(pairs)
+            out.append(f"exp5,{name},Q{bucket},{algo},{dt * 1e6:.1f}")
+        # batched device engine: whole bucket in one jitted call
+        s = jnp.asarray(pairs[:, 0], jnp.int32)
+        t = jnp.asarray(pairs[:, 1], jnp.int32)
+        jax.block_until_ready(jit_serve(s, t))     # warm
+        t0 = time.perf_counter()
+        jax.block_until_ready(jit_serve(s, t))
+        dt = (time.perf_counter() - t0) / len(pairs)
+        out.append(f"exp5,{name},Q{bucket},disland-batched,"
+                   f"{dt * 1e6:.2f}")
+
+
+ALL = [table1_landmark_overhead, table3_agents, table4_partitions,
+       table5_hybrid_covers, table6_super_graphs, exp4_preprocessing,
+       exp5_query_latency]

@@ -1,0 +1,37 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3,exp5]
+
+Prints CSV rows (section,graph,...) so downstream tooling can diff runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import paper_tables
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section prefixes")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    out: list[str] = []
+    t_all = time.perf_counter()
+    for fn in paper_tables.ALL:
+        name = fn.__name__
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        t0 = time.perf_counter()
+        fn(out)
+        out.append(f"# {name} took {time.perf_counter() - t0:.1f}s")
+    out.append(f"# total {time.perf_counter() - t_all:.1f}s")
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

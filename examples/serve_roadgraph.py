@@ -1,0 +1,18 @@
+"""Serving scenario: the paper's application as a service — build the
+index once, then serve batched query streams with validation.
+
+    PYTHONPATH=src python examples/serve_roadgraph.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    from repro.launch import serve
+    sys.argv = ["serve", "--nodes", "6000", "--batches", "8",
+                "--batch-size", "2048", "--validate", "64"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""End-to-end training scenario: a reduced granite-MoE trains for a few
+hundred steps with checkpointing and straggler monitoring.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    from repro.launch import train
+    sys.argv = ["train", "--arch", "granite-moe-1b-a400m",
+                "--steps", str(args.steps), "--reduced",
+                "--ckpt", "/tmp/quickstart_ckpt", "--batch", "16",
+                "--seq", "128"]
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

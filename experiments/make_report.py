@@ -1,0 +1,69 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+experiments/dryrun/*.json.  Run after a sweep:
+
+    PYTHONPATH=src python experiments/make_report.py > experiments/tables.md
+"""
+import glob
+import json
+
+
+def load():
+    recs = {}
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def main() -> None:
+    recs = load()
+    print("## Dry-run matrix (compile status, per-device memory)\n")
+    print("| arch | shape | mesh | ok | lower s | compile s | "
+          "fit GB (args+temp) | notes |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(recs.items()):
+        if r["ok"]:
+            mem = r["memory"]
+            fit = (mem["argument_size_in_bytes"]
+                   + mem["temp_size_in_bytes"]) / 1e9
+            print(f"| {a} | {s} | {m} | OK | {r['lower_s']:.1f} | "
+                  f"{r['compile_s']:.1f} | {fit:.2f} | "
+                  f"{r.get('notes', '')} |")
+        else:
+            print(f"| {a} | {s} | {m} | **FAIL** | | | | "
+                  f"{r.get('error', '')[:60]} |")
+    print()
+    print("## Roofline (single-pod, 256 chips; terms in seconds/step)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "model/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    rows = []
+    for (a, s, m), r in sorted(recs.items()):
+        if m != "single" or not r["ok"]:
+            continue
+        ro = r["roofline"]
+        rows.append((ro["roofline_fraction"], a, s, ro))
+    for frac, a, s, ro in sorted(rows, reverse=True):
+        print(f"| {a} | {s} | {ro['compute_s']:.4f} | "
+              f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+              f"{ro['dominant'].replace('_s', '')} | "
+              f"{ro['model_vs_hlo_flops']:.3f} | {frac:.4f} |")
+    print()
+    print("## Multi-pod deltas (512 chips vs 256; collective term)\n")
+    print("| arch | shape | coll_s single | coll_s multipod | "
+          "pod-axis overhead |")
+    print("|---|---|---|---|---|")
+    for (a, s, m), r in sorted(recs.items()):
+        if m != "single" or not r["ok"]:
+            continue
+        r2 = recs.get((a, s, "multipod"))
+        if not r2 or not r2["ok"]:
+            continue
+        c1 = r["roofline"]["collective_s"]
+        c2 = r2["roofline"]["collective_s"]
+        ovh = (c2 - c1) / c1 if c1 > 0 else float("nan")
+        print(f"| {a} | {s} | {c1:.4f} | {c2:.4f} | {ovh:+.1%} |")
+
+
+if __name__ == "__main__":
+    main()

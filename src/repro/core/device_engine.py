@@ -1,0 +1,250 @@
+"""Device (TPU) DISLAND engine: fixed-shape batched query answering.
+
+Hardware adaptation of the paper's per-query Dijkstra (DESIGN.md §2):
+every query path becomes gathers + (min,+) algebra over padded tensors.
+
+Offline (build_device_index, device-resident products):
+  * per-fragment dense APSP        [k, maxf, maxf]   (Pallas blocked FW)
+  * SUPER boundary x boundary APSP [S+1, S+1]        (batched BF / FW)
+  * per-piece APSP, size-bucketed  [P_b, mp_b, mp_b] (Pallas batched FW)
+  * per-node lookup vectors        agent/fragment/piece ids + positions
+
+Online (serve_step — one jitted program per query batch):
+  dist(s,t) = same-DRA answer                                (case 1)
+            | d(s,u_s) + min(local, min-plus combine) + d(u_t,t)  (case 2)
+  combine = min_{b1,b2} row_s[b1] + D_super[b1,b2] + row_t[b2].
+
+Everything is exact (validated against the host engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import sssp
+from .supergraph import DislandIndex
+
+INF = np.float32(np.inf)
+PIECE_BUCKETS = (8, 32, 128, 512, 2048)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceIndex:
+    # per-node lookups [n]
+    agent_of: jax.Array          # int32
+    dist_to_agent: jax.Array     # f32
+    frag_of: jax.Array           # int32 (fragment of each *shrink* node)
+    pos_in_frag: jax.Array       # int32
+    piece_bucket: jax.Array      # int32 (-1 for non-represented)
+    piece_idx: jax.Array         # int32 index within bucket
+    pos_in_piece: jax.Array      # int32
+    # fragments
+    frag_apsp: jax.Array         # f32 [k, maxf, maxf]
+    bpos: jax.Array              # int32 [k, mb] boundary position in frag
+    bvalid: jax.Array            # bool [k, mb]
+    bnd_super: jax.Array         # int32 [k, mb] super id (S = sentinel)
+    # super graph
+    d_super: jax.Array           # f32 [S+1, S+1] (+inf sentinel row/col)
+    # pieces (one APSP tensor per size bucket)
+    piece_apsp: List[jax.Array]  # f32 [P_b, mp_b, mp_b]
+
+    def tree_flatten(self):
+        fields = dataclasses.fields(self)
+        children = tuple(getattr(self, f.name) for f in fields)
+        return children, tuple(f.name for f in fields)
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(**dict(zip(names, children)))
+
+
+# ---------------------------------------------------------------------------
+def _pad_to(x: int, mult: int = 8) -> int:
+    return max(mult, -(-x // mult) * mult)
+
+
+def build_device_index(ix: DislandIndex, *, force=None) -> DeviceIndex:
+    """Assemble padded tensors on host, run device APSP preprocessing."""
+    g = ix.g
+    n = g.n
+    k = len(ix.fragments)
+
+    agent_of = ix.dras.agent_of.astype(np.int32)
+    dist_to_agent = ix.dras.dist_to_agent.astype(np.float32)
+
+    # ---- fragments ------------------------------------------------------
+    maxf = _pad_to(max((f.graph.n for f in ix.fragments), default=1))
+    mb = _pad_to(max((f.boundary_local.size for f in ix.fragments),
+                     default=1))
+    frag_adj = np.full((k, maxf, maxf), INF, dtype=np.float32)
+    frag_of = -np.ones(n, dtype=np.int32)
+    pos_in_frag = np.zeros(n, dtype=np.int32)
+    bpos = np.zeros((k, mb), dtype=np.int32)
+    bvalid = np.zeros((k, mb), dtype=bool)
+    S = ix.super_graph.node_ids.size
+    bnd_super = np.full((k, mb), S, dtype=np.int32)
+    super_id_of = -np.ones(n, dtype=np.int64)
+    super_id_of[ix.super_graph.node_ids] = np.arange(S)
+    for fi, f in enumerate(ix.fragments):
+        fg = f.graph
+        frag_of[f.nodes] = fi
+        pos_in_frag[f.nodes] = np.arange(f.nodes.size)
+        frag_adj[fi, fg.edge_u, fg.edge_v] = fg.edge_w.astype(np.float32)
+        frag_adj[fi, fg.edge_v, fg.edge_u] = fg.edge_w.astype(np.float32)
+        nb = f.boundary_local.size
+        bpos[fi, :nb] = f.boundary_local
+        bvalid[fi, :nb] = True
+        bnd_super[fi, :nb] = super_id_of[f.nodes[f.boundary_local]]
+    frag_apsp = ops.fw_batch(jnp.asarray(frag_adj), force=force)
+
+    # ---- SUPER graph APSP (batched BF over the sparse edge list) --------
+    sg = ix.super_graph.graph
+    if S > 0 and sg.m > 0:
+        src = np.concatenate([sg.edge_u, sg.edge_v]).astype(np.int32)
+        dst = np.concatenate([sg.edge_v, sg.edge_u]).astype(np.int32)
+        w = np.concatenate([sg.edge_w, sg.edge_w]).astype(np.float32)
+        d_s = sssp.apsp_from_sources(jnp.asarray(src), jnp.asarray(dst),
+                                     jnp.asarray(w),
+                                     jnp.arange(S, dtype=jnp.int32), n=S)
+        d_super = jnp.full((S + 1, S + 1), INF, jnp.float32)
+        d_super = d_super.at[:S, :S].set(d_s)
+    else:
+        d_super = jnp.full((S + 1, S + 1), INF, jnp.float32)
+
+    # ---- pieces, bucketed by padded size ---------------------------------
+    piece_bucket = -np.ones(n, dtype=np.int32)
+    piece_idx = np.zeros(n, dtype=np.int32)
+    pos_in_piece = np.zeros(n, dtype=np.int32)
+    bucket_adjs: List[List[np.ndarray]] = [[] for _ in PIECE_BUCKETS]
+    for a in ix.dras.agents:
+        for piece in a.pieces:
+            sz = piece.size
+            b = next(i for i, cap in enumerate(PIECE_BUCKETS) if sz <= cap)
+            cap = PIECE_BUCKETS[b]
+            sub, ids = g.subgraph(piece)
+            adj = np.full((cap, cap), INF, dtype=np.float32)
+            adj[sub.edge_u, sub.edge_v] = sub.edge_w.astype(np.float32)
+            adj[sub.edge_v, sub.edge_u] = sub.edge_w.astype(np.float32)
+            pi = len(bucket_adjs[b])
+            bucket_adjs[b].append(adj)
+            # the agent belongs to many pieces: leave its lookup at -1 so
+            # case-1 logic falls through to the exact ds+dt formula
+            inner = ids != a.agent
+            piece_bucket[ids[inner]] = b
+            piece_idx[ids[inner]] = pi
+            pos_in_piece[ids[inner]] = np.nonzero(inner)[0]
+    piece_apsp: List[jax.Array] = []
+    for b, adjs in enumerate(bucket_adjs):
+        if adjs:
+            piece_apsp.append(ops.fw_batch(jnp.asarray(np.stack(adjs)),
+                                           force=force))
+        else:
+            # empty bucket: minimal inf dummy (never hit at query time)
+            piece_apsp.append(jnp.full((1, 1, 1), INF, jnp.float32))
+
+    return DeviceIndex(
+        agent_of=jnp.asarray(agent_of),
+        dist_to_agent=jnp.asarray(dist_to_agent),
+        frag_of=jnp.asarray(frag_of),
+        pos_in_frag=jnp.asarray(pos_in_frag),
+        piece_bucket=jnp.asarray(piece_bucket),
+        piece_idx=jnp.asarray(piece_idx),
+        pos_in_piece=jnp.asarray(pos_in_piece),
+        frag_apsp=frag_apsp,
+        bpos=jnp.asarray(bpos),
+        bvalid=jnp.asarray(bvalid),
+        bnd_super=jnp.asarray(bnd_super),
+        d_super=d_super,
+        piece_apsp=piece_apsp,
+    )
+
+
+# ---------------------------------------------------------------------------
+def _same_dra_dist(dix: DeviceIndex, s, t, ds, dt):
+    """Case 1: same agent.  Same piece -> piece APSP; else via agent."""
+    pb_s, pb_t = dix.piece_bucket[s], dix.piece_bucket[t]
+    same_piece = ((pb_s == pb_t) & (pb_s >= 0)
+                  & (dix.piece_idx[s] == dix.piece_idx[t]))
+    d_via_agent = ds + dt
+    out = d_via_agent
+    for b, apsp in enumerate(dix.piece_apsp):
+        hit = same_piece & (pb_s == b)
+        d_b = apsp[dix.piece_idx[s], dix.pos_in_piece[s],
+                   dix.pos_in_piece[t]]
+        out = jnp.where(hit, jnp.minimum(d_b, d_via_agent), out)
+    return out
+
+
+def serve_step(dix: DeviceIndex, s: jax.Array, t: jax.Array) -> jax.Array:
+    """Batched exact distance queries: s, t int32 [q] -> f32 [q]."""
+    us, ut = dix.agent_of[s], dix.agent_of[t]
+    ds, dt = dix.dist_to_agent[s], dix.dist_to_agent[t]
+    # ---- case 2: cross-DRA --------------------------------------------
+    fs, ft = dix.frag_of[us], dix.frag_of[ut]
+    ps, pt = dix.pos_in_frag[us], dix.pos_in_frag[ut]
+    row_s_full = dix.frag_apsp[fs, ps]          # [q, maxf]
+    row_t_full = dix.frag_apsp[ft, pt]
+    row_s = jnp.take_along_axis(row_s_full, dix.bpos[fs], axis=1)
+    row_t = jnp.take_along_axis(row_t_full, dix.bpos[ft], axis=1)
+    row_s = jnp.where(dix.bvalid[fs], row_s, INF)   # [q, mb]
+    row_t = jnp.where(dix.bvalid[ft], row_t, INF)
+    bs = dix.bnd_super[fs]                      # [q, mb]
+    bt = dix.bnd_super[ft]
+    blk = dix.d_super[bs[:, :, None], bt[:, None, :]]   # [q, mb, mb]
+    tmp = jnp.min(row_s[:, :, None] + blk, axis=1)      # [q, mb]
+    mid = jnp.min(tmp + row_t, axis=1)                  # [q]
+    local = jnp.where(fs == ft,
+                      dix.frag_apsp[fs, ps, pt], INF)
+    d_cross = ds + jnp.minimum(mid, local) + dt
+    valid_frag = (fs >= 0) & (ft >= 0)
+    d_cross = jnp.where(valid_frag, d_cross, INF)
+    # ---- case 1: same DRA ----------------------------------------------
+    d_same = _same_dra_dist(dix, s, t, ds, dt)
+    out = jnp.where(us == ut, d_same, d_cross)
+    return jnp.where(s == t, 0.0, out)
+
+
+def serve_one_to_all(dix: DeviceIndex, s: int | jax.Array) -> jax.Array:
+    """Exact distances from one source to EVERY node: [n].
+
+    The bulk/retrieval pattern: one vector-matrix (min,+) product against
+    the SUPER matrix (Pallas kernel on TPU) then a per-node gather
+    combine.  Used by the retrieval-style benchmarks.
+    """
+    s = jnp.asarray(s, jnp.int32).reshape(())
+    n = dix.agent_of.shape[0]
+    us = dix.agent_of[s]
+    ds = dix.dist_to_agent[s]
+    fs = dix.frag_of[us]
+    ps = dix.pos_in_frag[us]
+    row_s = jnp.take(dix.frag_apsp[fs, ps], dix.bpos[fs])
+    row_s = jnp.where(dix.bvalid[fs], row_s, INF)       # [mb]
+    bs = dix.bnd_super[fs]                               # [mb]
+    d_sub = dix.d_super[bs, :]                           # [mb, S+1]
+    # u_s -> every super node (vector (x) matrix min-plus)
+    x = ops.minplus(row_s[None, :], d_sub)[0]            # [S+1]
+    x = jnp.append(x, INF)                               # sentinel slot
+    # per-target combine
+    tt = jnp.arange(n, dtype=jnp.int32)
+    ut = dix.agent_of[tt]
+    dt = dix.dist_to_agent[tt]
+    ft = dix.frag_of[ut]
+    ptv = dix.pos_in_frag[ut]
+    row_t = jnp.take_along_axis(dix.frag_apsp[ft, ptv], dix.bpos[ft],
+                                axis=1)
+    row_t = jnp.where(dix.bvalid[ft], row_t, INF)        # [n, mb]
+    bt = jnp.where(dix.bvalid[ft], dix.bnd_super[ft], x.shape[0] - 1)
+    mid = jnp.min(x[bt] + row_t, axis=1)                 # [n]
+    local = jnp.where(ft == fs, dix.frag_apsp[ft, ps, ptv], INF)
+    d_cross = ds + jnp.minimum(mid, local) + dt
+    d_cross = jnp.where((fs >= 0) & (ft >= 0), d_cross, INF)
+    d_same = _same_dra_dist(dix, jnp.broadcast_to(s, tt.shape), tt,
+                            jnp.broadcast_to(ds, dt.shape), dt)
+    out = jnp.where(us == ut, d_same, d_cross)
+    return jnp.where(tt == s, 0.0, out)

@@ -1,0 +1,99 @@
+"""Dijkstra variants: baseline query algorithms (paper §VI-C, [20]).
+
+Host-side reference implementations used (a) as the paper's baselines
+for Exp-4/Exp-5 and (b) as correctness oracles for the JAX device engine.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from .graph import Graph
+
+
+def sssp(g: Graph, s: int, targets: Optional[np.ndarray] = None
+         ) -> np.ndarray:
+    """Single-source shortest distances; early exit once targets settle."""
+    dist = np.full(g.n, np.inf)
+    dist[s] = 0.0
+    remaining = None if targets is None else set(int(t) for t in targets)
+    pq = [(0.0, int(s))]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > dist[u]:
+            continue
+        if remaining is not None:
+            remaining.discard(u)
+            if not remaining:
+                break
+        a, b = g.indptr[u], g.indptr[u + 1]
+        for v, w in zip(g.indices[a:b], g.weights[a:b]):
+            nd = d + float(w)
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, int(v)))
+    return dist
+
+
+def pair(g: Graph, s: int, t: int) -> float:
+    """s->t distance with target early exit (unidirectional Dijkstra)."""
+    if s == t:
+        return 0.0
+    dist = np.full(g.n, np.inf)
+    dist[s] = 0.0
+    pq = [(0.0, int(s))]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if u == t:
+            return d
+        if d > dist[u]:
+            continue
+        a, b = g.indptr[u], g.indptr[u + 1]
+        for v, w in zip(g.indices[a:b], g.weights[a:b]):
+            nd = d + float(w)
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, int(v)))
+    return np.inf
+
+
+def bidirectional(g: Graph, s: int, t: int) -> float:
+    """Bidirectional Dijkstra [20]: meet-in-the-middle with the standard
+    top(fwd)+top(bwd) >= mu stopping criterion."""
+    if s == t:
+        return 0.0
+    INF = np.inf
+    dist_f = {int(s): 0.0}
+    dist_b = {int(t): 0.0}
+    done_f: set = set()
+    done_b: set = set()
+    pq_f = [(0.0, int(s))]
+    pq_b = [(0.0, int(t))]
+    mu = INF
+
+    def expand(pq, dist, done, other_dist):
+        nonlocal mu
+        d, u = heapq.heappop(pq)
+        if u in done:
+            return
+        done.add(u)
+        a, b = g.indptr[u], g.indptr[u + 1]
+        for v, w in zip(g.indices[a:b], g.weights[a:b]):
+            v = int(v)
+            nd = d + float(w)
+            if nd < dist.get(v, INF):
+                dist[v] = nd
+                heapq.heappush(pq, (nd, v))
+            if v in other_dist:
+                mu = min(mu, nd + other_dist[v])
+
+    while pq_f and pq_b:
+        if pq_f[0][0] + pq_b[0][0] >= mu:
+            break
+        if pq_f[0][0] <= pq_b[0][0]:
+            expand(pq_f, dist_f, done_f, dist_b)
+        else:
+            expand(pq_b, dist_b, done_b, dist_f)
+    return mu

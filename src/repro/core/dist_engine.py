@@ -1,0 +1,82 @@
+"""Distributed DISLAND serving + offline build (shard_map).
+
+Serving layout (production posture, DESIGN.md §5): the index tensors are
+*replicated* — on 16 GB chips the index is ~1/2 the input graph, so every
+device holds it and the query batch is sharded across the whole mesh
+(pure DP; zero query-time collectives; linear scaling with chips).
+
+Offline build is the heavy part (batched FW over fragments, batched BF
+over SUPER sources): both are sharded over their batch dimension with a
+shard_map, which is where the multi-pod mesh earns its keep.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ops
+from . import sssp
+from .device_engine import DeviceIndex, serve_step
+
+
+def serve_sharded(mesh: Mesh, dix: DeviceIndex, s: jax.Array,
+                  t: jax.Array, *,
+                  batch_axes: Sequence[str] | None = None) -> jax.Array:
+    """Batched queries sharded over ``batch_axes`` (default: all axes)."""
+    axes = tuple(batch_axes) if batch_axes else tuple(mesh.axis_names)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(), P(axes), P(axes)), out_specs=P(axes))
+    def _local(dix_, s_, t_):
+        return serve_step(dix_, s_, t_)
+
+    return _local(dix, s, t)
+
+
+def serve_jit(mesh: Mesh, dix_like, *,
+              batch_axes: Sequence[str] | None = None):
+    """jit'd sharded serve step with explicit in/out shardings, suitable
+    for AOT lowering (dry-run).  ``dix_like`` is any DeviceIndex pytree
+    (arrays or ShapeDtypeStructs) used to build the replicated specs."""
+    axes = tuple(batch_axes) if batch_axes else tuple(mesh.axis_names)
+    rep = NamedSharding(mesh, P())
+    shard = NamedSharding(mesh, P(axes))
+    dix_shardings = jax.tree_util.tree_map(lambda _: rep, dix_like)
+
+    def step(dix: DeviceIndex, s: jax.Array, t: jax.Array) -> jax.Array:
+        return serve_step(dix, s, t)
+
+    return jax.jit(step, in_shardings=(dix_shardings, shard, shard),
+                   out_shardings=shard)
+
+
+def fw_fragments_sharded(mesh: Mesh, frag_adj: jax.Array,
+                         axis: str = "data") -> jax.Array:
+    """Offline per-fragment APSP with the fragment batch sharded."""
+
+    @functools.partial(jax.shard_map, mesh=mesh,
+                       in_specs=P(axis), out_specs=P(axis))
+    def _local(adj):
+        return ops.fw_batch(adj)
+
+    return _local(frag_adj)
+
+
+def super_apsp_sharded(mesh: Mesh, src: jax.Array, dst: jax.Array,
+                       w: jax.Array, n_super: int,
+                       axis: str = "data") -> jax.Array:
+    """Offline SUPER APSP: BF sources sharded, edge list replicated."""
+    srcs = jnp.arange(n_super, dtype=jnp.int32)
+
+    @functools.partial(jax.shard_map, mesh=mesh,
+                       in_specs=(P(), P(), P(), P(axis)),
+                       out_specs=P(axis))
+    def _local(src_, dst_, w_, sources_):
+        return sssp.apsp_from_sources(src_, dst_, w_, sources_, n=n_super)
+
+    return _local(src, dst, w, srcs)

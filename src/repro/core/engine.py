@@ -1,0 +1,107 @@
+"""DISLAND bi-level query answering (paper §VI-B) — host reference.
+
+Given the preprocessed DislandIndex:
+  case 1  s, t in the same DRA: answered from agent tables (constant
+          time across pieces, local Dijkstra within one piece);
+  case 2  different DRAs/trivial: dist(s,t) = dist(s,u_s)
+          + dist_shrink(u_s,u_t) + dist(u_t,t) where the middle term is a
+          Dijkstra on G[V_s] u G[V_t] u SUPER (observation of [4]).
+
+This is the paper-faithful engine; device_engine.py is the TPU-batched
+reformulation validated against it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from . import dijkstra
+from .graph import Graph
+from .supergraph import DislandIndex
+
+
+class DislandEngine:
+    def __init__(self, index: DislandIndex):
+        self.ix = index
+        self._union_cache: Dict[Tuple[int, int], tuple] = {}
+
+    # ---- case 1 helpers -------------------------------------------------
+    def _same_dra(self, s: int, t: int, u: int) -> float:
+        ix = self.ix
+        if s == u:
+            return float(ix.dras.dist_to_agent[t])
+        if t == u:
+            return float(ix.dras.dist_to_agent[s])
+        if ix.dras.piece_of[s] == ix.dras.piece_of[t]:
+            # same A_u^i: local Dijkstra on the piece
+            for a in ix.dras.agents:
+                if a.agent == u:
+                    piece = a.pieces[int(ix.dras.piece_of[s])]
+                    sub, ids = ix.g.subgraph(piece)
+                    remap = {int(x): k for k, x in enumerate(ids)}
+                    return float(dijkstra.pair(sub, remap[s], remap[t]))
+            raise AssertionError("agent table inconsistent")
+        return float(ix.dras.dist_to_agent[s] + ix.dras.dist_to_agent[t])
+
+    # ---- case 2: union graph --------------------------------------------
+    def _union_graph(self, fs: int, ft: int):
+        key = (min(fs, ft), max(fs, ft))
+        hit = self._union_cache.get(key)
+        if hit is not None:
+            return hit
+        ix = self.ix
+        eu, ev, ew = [], [], []
+
+        def add_fragment(fi: int):
+            f = ix.fragments[fi]
+            fmap = f.nodes
+            for u, v, w in zip(f.graph.edge_u, f.graph.edge_v,
+                               f.graph.edge_w):
+                eu.append(int(fmap[u]))
+                ev.append(int(fmap[v]))
+                ew.append(float(w))
+
+        add_fragment(fs)
+        if ft != fs:
+            add_fragment(ft)
+        sgraph = ix.super_graph
+        for u, v, w in zip(sgraph.graph.edge_u, sgraph.graph.edge_v,
+                           sgraph.graph.edge_w):
+            eu.append(int(sgraph.node_ids[u]))
+            ev.append(int(sgraph.node_ids[v]))
+            ew.append(float(w))
+        nodes = sorted(set(eu) | set(ev))
+        remap = {x: i for i, x in enumerate(nodes)}
+        g = Graph.from_edges(len(nodes),
+                             [remap[x] for x in eu],
+                             [remap[x] for x in ev], ew)
+        out = (g, remap)
+        if len(self._union_cache) < 256:
+            self._union_cache[key] = out
+        return out
+
+    # ---- public API -------------------------------------------------------
+    def query(self, s: int, t: int) -> float:
+        if s == t:
+            return 0.0
+        ix = self.ix
+        us = int(ix.dras.agent_of[s])
+        ut = int(ix.dras.agent_of[t])
+        if us == ut:
+            return self._same_dra(s, t, us)
+        d_s = float(ix.dras.dist_to_agent[s])
+        d_t = float(ix.dras.dist_to_agent[t])
+        fs = int(ix.frag_of[us])
+        ft = int(ix.frag_of[ut])
+        if fs < 0 or ft < 0:
+            # agent node in no fragment: isolated shrink component
+            return float("inf") if fs != ft else d_s + d_t
+        g, remap = self._union_graph(fs, ft)
+        if us not in remap or ut not in remap:
+            return float("inf")
+        mid = dijkstra.pair(g, remap[us], remap[ut])
+        return d_s + mid + d_t
+
+    def query_many(self, pairs) -> np.ndarray:
+        return np.array([self.query(int(s), int(t)) for s, t in pairs])

@@ -1,0 +1,274 @@
+"""Distance landmarks revisited (paper §III) + hybrid covers (§III-B, §V).
+
+Three pieces:
+  1. REF graphs: drop redundant edges (removal does not change the
+     endpoint distance).
+  2. Theorem 2: on an REF graph a landmark cover IS a vertex cover, so
+     the classical maximal-matching 2-approximation applies (Fig. 1).
+     Used for the Table I overhead estimation.
+  3. Hybrid landmark covers with the per-node cost model
+     space_L(x)=|N_x| <= space_N(x)=|P_x| (paper Example 1), built for
+     the *boundary nodes of a fragment* (§V-A) — the production path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .graph import Graph
+
+
+# --------------------------------------------------------------------------
+# REF graphs + 2-approx landmark covers (paper §III-A)
+# --------------------------------------------------------------------------
+def _alt_dist_bounded(g: Graph, u: int, v: int, skip_w: float,
+                      skip_v: int) -> float:
+    """Shortest u->v distance ignoring one (u,v) edge, early-exit when the
+    frontier exceeds ``skip_w`` (the paper's redundancy test)."""
+    dist = {u: 0.0}
+    pq = [(0.0, u)]
+    while pq:
+        d, x = heapq.heappop(pq)
+        if d > dist.get(x, np.inf):
+            continue
+        if d > skip_w:
+            return np.inf  # every remaining node is farther than w(u,v)
+        if x == v:
+            return d
+        s, e = g.indptr[x], g.indptr[x + 1]
+        for y, w in zip(g.indices[s:e], g.weights[s:e]):
+            y = int(y)
+            if x == u and y == skip_v:
+                continue  # skip the candidate edge itself
+            nd = d + float(w)
+            if nd <= skip_w and nd < dist.get(y, np.inf):
+                dist[y] = nd
+                heapq.heappush(pq, (nd, y))
+    return np.inf
+
+
+def redundant_edge_mask(g: Graph) -> np.ndarray:
+    """bool[m]: True where edge (u,v) is redundant (alt path <= w)."""
+    out = np.zeros(g.m, dtype=bool)
+    for i in range(g.m):
+        u, v, w = int(g.edge_u[i]), int(g.edge_v[i]), float(g.edge_w[i])
+        out[i] = _alt_dist_bounded(g, u, v, w, v) <= w
+    return out
+
+
+def ref_graph(g: Graph) -> Graph:
+    """One REF graph of G: drop redundant edges greedily.
+
+    Removing one redundant edge can make another edge non-redundant
+    (two routes that certify each other), so we re-test each edge against
+    the *current* graph, sweeping heaviest-first so long shortcuts go
+    before they can shield each other.  Mutable dict-of-dict adjacency
+    keeps each test a bounded Dijkstra on the live graph.
+    """
+    adj: List[Dict[int, float]] = [dict() for _ in range(g.n)]
+    for u, v, w in zip(g.edge_u, g.edge_v, g.edge_w):
+        adj[int(u)][int(v)] = float(w)
+        adj[int(v)][int(u)] = float(w)
+
+    def alt_dist(u: int, v: int, bound: float) -> float:
+        dist = {u: 0.0}
+        pq = [(0.0, u)]
+        while pq:
+            d, x = heapq.heappop(pq)
+            if d > dist.get(x, np.inf):
+                continue
+            if d > bound:
+                return np.inf
+            if x == v:
+                return d
+            for y, w in adj[x].items():
+                if x == u and y == v:
+                    continue
+                nd = d + w
+                if nd <= bound and nd < dist.get(y, np.inf):
+                    dist[y] = nd
+                    heapq.heappush(pq, (nd, y))
+        return np.inf
+
+    order = np.argsort(-g.edge_w)
+    alive = np.ones(g.m, dtype=bool)
+    for i in order:
+        u, v, w = int(g.edge_u[i]), int(g.edge_v[i]), float(g.edge_w[i])
+        if alt_dist(u, v, w) <= w:
+            alive[i] = False
+            del adj[u][v], adj[v][u]
+    return Graph.from_edges(g.n, g.edge_u[alive], g.edge_v[alive],
+                            g.edge_w[alive])
+
+
+def vertex_cover_2approx(g: Graph, rng_seed: int = 0) -> np.ndarray:
+    """Maximal-matching 2-approx vertex cover [31]; returns node ids."""
+    rng = np.random.default_rng(rng_seed)
+    order = rng.permutation(g.m)
+    used = np.zeros(g.n, dtype=bool)
+    for i in order:
+        u, v = int(g.edge_u[i]), int(g.edge_v[i])
+        if not used[u] and not used[v]:
+            used[u] = True
+            used[v] = True
+    return np.nonzero(used)[0].astype(np.int32)
+
+
+def landmark_cover_2approx(g: Graph) -> Tuple[np.ndarray, Graph]:
+    """Fig. 1: REF reduction + vertex cover => landmark cover of G.
+
+    Returns (landmarks, ref_graph). |D|/2 and |D| bound the optimum.
+    """
+    ref = ref_graph(g)
+    return vertex_cover_2approx(ref), ref
+
+
+def landmark_cover_cost(g: Graph, cover: np.ndarray) -> dict:
+    """Paper Table I accounting: 4-byte entries, |D|*(|V|-1) distances."""
+    d = int(cover.size)
+    return {
+        "n_landmarks": d,
+        "frac_nodes": d / max(g.n, 1),
+        "cover_bytes": 4 * d * (g.n - 1),
+        "graph_bytes": g.size_bytes(),
+        "ratio": (4 * d * (g.n - 1)) / max(g.size_bytes(), 1),
+        "lower_bound": d // 2,
+    }
+
+
+# --------------------------------------------------------------------------
+# Hybrid landmark covers for fragment boundary nodes (paper §III-B + §V-A)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class HybridCover:
+    """Hybrid landmark cover D~ = (D, E_D^-) of a fragment's boundary set.
+
+    ``landmark_edges``: (u, x, dist) rows, u in N_x — the |N_x| cost.
+    ``direct_edges``:   (b1, b2, dist) rows for uncovered pairs E_D^-.
+    All node ids are *fragment-local*; ``dist`` is the fragment-local
+    shortest distance (the Upsilon weight of §V-A).
+    """
+    landmarks: np.ndarray          # local node ids
+    landmark_edges: np.ndarray     # [e,3] float64 (u, x, dist)
+    direct_edges: np.ndarray       # [e,3] float64 (b1, b2, dist)
+
+    @property
+    def n_enforced_edges(self) -> int:
+        return len(self.landmark_edges) + len(self.direct_edges)
+
+
+def _dijkstra_with_parent(g: Graph, s: int):
+    dist = np.full(g.n, np.inf)
+    parent = -np.ones(g.n, dtype=np.int64)
+    dist[s] = 0.0
+    pq = [(0.0, s)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > dist[u]:
+            continue
+        a, b = g.indptr[u], g.indptr[u + 1]
+        for v, w in zip(g.indices[a:b], g.weights[a:b]):
+            v = int(v)
+            nd = d + float(w)
+            if nd < dist[v]:
+                dist[v] = nd
+                parent[v] = u
+                heapq.heappush(pq, (nd, v))
+    return dist, parent
+
+
+def hybrid_cover(frag: Graph, boundary: np.ndarray,
+                 use_cost_model: bool = True) -> HybridCover:
+    """Build a hybrid landmark cover for ``boundary`` nodes of a fragment.
+
+    One Dijkstra per boundary node gives (a) the local boundary-to-
+    boundary distances and (b) one canonical shortest path per pair, whose
+    *internal* nodes are the landmark candidates (Example 1 semantics).
+
+    Greedy selection under the cost model: repeatedly pick the node x
+    maximising |P_x| among those with |N_x| <= |P_x| over the still-
+    uncovered pairs (disjointness condition (b) of §III-B is maintained
+    because covered pairs are removed).  ``use_cost_model=False``
+    reproduces the paper's Table V ablation: any node on >= 1 path is
+    eligible (classical landmark-cover greedy).
+    """
+    boundary = np.asarray(sorted(set(int(b) for b in boundary)),
+                          dtype=np.int32)
+    nb = boundary.size
+    if nb <= 1:
+        return HybridCover(landmarks=np.empty(0, np.int32),
+                           landmark_edges=np.empty((0, 3)),
+                           direct_edges=np.empty((0, 3)))
+    bset = {int(b): i for i, b in enumerate(boundary)}
+    dist_bb = np.full((nb, nb), np.inf)
+    # pair -> internal nodes of one canonical shortest path
+    pair_internal: Dict[Tuple[int, int], List[int]] = {}
+    # node -> set of pair keys through it
+    through: Dict[int, set] = {}
+    for i, b in enumerate(boundary):
+        dist, parent = _dijkstra_with_parent(frag, int(b))
+        dist_bb[i] = dist[boundary]
+        for j in range(i + 1, nb):
+            t = int(boundary[j])
+            if not np.isfinite(dist[t]):
+                continue
+            # walk the parent chain t -> b, collect internal nodes
+            internal = []
+            x = parent[t]
+            while x != -1 and x != b:
+                internal.append(int(x))
+                x = parent[x]
+            key = (i, j)
+            pair_internal[key] = internal
+            for x in internal:
+                through.setdefault(x, set()).add(key)
+
+    covered: set = set()
+    landmarks: List[int] = []
+    lm_edges: List[Tuple[int, int, float]] = []
+    # greedy: max |P_x| with cost-model gate
+    alive = dict(through)
+    while alive:
+        best_x, best_pairs = None, None
+        for x, pairs in alive.items():
+            live = pairs - covered
+            if not live:
+                continue
+            if best_pairs is None or len(live) > len(best_pairs):
+                best_x, best_pairs = x, live
+        if best_x is None:
+            break
+        nx = set()
+        for (i, j) in best_pairs:
+            nx.add(i)
+            nx.add(j)
+        if use_cost_model and len(nx) > len(best_pairs):
+            # space_L > space_N: cheaper to materialise pairs directly;
+            # drop x from candidacy (its surviving pairs go to E_D^-)
+            del alive[best_x]
+            continue
+        landmarks.append(best_x)
+        # enforced edges (u, x) for u in N_x with local shortest distance
+        dist_x, _ = _dijkstra_with_parent(frag, best_x)
+        for bi in nx:
+            lm_edges.append((int(boundary[bi]), best_x,
+                             float(dist_x[boundary[bi]])))
+        covered |= best_pairs
+        del alive[best_x]
+
+    direct = []
+    for i in range(nb):
+        for j in range(i + 1, nb):
+            if not np.isfinite(dist_bb[i, j]):
+                continue
+            if (i, j) in covered:
+                continue
+            direct.append((int(boundary[i]), int(boundary[j]),
+                           float(dist_bb[i, j])))
+    return HybridCover(
+        landmarks=np.array(landmarks, dtype=np.int32),
+        landmark_edges=np.array(lm_edges, dtype=np.float64).reshape(-1, 3),
+        direct_edges=np.array(direct, dtype=np.float64).reshape(-1, 3))

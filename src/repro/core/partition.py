@@ -1,0 +1,204 @@
+"""Bounded graph partitioning (paper §V-B).
+
+BGP: partition V into fragments with |V_i| <= Gamma minimising the number
+of boundary nodes.  NP-complete (Prop 13); the paper attacks it through
+the classical edge-cut objective (|B| <= 2|E_B|, §V key observation)
+with METIS.  METIS is not available offline, so this module implements
+the same multilevel scheme in-repo (DESIGN.md §7.2):
+
+  1. coarsening by heavy-edge matching (contract heaviest incident edge;
+     node weights accumulate so balance is tracked in original-node
+     units),
+  2. initial partition by greedy BFS region growing on the coarsest
+     graph, bounded by Gamma,
+  3. uncoarsening with boundary Kernighan-Lin/FM refinement: move
+     boundary nodes to the neighbouring fragment with the best edge-cut
+     gain subject to the size bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .graph import Graph
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    labels: np.ndarray           # int[n] fragment id
+    n_fragments: int
+
+    def boundary_mask(self, g: Graph) -> np.ndarray:
+        lab = self.labels
+        cross = lab[g.edge_u] != lab[g.edge_v]
+        mask = np.zeros(g.n, dtype=bool)
+        mask[g.edge_u[cross]] = True
+        mask[g.edge_v[cross]] = True
+        return mask
+
+    def edge_cut(self, g: Graph) -> int:
+        return int((self.labels[g.edge_u] != self.labels[g.edge_v]).sum())
+
+    def fragment_nodes(self, i: int) -> np.ndarray:
+        return np.nonzero(self.labels == i)[0].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+def _heavy_edge_matching(g: Graph, node_w: np.ndarray, max_node_w: int,
+                         rng: np.random.Generator):
+    """Match each node to its heaviest unmatched neighbour (METIS HEM)."""
+    match = -np.ones(g.n, dtype=np.int64)
+    visit = rng.permutation(g.n)
+    for u in visit:
+        if match[u] >= 0:
+            continue
+        s, e = g.indptr[u], g.indptr[u + 1]
+        best, best_w = -1, -1.0
+        for v, w in zip(g.indices[s:e], g.weights[s:e]):
+            v = int(v)
+            if match[v] >= 0 or v == u:
+                continue
+            if node_w[u] + node_w[v] > max_node_w:
+                continue
+            if w > best_w:
+                best, best_w = v, w
+        if best >= 0:
+            match[u] = best
+            match[best] = u
+        else:
+            match[u] = u
+    match[match < 0] = np.nonzero(match < 0)[0]
+    return match
+
+
+def _contract(g: Graph, node_w: np.ndarray, match: np.ndarray):
+    """Contract matched pairs; sum parallel edge weights (cut weight)."""
+    rep = np.minimum(np.arange(g.n), match)
+    new_id = -np.ones(g.n, dtype=np.int64)
+    uniq = np.unique(rep)
+    new_id[uniq] = np.arange(uniq.size)
+    cmap = new_id[rep]  # old node -> coarse node
+    cw = np.zeros(uniq.size, dtype=np.int64)
+    np.add.at(cw, cmap, node_w)
+    cu = cmap[g.edge_u]
+    cv = cmap[g.edge_v]
+    keep = cu != cv
+    cu, cv, w = cu[keep], cv[keep], g.edge_w[keep]
+    lo, hi = np.minimum(cu, cv), np.maximum(cu, cv)
+    # sum weights of parallel edges
+    key = lo.astype(np.int64) * uniq.size + hi
+    order = np.argsort(key, kind="stable")
+    key, lo, hi, w = key[order], lo[order], hi[order], w[order]
+    if key.size:
+        first = np.ones(key.size, dtype=bool)
+        first[1:] = key[1:] != key[:-1]
+        idx = np.cumsum(first) - 1
+        ws = np.zeros(first.sum())
+        np.add.at(ws, idx, w)
+        lo, hi = lo[first], hi[first]
+        w = ws
+    cg = Graph.from_edges(uniq.size, lo, hi, w) if lo.size else \
+        Graph.from_edges(uniq.size, [], [], [])
+    return cg, cw, cmap
+
+
+def _initial_partition(g: Graph, node_w: np.ndarray, gamma: int,
+                       rng: np.random.Generator) -> np.ndarray:
+    """Greedy BFS region growing bounded by gamma (original-node units)."""
+    labels = -np.ones(g.n, dtype=np.int64)
+    frag = 0
+    order = np.argsort(np.diff(g.indptr))  # grow from low-degree periphery
+    for seed in order:
+        if labels[seed] >= 0:
+            continue
+        size = 0
+        queue = [int(seed)]
+        qi = 0
+        while qi < len(queue):
+            u = queue[qi]
+            qi += 1
+            if labels[u] >= 0:
+                continue
+            if size + node_w[u] > gamma and size > 0:
+                continue
+            labels[u] = frag
+            size += int(node_w[u])
+            s, e = g.indptr[u], g.indptr[u + 1]
+            nbrs = [int(v) for v in g.indices[s:e] if labels[v] < 0]
+            queue.extend(nbrs)
+        frag += 1
+    return labels
+
+
+def _refine(g: Graph, node_w: np.ndarray, labels: np.ndarray, gamma: int,
+            passes: int = 4) -> np.ndarray:
+    """Boundary FM: greedy positive-gain moves under the size bound."""
+    labels = labels.copy()
+    nfrag = int(labels.max()) + 1 if labels.size else 0
+    sizes = np.zeros(nfrag, dtype=np.int64)
+    np.add.at(sizes, labels, node_w)
+    for _ in range(passes):
+        cross = labels[g.edge_u] != labels[g.edge_v]
+        bnodes = np.unique(np.concatenate([g.edge_u[cross],
+                                           g.edge_v[cross]]))
+        moved = 0
+        for u in bnodes:
+            u = int(u)
+            s, e = g.indptr[u], g.indptr[u + 1]
+            lu = labels[u]
+            # weight of edges toward each neighbouring fragment
+            gains: dict[int, float] = {}
+            for v, w in zip(g.indices[s:e], g.weights[s:e]):
+                gains[int(labels[v])] = gains.get(int(labels[v]), 0.0) + w
+            internal = gains.get(int(lu), 0.0)
+            best_l, best_gain = lu, 0.0
+            for l, wsum in gains.items():
+                if l == lu:
+                    continue
+                if sizes[l] + node_w[u] > gamma:
+                    continue
+                gain = wsum - internal
+                if gain > best_gain:
+                    best_l, best_gain = l, gain
+            if best_l != lu:
+                sizes[lu] -= node_w[u]
+                sizes[best_l] += node_w[u]
+                labels[u] = best_l
+                moved += 1
+        if moved == 0:
+            break
+    return labels
+
+
+def partition_bgp(g: Graph, gamma: int, seed: int = 0,
+                  coarsen_to: int = 512) -> PartitionResult:
+    """Multilevel BGP partitioner: fragments of <= gamma original nodes."""
+    if g.n == 0:
+        return PartitionResult(labels=np.empty(0, np.int64), n_fragments=0)
+    rng = np.random.default_rng(seed)
+    graphs: List[Graph] = [g]
+    weights: List[np.ndarray] = [np.ones(g.n, dtype=np.int64)]
+    maps: List[np.ndarray] = []
+    # 1. coarsen
+    while graphs[-1].n > coarsen_to:
+        cur, curw = graphs[-1], weights[-1]
+        match = _heavy_edge_matching(cur, curw, max(1, gamma // 2), rng)
+        cg, cw, cmap = _contract(cur, curw, match)
+        if cg.n >= cur.n:  # no progress (matching saturated)
+            break
+        graphs.append(cg)
+        weights.append(cw)
+        maps.append(cmap)
+    # 2. initial partition on the coarsest level
+    labels = _initial_partition(graphs[-1], weights[-1], gamma, rng)
+    labels = _refine(graphs[-1], weights[-1], labels, gamma)
+    # 3. uncoarsen + refine
+    for lvl in range(len(maps) - 1, -1, -1):
+        labels = labels[maps[lvl]]
+        labels = _refine(graphs[lvl], weights[lvl], labels, gamma)
+    # compact labels
+    uniq, inv = np.unique(labels, return_inverse=True)
+    return PartitionResult(labels=inv.astype(np.int64),
+                           n_fragments=int(uniq.size))

@@ -1,0 +1,72 @@
+"""Batched multi-source shortest paths on device (DESIGN.md §2).
+
+Dijkstra's heap has no TPU analogue, so the device engine relaxes edges
+in dense sweeps: batched Bellman-Ford over an edge list, one
+``segment_min`` per sweep, iterated under ``lax.while_loop`` until a
+fixpoint.  S sources relax simultaneously — the batch dimension is what
+makes this TPU-shaped (S*E element-wise work per sweep on the VPU).
+
+All functions take *directed* edge arrays; undirected graphs pass each
+edge twice.  +inf marks unreachable; padding edges can use src=dst=0,
+w=+inf (they never relax anything).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+@functools.partial(jax.jit, static_argnames=("n", "max_iters"))
+def bellman_ford(src: jax.Array, dst: jax.Array, w: jax.Array,
+                 init_dist: jax.Array, *, n: int,
+                 max_iters: int | None = None) -> jax.Array:
+    """Batched BF: init_dist [S, n] -> fixpoint distances [S, n].
+
+    One sweep: dist[s, v] <- min(dist[s, v],
+                                 min_{(u,v,w) in E} dist[s, u] + w).
+    The S x E candidate matrix is flattened so a single segment_min over
+    offset ids (v + s*n) covers the whole batch.
+    """
+    s_dim = init_dist.shape[0]
+    if max_iters is None:
+        max_iters = n  # worst-case path length
+    offsets = (jnp.arange(s_dim, dtype=jnp.int32) * n)[:, None]
+    flat_ids = (dst[None, :] + offsets).reshape(-1)
+
+    def sweep(dist):
+        cand = (dist[:, src] + w[None, :]).reshape(-1)
+        relaxed = jax.ops.segment_min(cand, flat_ids,
+                                      num_segments=s_dim * n)
+        return jnp.minimum(dist, relaxed.reshape(s_dim, n))
+
+    def cond(carry):
+        _, changed, it = carry
+        return changed & (it < max_iters)
+
+    def body(carry):
+        dist, _, it = carry
+        nd = sweep(dist)
+        return nd, jnp.any(nd < dist), it + 1
+
+    out, _, _ = jax.lax.while_loop(cond, body,
+                                   (init_dist, jnp.bool_(True),
+                                    jnp.int32(0)))
+    return out
+
+
+def sources_init(sources: jax.Array, n: int) -> jax.Array:
+    """[S, n] init matrix: 0 at each source, +inf elsewhere."""
+    s_dim = sources.shape[0]
+    init = jnp.full((s_dim, n), INF, dtype=jnp.float32)
+    return init.at[jnp.arange(s_dim), sources].set(0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def apsp_from_sources(src: jax.Array, dst: jax.Array, w: jax.Array,
+                      sources: jax.Array, *, n: int) -> jax.Array:
+    """Distances from each of ``sources`` to every node: [S, n]."""
+    return bellman_ford(src, dst, w, sources_init(sources, n), n=n)

@@ -1,0 +1,169 @@
+"""SUPER graphs (paper §V-A) and the full DISLAND preprocessing pipeline.
+
+Preprocessing (paper §VI-A, Fig. 7):
+  1. compDRAs -> maximal agents + DRAs (agents.py)
+  2. per-DRA agent->node distances (stored in DRAResult)
+  3. shrink graph G[A]
+  4. BGP partition of the shrink graph into fragments of ~ c*floor(sqrt n)
+  5. per-fragment hybrid landmark cover over the boundary nodes
+  6. SUPER graph assembly: boundary nodes + landmarks; cross-fragment
+     original edges + per-fragment enforced edges (weights = local
+     shortest distances Upsilon).
+
+Everything here is host-side numpy (one-shot, linear-ish); the *products*
+are padded tensors the device engine consumes (device_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from .agents import DRAResult, compute_dras
+from .graph import Graph
+from .landmarks import HybridCover, hybrid_cover
+from .partition import PartitionResult, partition_bgp
+
+
+@dataclasses.dataclass
+class Fragment:
+    nodes: np.ndarray        # original node ids in this fragment
+    graph: Graph             # induced subgraph (local ids)
+    boundary_local: np.ndarray
+    cover: HybridCover       # local ids
+
+
+@dataclasses.dataclass
+class SuperGraph:
+    graph: Graph             # SUPER graph over compact ids
+    node_ids: np.ndarray     # compact id -> original node id
+    id_of: dict              # original node id -> compact id
+
+
+@dataclasses.dataclass
+class DislandIndex:
+    """All auxiliary structures DISLAND query answering needs."""
+    g: Graph
+    dras: DRAResult
+    shrink: Graph
+    shrink_ids: np.ndarray       # shrink-local -> original id
+    shrink_id_of: np.ndarray     # original -> shrink-local (-1 if removed)
+    partition: PartitionResult   # over shrink-local ids
+    fragments: List[Fragment]    # nodes/graph in original/local id spaces
+    super_graph: SuperGraph
+    frag_of: np.ndarray          # original id -> fragment id (-1 if in DRA)
+    timings: dict
+
+    # -- extra-space accounting (paper §VI "Extra space analysis") -------
+    def extra_space_edges(self) -> dict:
+        agent_edges = sum(a.nodes.size for a in self.dras.agents)
+        enforced = sum(f.cover.n_enforced_edges for f in self.fragments)
+        cross = int(self.super_graph.graph.m)
+        return {
+            "agent_dra_edges": agent_edges,
+            "super_graph_edges": cross,
+            "enforced_edges": enforced,
+            "total": agent_edges + cross,
+        }
+
+
+def build_index(g: Graph, c: int = 2, use_cost_model: bool = True,
+                seed: int = 0) -> DislandIndex:
+    """Run the full preprocessing module (paper Fig. 7)."""
+    timings = {}
+    t0 = time.perf_counter()
+    dras = compute_dras(g, c=c)
+    timings["compDRAs"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    shrink_nodes = dras.shrink_nodes()
+    shrink, shrink_ids = g.subgraph(shrink_nodes)
+    shrink_id_of = -np.ones(g.n, dtype=np.int64)
+    shrink_id_of[shrink_ids] = np.arange(shrink_ids.size)
+    timings["shrink_graph"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    gamma = max(4, c * int(np.floor(np.sqrt(g.n))))
+    part = partition_bgp(shrink, gamma, seed=seed)
+    timings["partition"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    boundary = part.boundary_mask(shrink)
+    fragments: List[Fragment] = []
+    frag_of = -np.ones(g.n, dtype=np.int64)
+    for i in range(part.n_fragments):
+        loc = part.fragment_nodes(i)            # shrink-local ids
+        orig = shrink_ids[loc]                  # original ids
+        frag_of[orig] = i
+        fg, fids = shrink.subgraph(loc)         # fids: frag-local -> shrink
+        # boundary nodes in frag-local ids
+        bmask = boundary[fids]
+        bl = np.nonzero(bmask)[0].astype(np.int32)
+        cover = hybrid_cover(fg, bl, use_cost_model=use_cost_model)
+        fragments.append(Fragment(nodes=shrink_ids[fids], graph=fg,
+                                  boundary_local=bl, cover=cover))
+    timings["hybrid_covers"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sg = _assemble_super(g, shrink, shrink_ids, part, fragments)
+    timings["super_graph"] = time.perf_counter() - t0
+
+    return DislandIndex(g=g, dras=dras, shrink=shrink,
+                        shrink_ids=shrink_ids, shrink_id_of=shrink_id_of,
+                        partition=part, fragments=fragments, super_graph=sg,
+                        frag_of=frag_of, timings=timings)
+
+
+def _assemble_super(g: Graph, shrink: Graph, shrink_ids: np.ndarray,
+                    part: PartitionResult,
+                    fragments: List[Fragment]) -> SuperGraph:
+    """SUPER graph: boundary nodes + landmarks, E_B + enforced edges."""
+    eu, ev, ew = [], [], []
+    members: set = set()
+    # E_B: original (shrink) edges with both endpoints boundary
+    boundary = part.boundary_mask(shrink)
+    bmask_u = boundary[shrink.edge_u]
+    bmask_v = boundary[shrink.edge_v]
+    both = bmask_u & bmask_v
+    for u, v, w in zip(shrink.edge_u[both], shrink.edge_v[both],
+                       shrink.edge_w[both]):
+        ou, ov = int(shrink_ids[u]), int(shrink_ids[v])
+        eu.append(ou)
+        ev.append(ov)
+        ew.append(float(w))
+        members.add(ou)
+        members.add(ov)
+    # enforced edges per fragment (local ids -> original ids)
+    for f in fragments:
+        fmap = f.nodes
+        for b in f.boundary_local:
+            members.add(int(fmap[b]))
+        for (u, x, d) in f.cover.landmark_edges:
+            ou, ox = int(fmap[int(u)]), int(fmap[int(x)])
+            if ou == ox:
+                continue
+            eu.append(ou)
+            ev.append(ox)
+            ew.append(float(d))
+            members.add(ou)
+            members.add(ox)
+        for (a, b, d) in f.cover.direct_edges:
+            oa, ob = int(fmap[int(a)]), int(fmap[int(b)])
+            if oa == ob:
+                continue
+            eu.append(oa)
+            ev.append(ob)
+            ew.append(float(d))
+            members.add(oa)
+            members.add(ob)
+    node_ids = np.array(sorted(members), dtype=np.int64)
+    id_of = {int(v): i for i, v in enumerate(node_ids)}
+    if eu:
+        lu = np.array([id_of[x] for x in eu], dtype=np.int32)
+        lv = np.array([id_of[x] for x in ev], dtype=np.int32)
+        sg = Graph.from_edges(node_ids.size, lu, lv, np.array(ew))
+    else:
+        sg = Graph.from_edges(max(node_ids.size, 0), [], [], [])
+    return SuperGraph(graph=sg, node_ids=node_ids, id_of=id_of)

@@ -1,0 +1,48 @@
+"""Distance-query generator (paper §VII-A, after Wu et al. [34]).
+
+A 256 x 256 grid is imposed over the (synthetic) road network's
+coordinates; query set Q_i holds node pairs whose grid distance falls in
+[2^(i-1) * l, 2^i * l) — Q_1 is near pairs, Q_8 spans the map.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from ..core.graph import Graph
+
+
+def grid_distance_queries(g: Graph, coords: np.ndarray | None = None,
+                          n_per_set: int = 1000, n_sets: int = 8,
+                          grid: int = 256, seed: int = 0
+                          ) -> Dict[int, np.ndarray]:
+    """-> {i: [n, 2] node pairs}, i in 1..n_sets.
+
+    coords: [n, 2] node positions; defaults to lattice positions for the
+    road_like generator (node id -> (row, col))."""
+    rng = np.random.default_rng(seed)
+    if coords is None:
+        side = int(np.ceil(np.sqrt(g.n)))
+        ids = np.arange(g.n)
+        coords = np.stack([ids // side, ids % side], axis=1).astype(float)
+    span = coords.max(0) - coords.min(0)
+    cell = max(span.max() / grid, 1e-9)
+    out: Dict[int, List[Tuple[int, int]]] = {i: [] for i in
+                                             range(1, n_sets + 1)}
+    need = n_per_set * n_sets
+    tries = 0
+    while tries < 200 * need and any(len(v) < n_per_set
+                                     for v in out.values()):
+        tries += 1
+        s, t = rng.integers(0, g.n, 2)
+        if s == t:
+            continue
+        gd = np.abs(coords[s] // cell - coords[t] // cell).max()
+        if gd < 1:
+            continue
+        i = int(np.floor(np.log2(max(gd, 1)))) + 1
+        if 1 <= i <= n_sets and len(out[i]) < n_per_set:
+            out[i].append((int(s), int(t)))
+    return {i: np.array(v if v else [(0, 0)], np.int64)
+            for i, v in out.items()}

@@ -1,0 +1,95 @@
+"""Blocked Floyd-Warshall APSP Pallas kernels.
+
+Two entry points:
+
+  * ``fw_batch_pallas``  — grid over a batch of small dense matrices
+    (DISLAND fragments, padded to a common size <= 256); the whole
+    [nf, nf] tile lives in VMEM and a fori_loop runs the classic FW
+    recurrence with a functional carry.
+
+  * ``fw_blocked``       — classic 3-phase blocked FW for one larger
+    matrix: phase 1 = diagonal-block FW (this kernel), phases 2/3 =
+    min-plus accumulate tiles (minplus.minplus_accum_pallas).  Used for
+    the SUPER-graph boundary x boundary matrix.
+
+Float32, +inf = unreachable; diagonal forced to 0 on entry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .minplus import minplus_accum_pallas
+
+
+def _fw_block_kernel(d_ref, o_ref):
+    """In-VMEM Floyd-Warshall on one [nf, nf] tile (leading batch of 1)."""
+    x = d_ref[0]
+    n = x.shape[0]
+
+    def body(k, mat):
+        row = jax.lax.dynamic_slice_in_dim(mat, k, 1, axis=0)  # [1, n]
+        col = jax.lax.dynamic_slice_in_dim(mat, k, 1, axis=1)  # [n, 1]
+        return jnp.minimum(mat, col + row)
+
+    o_ref[0] = jax.lax.fori_loop(0, n, body, x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fw_batch_pallas(d: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Batched APSP: d[b, n, n] -> shortest distances per batch entry."""
+    b, n, n2 = d.shape
+    assert n == n2
+    # zero the diagonals (distance to self)
+    eye = jnp.eye(n, dtype=bool)
+    d = jnp.where(eye[None], 0.0, d)
+    return pl.pallas_call(
+        _fw_block_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n), d.dtype),
+        interpret=interpret,
+    )(d)
+
+
+def _fw_diag(d_kk: jax.Array, interpret: bool) -> jax.Array:
+    return fw_batch_pallas(d_kk[None], interpret=interpret)[0]
+
+
+def fw_blocked(d: jax.Array, *, block: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """3-phase blocked Floyd-Warshall for one [n, n] matrix.
+
+    Pads to a block multiple with +inf.  Per k-block:
+      phase 1: FW on the diagonal block D[kk]
+      phase 2: D[k, *] = min(D[k, *], D[kk] (x) D[k, *]);
+               D[*, k] = min(D[*, k], D[*, k] (x) D[kk])
+      phase 3: D = min(D, D[*, k] (x) D[k, *])
+    """
+    n = d.shape[0]
+    np_ = -(-n // block) * block
+    pad = jnp.full((np_, np_), jnp.inf, d.dtype)
+    pad = pad.at[:n, :n].set(d)
+    eye = jnp.eye(np_, dtype=bool)
+    pad = jnp.where(eye, 0.0, pad)
+    nb = np_ // block
+    for kb in range(nb):
+        s = kb * block
+        dkk = _fw_diag(jax.lax.dynamic_slice(pad, (s, s), (block, block)),
+                       interpret)
+        pad = jax.lax.dynamic_update_slice(pad, dkk, (s, s))
+        row = jax.lax.dynamic_slice(pad, (s, 0), (block, np_))
+        row = minplus_accum_pallas(row, dkk, row, bm=block, bn=block,
+                                   bk=block, interpret=interpret)
+        pad = jax.lax.dynamic_update_slice(pad, row, (s, 0))
+        col = jax.lax.dynamic_slice(pad, (0, s), (np_, block))
+        col = minplus_accum_pallas(col, col, dkk, bm=block, bn=block,
+                                   bk=block, interpret=interpret)
+        pad = jax.lax.dynamic_update_slice(pad, col, (0, s))
+        pad = minplus_accum_pallas(pad, col, row, bm=block, bn=block,
+                                   bk=block, interpret=interpret)
+    return pad[:n, :n]

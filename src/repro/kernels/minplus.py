@@ -1,0 +1,128 @@
+"""Tropical (min,+) GEMM Pallas kernel — the DISLAND combine step.
+
+C[i, j] = min_k A[i, k] + B[k, j]
+
+This is the query-time workhorse of the device engine: distances
+node->boundary (A) combined with boundary->boundary SUPER distances (B)
+is exactly a min-plus product (GraphBLAS shortest-distance semiring).
+
+TPU mapping: (min,+) has no MXU form, so this is VPU work; tiles are
+(8,128)-lane aligned and sized so A-tile + B-tile + C-tile + the [bm,
+kc, bn] broadcast scratch stay well inside the ~16 MB VMEM budget.  The
+K grid axis is innermost and sequential on TPU, so the output tile is
+min-accumulated across K invocations (revisiting pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INIT = jnp.inf
+
+
+def _minplus_kernel(a_ref, b_ref, c_ref, *, k_chunk: int):
+    """One (bm x bn) output tile; min-accumulate over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.full_like(c_ref, _NEG_INIT)
+
+    a = a_ref[...]            # [bm, bk]
+    b = b_ref[...]            # [bk, bn]
+    bk = a.shape[1]
+
+    def body(i, acc):
+        a_c = jax.lax.dynamic_slice_in_dim(a, i * k_chunk, k_chunk, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(b, i * k_chunk, k_chunk, axis=0)
+        # [bm, kc, bn] broadcast add, min over kc
+        cand = jnp.min(a_c[:, :, None] + b_c[None, :, :], axis=1)
+        return jnp.minimum(acc, cand)
+
+    acc = jax.lax.fori_loop(0, bk // k_chunk, body, c_ref[...])
+    c_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "k_chunk",
+                                             "interpret"))
+def minplus_pallas(a: jax.Array, b: jax.Array, *, bm: int = 128,
+                   bn: int = 128, bk: int = 128, k_chunk: int = 8,
+                   interpret: bool = False) -> jax.Array:
+    """Tropical GEMM via Pallas; pads to tile multiples with +inf."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    a_p = jnp.full((mp, kp), jnp.inf, a.dtype).at[:m, :k].set(a)
+    b_p = jnp.full((kp, np_), jnp.inf, b.dtype).at[:k, :n].set(b)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_minplus_kernel, k_chunk=k_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def _minplus_accum_kernel(c_in_ref, a_ref, b_ref, c_ref, *, k_chunk: int):
+    """C = min(C_in, A (x) B) — used by the blocked Floyd-Warshall
+    phases 2/3, where the output tile must fold into existing distances."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = c_in_ref[...]
+
+    a = a_ref[...]
+    b = b_ref[...]
+    bk = a.shape[1]
+
+    def body(i, acc):
+        a_c = jax.lax.dynamic_slice_in_dim(a, i * k_chunk, k_chunk, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(b, i * k_chunk, k_chunk, axis=0)
+        cand = jnp.min(a_c[:, :, None] + b_c[None, :, :], axis=1)
+        return jnp.minimum(acc, cand)
+
+    c_ref[...] = jax.lax.fori_loop(0, bk // k_chunk, body, c_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "k_chunk",
+                                             "interpret"))
+def minplus_accum_pallas(c: jax.Array, a: jax.Array, b: jax.Array, *,
+                         bm: int = 128, bn: int = 128, bk: int = 128,
+                         k_chunk: int = 8,
+                         interpret: bool = False) -> jax.Array:
+    """min(C, A (x) B) with +inf padding; shapes C[m,n] A[m,k] B[k,n]."""
+    m, k = a.shape
+    _, n = b.shape
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    a_p = jnp.full((mp, kp), jnp.inf, a.dtype).at[:m, :k].set(a)
+    b_p = jnp.full((kp, np_), jnp.inf, b.dtype).at[:k, :n].set(b)
+    c_p = jnp.full((mp, np_), jnp.inf, c.dtype).at[:m, :n].set(c)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_minplus_accum_kernel, k_chunk=k_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), c.dtype),
+        interpret=interpret,
+    )(c_p, a_p, b_p)
+    return out[:m, :n]

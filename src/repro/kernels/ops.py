@@ -1,0 +1,66 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU the Pallas kernels compile natively; on CPU the
+default is the pure-jnp reference (XLA-compiled, fast) so host-side
+pipelines stay usable, while ``force="pallas"`` runs the kernels in
+interpret mode — tests use that to exercise tiling/indexing end-to-end.
+"""
+from __future__ import annotations
+
+from typing import Literal, Optional
+
+import jax
+
+from . import floyd_warshall as _fw
+from . import minplus as _mp
+from . import ref as _ref
+
+Force = Optional[Literal["pallas", "ref"]]
+
+
+def _use_pallas(force: Force) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)."""
+    if force == "ref":
+        return False, False
+    on_tpu = jax.default_backend() == "tpu"
+    if force == "pallas":
+        return True, not on_tpu
+    return on_tpu, False
+
+
+def minplus(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+            bk: int = 128, force: Force = None) -> jax.Array:
+    """Tropical GEMM: min_k A[i,k] + B[k,j]."""
+    pallas, interp = _use_pallas(force)
+    if pallas:
+        return _mp.minplus_pallas(a, b, bm=bm, bn=bn, bk=bk,
+                                  interpret=interp)
+    return _ref.minplus_ref(a, b)
+
+
+def minplus_accum(c: jax.Array, a: jax.Array, b: jax.Array, *,
+                  bm: int = 128, bn: int = 128, bk: int = 128,
+                  force: Force = None) -> jax.Array:
+    """min(C, A (x) B)."""
+    pallas, interp = _use_pallas(force)
+    if pallas:
+        return _mp.minplus_accum_pallas(c, a, b, bm=bm, bn=bn, bk=bk,
+                                        interpret=interp)
+    return _ref.minplus_accum_ref(c, a, b)
+
+
+def fw_batch(d: jax.Array, *, force: Force = None) -> jax.Array:
+    """Batched dense APSP over [b, n, n] fragment matrices."""
+    pallas, interp = _use_pallas(force)
+    if pallas:
+        return _fw.fw_batch_pallas(d, interpret=interp)
+    return _ref.fw_batch_ref(d)
+
+
+def fw_apsp(d: jax.Array, *, block: int = 128,
+            force: Force = None) -> jax.Array:
+    """Blocked APSP for a single [n, n] matrix."""
+    pallas, interp = _use_pallas(force)
+    if pallas:
+        return _fw.fw_blocked(d, block=block, interpret=interp)
+    return _ref.fw_ref(d)

@@ -1,0 +1,246 @@
+"""Cell assembly: (arch x shape x mesh) -> AOT-lowerable bundle.
+
+A CellBundle carries the step callable, ShapeDtypeStruct args and
+NamedShardings — everything launch/dryrun.py needs to ``jit(...,
+in_shardings).lower(*args).compile()`` without allocating a byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from ..configs import get_arch
+from ..configs.api import ArchSpec, ShapeCell
+from ..models import gnn, recsys, transformer
+from ..models.common import Shardings
+from ..optim import adamw_init
+from . import flops, steps
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellBundle:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    donate_argnums: Tuple[int, ...]
+    model_flops: float
+    notes: str = ""
+
+
+def _named(sh: Shardings, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(sh.mesh, p), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def _params_struct(init_fn):
+    return jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+
+
+def _replicated_like(sh: Shardings, tree):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(sh.mesh, sh.spec()), tree)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh) -> CellBundle:
+    spec = get_arch(arch_id)
+    cell = spec.shape(shape_name)
+    sh = Shardings(mesh=mesh)
+    if spec.family == "lm":
+        return _build_lm(spec, cell, sh)
+    if spec.family == "gnn":
+        return _build_gnn(spec, cell, sh)
+    return _build_recsys(spec, cell, sh)
+
+
+# ---------------------------------------------------------------------------
+def _dp_size(sh: Shardings) -> int:
+    out = 1
+    for a in (sh.dp or ()):
+        out *= sh.mesh.shape[a]
+    return out
+
+
+def _flat_axes(sh: Shardings):
+    return tuple(sh.mesh.axis_names)
+
+
+def _build_lm(spec: ArchSpec, cell: ShapeCell, sh: Shardings) -> CellBundle:
+    cfg: transformer.LMConfig = spec.model_cfg
+    d = cell.dims
+    b, t = d["global_batch"], d["seq_len"]
+    pstruct = _params_struct(lambda k: transformer.init_params(cfg, k))
+    pshard = _named(sh, transformer.param_specs(cfg, sh))
+    mf = flops.model_flops(spec, cell)
+    dp = _dp_size(sh)
+    batch_shardable = b % dp == 0 and b >= dp
+
+    if cell.kind == "train":
+        n_micro = max(1, (b // dp) // spec.seqs_per_micro)
+        fn = steps.lm_train_step(
+            cfg, sh, n_micro, serialize_update=spec.serialize_opt_update,
+            accum_dtype=jnp.dtype(spec.grad_accum_dtype))
+        sdt = jnp.dtype(spec.opt_state_dtype)
+        ostruct = jax.eval_shape(lambda p: adamw_init(p, sdt), pstruct)
+        # m/v shardings: FSDP-sharded even under ZeRO-1 (params may
+        # replicate over data while opt state stays sharded); step repl.
+        oshard_specs = _named(sh, transformer.param_specs(
+            cfg, sh, for_opt_state=True))
+        oshard = type(ostruct)(
+            m=oshard_specs, v=oshard_specs,
+            step=NamedSharding(sh.mesh, sh.spec()))
+        tokens = SDS((b, t), jnp.int32)
+        tshard = NamedSharding(sh.mesh, sh.spec(sh.dp, None))
+        return CellBundle(spec.arch_id, cell.name, cell.kind, fn,
+                          (pstruct, ostruct, tokens),
+                          (pshard, oshard, tshard),
+                          donate_argnums=(0, 1), model_flops=mf,
+                          notes=f"n_micro={n_micro}")
+
+    if cell.kind == "prefill":
+        fn = steps.lm_prefill_step(cfg, sh)
+        tokens = SDS((b, t), jnp.int32)
+        tshard = NamedSharding(
+            sh.mesh, sh.spec(sh.dp if batch_shardable else None, None))
+        return CellBundle(spec.arch_id, cell.name, cell.kind, fn,
+                          (pstruct, tokens), (pshard, tshard),
+                          donate_argnums=(), model_flops=mf)
+
+    # decode
+    fn = steps.lm_decode_step(cfg, sh)
+    shard_seq = bool(d.get("shard_seq", 0)) or not batch_shardable
+    cspec = transformer.cache_specs(cfg, sh, b, t, shard_seq=shard_seq)
+    cstruct = {k: v[0] for k, v in cspec.items()}
+    cshard = {k: NamedSharding(sh.mesh, v[1]) for k, v in cspec.items()}
+    token = SDS((b,), jnp.int32)
+    tokshard = NamedSharding(
+        sh.mesh, sh.spec(sh.dp if batch_shardable else None))
+    return CellBundle(spec.arch_id, cell.name, cell.kind, fn,
+                      (pstruct, cstruct, token),
+                      (pshard, cshard, tokshard),
+                      donate_argnums=(1,), model_flops=mf,
+                      notes=f"shard_seq={shard_seq}")
+
+
+# ---------------------------------------------------------------------------
+_GNN_KEYS = {
+    "graphcast": ("node_feat", "edge_src", "edge_dst", "edge_feat",
+                  "target", "loss_mask"),
+    "dimenet": ("node_feat", "edge_src", "edge_dst", "edge_dist",
+                "tri_edge_kj", "tri_edge_ji", "tri_angle", "graph_id",
+                "target_g"),
+    "graphsage": ("node_feat", "edge_src", "edge_dst", "labels",
+                  "loss_mask"),
+    "gat": ("node_feat", "edge_src", "edge_dst", "labels", "loss_mask"),
+}
+
+
+def _build_gnn(spec: ArchSpec, cell: ShapeCell, sh: Shardings) -> CellBundle:
+    import dataclasses as dc
+    base: gnn.GNNConfig = spec.model_cfg
+    d = cell.dims
+    # graphcast/dimenet use the shard_map halo path on device meshes
+    # (bf16 hidden state: the all_gather working set halves)
+    sharded = base.arch in ("graphcast", "dimenet")
+    cfg = dc.replace(base, d_feat=d["d_feat"], sharded=sharded,
+                     dtype=jnp.bfloat16 if sharded else base.dtype)
+    n, e, g_ = d["n_nodes"], d["n_edges"], d["n_graphs"]
+    t3 = 2 * e
+    flat = _flat_axes(sh)
+    full = {
+        "node_feat": (SDS((n, cfg.d_feat), jnp.float32), (flat, None)),
+        "edge_src": (SDS((e,), jnp.int32), (flat,)),
+        "edge_dst": (SDS((e,), jnp.int32), (flat,)),
+        "edge_feat": (SDS((e, cfg.d_edge), jnp.float32), (flat, None)),
+        "edge_dist": (SDS((e,), jnp.float32), (flat,)),
+        "labels": (SDS((n,), jnp.int32), (flat,)),
+        "loss_mask": (SDS((n,), jnp.float32), (flat,)),
+        "target": (SDS((n, cfg.n_out), jnp.float32), (flat, None)),
+        "graph_id": (SDS((n,), jnp.int32), (flat,)),
+        "target_g": (SDS((g_,), jnp.float32), (None,)),
+        "tri_edge_kj": (SDS((t3,), jnp.int32), (flat,)),
+        "tri_edge_ji": (SDS((t3,), jnp.int32), (flat,)),
+        "tri_angle": (SDS((t3,), jnp.float32), (flat,)),
+    }
+    keys = _GNN_KEYS[cfg.arch]
+    bstruct = {k: full[k][0] for k in keys}
+    bshard = {k: NamedSharding(sh.mesh, sh.spec(*full[k][1]))
+              for k in keys}
+    pstruct = _params_struct(lambda k: gnn.init_params(cfg, k))
+    pshard = _replicated_like(sh, pstruct)
+    ostruct = jax.eval_shape(adamw_init, pstruct)
+    oshard = type(ostruct)(m=_replicated_like(sh, pstruct),
+                           v=_replicated_like(sh, pstruct),
+                           step=NamedSharding(sh.mesh, sh.spec()))
+    fn = steps.gnn_train_step(cfg, sh)
+    return CellBundle(spec.arch_id, cell.name, cell.kind, fn,
+                      (pstruct, ostruct, bstruct),
+                      (pshard, oshard, bshard),
+                      donate_argnums=(0, 1),
+                      model_flops=flops.model_flops(spec, cell),
+                      notes=f"padded n={n} e={e}")
+
+
+# ---------------------------------------------------------------------------
+def _build_recsys(spec: ArchSpec, cell: ShapeCell,
+                  sh: Shardings) -> CellBundle:
+    cfg: recsys.RecsysConfig = spec.model_cfg
+    d = cell.dims
+    b = d["batch"]
+    flat = _flat_axes(sh)
+    pstruct = _params_struct(lambda k: recsys.init_params(cfg, k))
+    pshard = _named(sh, recsys.param_specs(cfg, sh))
+    mf = flops.model_flops(spec, cell)
+    if cell.kind == "retrieval":
+        fn = steps.recsys_retrieval_step(cfg, sh)
+        bstruct = {
+            "sparse_ids": SDS((1, cfg.n_sparse, cfg.hots_per_field),
+                              jnp.int32),
+            "dense": SDS((1, cfg.n_dense), jnp.float32),
+            "candidates": SDS((d["n_candidates"], cfg.mlp_dims[-1]),
+                              jnp.float32),
+        }
+        bshard = {
+            "sparse_ids": NamedSharding(sh.mesh, sh.spec()),
+            "dense": NamedSharding(sh.mesh, sh.spec()),
+            "candidates": NamedSharding(sh.mesh, sh.spec(flat, None)),
+        }
+        return CellBundle(spec.arch_id, cell.name, cell.kind, fn,
+                          (pstruct, bstruct), (pshard, bshard),
+                          donate_argnums=(), model_flops=mf)
+    batch_axes = sh.dp if cell.kind == "train" else flat
+    bstruct = {
+        "sparse_ids": SDS((b, cfg.n_sparse, cfg.hots_per_field),
+                          jnp.int32),
+        "dense": SDS((b, cfg.n_dense), jnp.float32),
+    }
+    bshard = {
+        "sparse_ids": NamedSharding(sh.mesh, sh.spec(batch_axes, None,
+                                                     None)),
+        "dense": NamedSharding(sh.mesh, sh.spec(batch_axes, None)),
+    }
+    if cell.kind == "train":
+        bstruct["labels"] = SDS((b,), jnp.int32)
+        bshard["labels"] = NamedSharding(sh.mesh, sh.spec(batch_axes))
+        ostruct = jax.eval_shape(adamw_init, pstruct)
+        oshard = type(ostruct)(m=pshard, v=jax.tree_util.tree_map(
+            lambda s: s, pshard),
+            step=NamedSharding(sh.mesh, sh.spec()))
+        fn = steps.recsys_train_step(cfg, sh)
+        return CellBundle(spec.arch_id, cell.name, cell.kind, fn,
+                          (pstruct, ostruct, bstruct),
+                          (pshard, oshard, bshard), donate_argnums=(0, 1),
+                          model_flops=mf)
+    fn = steps.recsys_serve_step(cfg, sh)
+    return CellBundle(spec.arch_id, cell.name, cell.kind, fn,
+                      (pstruct, bstruct), (pshard, bshard),
+                      donate_argnums=(), model_flops=mf)

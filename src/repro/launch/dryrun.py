@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): AOT lower + compile every
+(architecture x input shape) on the production meshes, record memory /
+cost / collective analysis for the roofline (deliverable g).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+The XLA_FLAGS line above MUST run before any jax import: jax locks the
+platform device count at first init.  Results land in
+experiments/dryrun/<arch>__<shape>__<mesh>.json (skip if present unless
+--force), so the full sweep is resumable.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from ..configs import get_arch, list_archs           # noqa: E402
+from . import hloanalysis, traffic                   # noqa: E402
+from .cells import build_cell                        # noqa: E402
+from .mesh import make_production_mesh               # noqa: E402
+
+# TPU v5e hardware constants (system prompt ROOFLINE ANALYSIS)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[8,128]' or '(f32[2], bf16[4,4])' -> total bytes."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind, from the
+    partitioned HLO: sum of result-shape bytes per op (start ops only;
+    '-done' halves of async pairs are skipped to avoid double count)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?\S+\s*=\s*((?:\([^)]*\))|(?:\S+))\s+(\S+)\(", s)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        for kind in _COLLECTIVES:
+            if opname == kind or opname == kind + "-start":
+                out[kind] += _shape_bytes(shape_str)
+                counts[kind] += 1
+                break
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             outdir: str, force: bool = False) -> dict:
+    path = os.path.join(outdir, f"{arch_id}__{shape_name}__{mesh_kind}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    multi = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = mesh.size
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+           "n_chips": n_chips, "ok": False}
+    try:
+        bundle = build_cell(arch_id, shape_name, mesh)
+        t0 = time.perf_counter()
+        with mesh:
+            jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                             donate_argnums=bundle.donate_argnums)
+            lowered = jitted.lower(*bundle.args)
+            rec["lower_s"] = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        rec["memory"]["total_device_bytes"] = (
+            rec["memory"].get("argument_size_in_bytes", 0)
+            + rec["memory"].get("output_size_in_bytes", 0)
+            + rec["memory"].get("temp_size_in_bytes", 0))
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost_xla"] = {k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float))
+                           and k in ("flops", "bytes accessed")}
+        hlo = compiled.as_text()
+        rec["hlo_bytes"] = len(hlo)
+        # loop-aware per-device analysis (hloanalysis module): XLA's own
+        # cost_analysis counts while bodies once — useless for scanned
+        # models (EXPERIMENTS.md §Roofline methodology)
+        ana = hloanalysis.analyze(hlo)
+        rec["analysis"] = {
+            "dot_flops": ana.flops,
+            "hbm_bytes_measured": ana.bytes,
+            "cpu_copy_bytes": ana.copy_bytes,
+            "unknown_trip_counts": ana.unknown_trips,
+            "collective_bytes": {k: v for k, v in ana.collectives.items()
+                                 if v},
+        }
+        mesh_obj = make_production_mesh(multi_pod=multi)
+        tp = mesh_obj.shape.get("model", 1)
+        bytes_model = traffic.analytic_bytes(
+            get_arch(arch_id), get_arch(arch_id).shape(shape_name),
+            n_chips, tp=tp)
+        rec["analysis"]["hbm_bytes_model"] = bytes_model
+        flops_dev = ana.flops
+        coll_dev = ana.collective_bytes
+        rec["model_flops"] = bundle.model_flops
+        rec["notes"] = bundle.notes
+        rec["roofline"] = {
+            "compute_s": flops_dev / PEAK_FLOPS,
+            "memory_s": bytes_model / HBM_BW,
+            "collective_s": coll_dev / LINK_BW,
+        }
+        terms = dict(rec["roofline"])
+        rec["roofline"]["dominant"] = max(terms, key=terms.get)
+        total_hlo_flops = flops_dev * n_chips
+        rec["roofline"]["model_vs_hlo_flops"] = (
+            bundle.model_flops / total_hlo_flops
+            if total_hlo_flops else float("nan"))
+        # step time bound = max of the three terms; roofline fraction =
+        # useful-model-compute time / bounded step time
+        step_s = max(terms.values())
+        ideal_s = bundle.model_flops / (n_chips * PEAK_FLOPS)
+        rec["roofline"]["step_time_bound_s"] = step_s
+        rec["roofline"]["roofline_fraction"] = (
+            ideal_s / step_s if step_s > 0 else float("nan"))
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record per-cell failures
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    os.makedirs(outdir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else "FAIL"
+    print(f"[{status}] {arch_id} x {shape_name} x {mesh_kind} "
+          f"lower={rec.get('lower_s', 0):.1f}s "
+          f"compile={rec.get('compile_s', 0):.1f}s "
+          f"{rec.get('error', '')}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    meshes = (["single", "multipod"] if args.mesh == "both"
+              else [args.mesh])
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in get_arch(a).shapes:
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+    n_ok = 0
+    for a, s in cells:
+        for mk in meshes:
+            rec = run_cell(a, s, mk, args.out, force=args.force)
+            n_ok += bool(rec["ok"])
+    print(f"done: {n_ok}/{len(cells) * len(meshes)} cells OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

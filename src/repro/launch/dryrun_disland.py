@@ -1,0 +1,91 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Bonus dry-run cell: the paper's own workload — DISLAND batched
+serving — AOT-lowered on the production meshes.
+
+Index dimensions model a ~262k-node road graph (c=2): 256 fragments of
+<=1024 nodes, 128 boundary slots, ~8k SUPER nodes, piece buckets per
+device_engine.PIECE_BUCKETS.  Index replicated (it fits: ~1.6 GB),
+query batch of 2^17 sharded over every mesh axis — the zero-collective
+serving layout of DESIGN.md §5.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_disland
+"""
+import json       # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..core.device_engine import DeviceIndex, serve_step  # noqa: E402
+from . import hloanalysis  # noqa: E402
+from .dryrun import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+SDS = jax.ShapeDtypeStruct
+
+
+def index_struct(n=262_144, k=256, maxf=1024, mb=128, s_super=8192,
+                 pieces=(20_000, 2_000, 200, 16, 1)) -> DeviceIndex:
+    f32, i32 = jnp.float32, jnp.int32
+    caps = (8, 32, 128, 512, 2048)
+    return DeviceIndex(
+        agent_of=SDS((n,), i32), dist_to_agent=SDS((n,), f32),
+        frag_of=SDS((n,), i32), pos_in_frag=SDS((n,), i32),
+        piece_bucket=SDS((n,), i32), piece_idx=SDS((n,), i32),
+        pos_in_piece=SDS((n,), i32),
+        frag_apsp=SDS((k, maxf, maxf), f32),
+        bpos=SDS((k, mb), i32), bvalid=SDS((k, mb), jnp.bool_),
+        bnd_super=SDS((k, mb), i32),
+        d_super=SDS((s_super + 1, s_super + 1), f32),
+        piece_apsp=[SDS((p, c, c), f32) for p, c in zip(pieces, caps)],
+    )
+
+
+def main() -> None:
+    out = {}
+    for mesh_kind, multi in [("single", False), ("multipod", True)]:
+        mesh = make_production_mesh(multi_pod=multi)
+        axes = tuple(mesh.axis_names)
+        dix = index_struct()
+        rep = NamedSharding(mesh, P())
+        qshard = NamedSharding(mesh, P(axes))
+        dix_shard = jax.tree_util.tree_map(lambda _: rep, dix)
+        q = SDS((131_072,), jnp.int32)
+        t0 = time.perf_counter()
+        with mesh:
+            compiled = jax.jit(
+                serve_step,
+                in_shardings=(dix_shard, qshard, qshard)).lower(
+                    dix, q, q).compile()
+        dt = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        ana = hloanalysis.analyze(compiled.as_text())
+        fit = (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 1e9
+        rec = {
+            "mesh": mesh_kind, "n_chips": mesh.size,
+            "lower_compile_s": round(dt, 1),
+            "fit_gb": round(fit, 2),
+            "flops_dev": ana.flops,
+            "collective_bytes_dev": ana.collective_bytes,
+            "roofline": {
+                "compute_s": ana.flops / PEAK_FLOPS,
+                # serving is gather-bound: index working set per batch
+                "memory_s": (131_072 / mesh.size
+                             * (128 * 4 * 2 + 128 * 128 * 4)) / HBM_BW,
+                "collective_s": ana.collective_bytes / LINK_BW,
+            },
+        }
+        print(f"[OK] disland-serve x q131072 x {mesh_kind} "
+              f"fit={fit:.2f}GB compile={dt:.1f}s "
+              f"coll={ana.collective_bytes / 1e6:.1f}MB/dev")
+        out[mesh_kind] = rec
+    os.makedirs("experiments/dryrun", exist_ok=True)
+    with open("experiments/dryrun/disland-serve__bonus.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,394 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so a
+64-layer scanned transformer reports ~1/64th of its real FLOPs (verified
+empirically — EXPERIMENTS.md §Roofline methodology).  This module
+re-derives per-device costs from the partitioned module text:
+
+  * flops — dot FLOPs (2*out_elems*K), multiplied through while-loop
+    trip counts (XLA annotates ``known_trip_count`` in backend_config;
+    fallback: the loop condition's compare-with-constant) and through
+    fusion/call boundaries.  Dot-only by design: the MXU term is the
+    compute-roofline numerator; elementwise VPU work is not.
+  * bytes — operand+result bytes of top-level instructions (fusion
+    internals excluded — they never touch HBM), loop-aware as above.
+
+Shapes of operands are resolved through a per-computation symbol table
+(HLO instruction operands are untyped references).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# instruction: "%name = TYPE opcode(...)..." (ROOT prefix optional)
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n":\s*"(\d+)"')
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "iota"}
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    text: str
+
+    def operands(self) -> List[str]:
+        # references inside the first call parens
+        i = self.text.find(self.opcode + "(")
+        rest = self.text[i + len(self.opcode) + 1:]
+        # cut at the matching close: operands never contain parens except
+        # via nested %refs, so cut at "), " attr boundary or final ")"
+        depth = 1
+        out_chars = []
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            out_chars.append(ch)
+        return re.findall(r"%([\w.\-]+)", "".join(out_chars))
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symbols: Dict[str, str]          # value name -> type string
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if not s:
+            continue
+        if cur is None or (s.endswith("{") and "=" not in s.split("(")[0]):
+            m = _COMP_RE.match(s)
+            if m and s.endswith("{"):
+                cur = Computation(name=m.group(1), instrs=[], symbols={})
+                comps[cur.name] = cur
+                # parameters from the signature
+                for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\))|"
+                                      r"(?:[a-z0-9]+\[[0-9,]*\]\S*))",
+                                      m.group(2)):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+                continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(s)
+        if im:
+            ins = Instr(name=im.group(1), type_str=im.group(2),
+                        opcode=im.group(3), text=s)
+            cur.instrs.append(ins)
+            cur.symbols[ins.name] = ins.type_str
+    return comps
+
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float
+    bytes: float
+    unknown_trips: int
+    copy_bytes: float = 0.0  # CPU-backend reshard/layout copies (absent
+    #                          on TPU; excluded from ``bytes``)
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+
+def _fusion_result_bytes(ins: "Instr", comps: Dict[str, "Computation"]
+                         ) -> int:
+    """If the fused root is a dynamic-update-slice the result aliases
+    the input and only the update window is written."""
+    full = _shape_bytes(_shapes_in(ins.type_str))
+    cm = re.search(r"calls=%?([\w.\-]+)", ins.text)
+    if not cm or cm.group(1) not in comps:
+        return full
+    fused = comps[cm.group(1)]
+    if fused.instrs and fused.instrs[-1].opcode == "dynamic-update-slice":
+        root = fused.instrs[-1]
+        ops_ = root.operands()
+        upd = next((o for o in reversed(ops_)
+                    if o in fused.symbols
+                    and "s32[]" not in fused.symbols[o]
+                    and fused.symbols[o] != root.type_str), None)
+        if upd:
+            return min(_shape_bytes(_shapes_in(fused.symbols[upd])), full)
+    return full
+
+
+def _fusion_operand_bytes(ins: "Instr", comp: "Computation",
+                          comps: Dict[str, "Computation"]) -> int:
+    """HBM reads of a fusion: per operand, the *consumed* window.
+
+    If an operand's only consumers inside the fused computation are
+    dynamic-slice/gather, charge the slice results (a loop-invariant
+    stacked weight sliced per iteration reads one layer, not the stack);
+    otherwise charge the full operand."""
+    cm = re.search(r"calls=%?([\w.\-]+)", ins.text)
+    ops_ = ins.operands()
+    if not cm or cm.group(1) not in comps:
+        return sum(_shape_bytes(_shapes_in(comp.symbols[o]))
+                   for o in ops_ if o in comp.symbols)
+    fused = comps[cm.group(1)]
+    # map parameter index -> operand name
+    params: Dict[str, int] = {}
+    for fi in fused.instrs:
+        if fi.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", fi.text)
+            if pm:
+                params[fi.name] = int(pm.group(1))
+    def consumers_of(val: str, depth: int = 0) -> List[Instr]:
+        """Consumers, looking through bitcast/reshape/copy wrappers."""
+        out: List[Instr] = []
+        for c in fused.instrs:
+            if val not in c.operands():
+                continue
+            if c.opcode in ("bitcast", "reshape", "copy") and depth < 4:
+                out += consumers_of(c.name, depth + 1)
+            else:
+                out.append(c)
+        return out
+
+    total = 0
+    for fi_name, idx in params.items():
+        if idx >= len(ops_):
+            continue
+        op_name = ops_[idx]
+        full = (_shape_bytes(_shapes_in(comp.symbols[op_name]))
+                if op_name in comp.symbols else 0)
+        consumers = consumers_of(fi_name)
+        windowed = ("dynamic-slice", "gather", "dynamic-update-slice")
+        if consumers and all(c.opcode in windowed for c in consumers):
+            sliced = 0
+            for c in consumers:
+                if c.opcode == "dynamic-update-slice":
+                    continue  # aliased in place; update charged itself
+                sliced += _shape_bytes(_shapes_in(c.type_str))
+            total += min(sliced, full) if full else sliced
+        else:
+            total += full
+    return total
+
+
+def _dot_flops(ins: Instr, symbols: Dict[str, str]) -> float:
+    res = _shapes_in(ins.type_str)
+    if not res:
+        return 0.0
+    out_elems = 1
+    for d in res[0][1]:
+        out_elems *= d
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.text)
+    ops = ins.operands()
+    if m and ops and ops[0] in symbols:
+        lhs = _shapes_in(symbols[ops[0]])
+        if lhs:
+            dims = lhs[0][1]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _while_trip(ins: Instr, comps: Dict[str, Computation]) -> Tuple[int, bool]:
+    m = _TRIP_RE.search(ins.text)
+    if m:
+        return max(int(m.group(1)), 1), True
+    cm = re.search(r"condition=%?([\w.\-]+)", ins.text)
+    if cm and cm.group(1) in comps:
+        consts = []
+        for i2 in comps[cm.group(1)].instrs:
+            c = re.match(r".*s32\[\]\s+constant\((\-?\d+)\)", i2.text)
+            if c:
+                consts.append(int(c.group(1)))
+        if consts:
+            return max(max(consts), 1), True
+    return 1, False
+
+
+def analyze(hlo: str, entry: Optional[str] = None) -> Analysis:
+    comps = parse_computations(hlo)
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+        entry = m.group(1) if m else next(iter(comps))
+    memo_f: Dict[str, float] = {}
+    memo_b: Dict[str, float] = {}
+    memo_c: Dict[str, float] = {}
+    unknown = [0]
+
+    def callees(ins: Instr) -> List[str]:
+        out = []
+        for key in ("calls", "to_apply", "body"):
+            m = re.search(key + r"=%?([\w.\-]+)", ins.text)
+            if m:
+                out.append(m.group(1))
+        m = re.search(r"branch_computations=\{([^}]*)\}", ins.text)
+        if m:
+            out += re.findall(r"%?([\w.\-]+)", m.group(1))
+        return out
+
+    def flops_of(name: str, stack=()) -> float:
+        if name in memo_f:
+            return memo_f[name]
+        if name not in comps or name in stack:
+            return 0.0
+        comp = comps[name]
+        total = 0.0
+        for ins in comp.instrs:
+            if ins.opcode in ("dot", "dot_general"):
+                total += _dot_flops(ins, comp.symbols)
+            elif ins.opcode == "while":
+                trip, known = _while_trip(ins, comps)
+                if not known:
+                    unknown[0] += 1
+                bm = re.search(r"body=%?([\w.\-]+)", ins.text)
+                if bm:
+                    total += trip * flops_of(bm.group(1), stack + (name,))
+            else:
+                for c in callees(ins):
+                    total += flops_of(c, stack + (name,))
+        memo_f[name] = total
+        return total
+
+    def bytes_of(name: str, stack=()) -> Tuple[float, float]:
+        """-> (hbm_bytes, copy_bytes), both loop-aware."""
+        if name in memo_b:
+            return memo_b[name], memo_c[name]
+        if name not in comps or name in stack:
+            return 0.0, 0.0
+        comp = comps[name]
+        total = 0.0
+        copies = 0.0
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                trip, _ = _while_trip(ins, comps)
+                bm = re.search(r"body=%?([\w.\-]+)", ins.text)
+                if bm:
+                    b_, c_ = bytes_of(bm.group(1), stack + (name,))
+                    total += trip * b_
+                    copies += trip * c_
+                continue
+            if ins.opcode in ("call", "conditional"):
+                for c in callees(ins):
+                    b_, c_ = bytes_of(c, stack + (name,))
+                    total += b_
+                    copies += c_
+                continue
+            if ins.opcode in _SKIP_BYTES_OPS:
+                continue
+            res_bytes = _shape_bytes(_shapes_in(ins.type_str))
+            if ins.opcode == "copy":
+                # CPU-backend reshard/layout copies: real traffic on this
+                # compile, absent on TPU — tracked separately
+                copies += 2 * res_bytes
+                continue
+            if ins.opcode in ("dynamic-slice", "gather"):
+                # reads the sliced window, not the whole operand
+                total += 2 * res_bytes
+                continue
+            if ins.opcode in ("dynamic-update-slice", "scatter"):
+                # writes the update window (result aliases the operand);
+                # update tensor is the last data operand
+                ops_ = ins.operands()
+                upd = next((o for o in reversed(ops_)
+                            if o in comp.symbols
+                            and "s32[]" not in comp.symbols[o]), None)
+                upd_b = (_shape_bytes(_shapes_in(comp.symbols[upd]))
+                         if upd else res_bytes)
+                total += 2 * min(upd_b, res_bytes)
+                continue
+            if ins.opcode == "fusion":
+                total += (_fusion_result_bytes(ins, comps)
+                          + _fusion_operand_bytes(ins, comp, comps))
+                continue
+            total += res_bytes
+            for op in ins.operands():
+                if op in comp.symbols:
+                    total += _shape_bytes(_shapes_in(comp.symbols[op]))
+        memo_b[name] = total
+        memo_c[name] = copies
+        return total, copies
+
+    coll: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    memo_coll: Dict[str, Dict[str, float]] = {}
+
+    def coll_of(name: str, stack=()) -> Dict[str, float]:
+        """Loop-aware per-kind collective result bytes."""
+        if name in memo_coll:
+            return memo_coll[name]
+        if name not in comps or name in stack:
+            return {}
+        comp = comps[name]
+        acc: Dict[str, float] = {}
+
+        def add(d, mult=1.0):
+            for k, v in d.items():
+                acc[k] = acc.get(k, 0.0) + mult * v
+
+        for ins in comp.instrs:
+            base = ins.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not ins.opcode.endswith("-done"):
+                acc[base] = acc.get(base, 0.0) + _shape_bytes(
+                    _shapes_in(ins.type_str))
+            elif ins.opcode == "while":
+                trip, _ = _while_trip(ins, comps)
+                bm = re.search(r"body=%?([\w.\-]+)", ins.text)
+                if bm:
+                    add(coll_of(bm.group(1), stack + (name,)), trip)
+            else:
+                for c in callees(ins):
+                    add(coll_of(c, stack + (name,)))
+        memo_coll[name] = acc
+        return acc
+
+    coll.update(coll_of(entry))
+    hbm, copies = bytes_of(entry)
+    return Analysis(flops=flops_of(entry), bytes=hbm,
+                    unknown_trips=unknown[0], copy_bytes=copies,
+                    collectives=coll)

@@ -1,0 +1,137 @@
+"""Step functions (train/prefill/decode/serve) composed from models +
+optimizer, with grad accumulation and sharding-aware carries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models import gnn, recsys, transformer
+from ..models.common import Shardings
+from ..optim import AdamWState, adamw_update
+
+
+def constrain_tree(tree, specs, sh: Shardings):
+    if sh.mesh is None:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x, p: jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(sh.mesh, p)), tree, specs)
+
+
+def make_grad_accum_step(loss_fn: Callable, split_batch: Callable,
+                         n_micro: int, param_specs, sh: Shardings,
+                         lr: float = 3e-4, serialize_update: bool = False,
+                         accum_dtype=jnp.float32):
+    """Generic train step: grads accumulated over n_micro microbatches
+    (fp32 by default, sharded like params), then one AdamW update.
+
+    loss_fn(params, microbatch) -> scalar loss
+    split_batch(batch, n_micro) -> pytree with leading [n_micro, ...]
+    accum_dtype: bf16 halves the accumulation buffers; used by the 104B
+    arch where the fp32 tree is the last GB over the HBM budget (Adam's
+    per-coordinate normalisation absorbs the rounding; EXPERIMENTS.md
+    §Perf M5).
+    """
+
+    def step(params, opt: AdamWState, batch):
+        if n_micro <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grad_scale = 1.0
+        else:
+            micro = split_batch(batch, n_micro)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def body(carry, mb):
+                acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(accum_dtype), acc, g)
+                if param_specs is not None:
+                    acc = constrain_tree(acc, param_specs, sh)
+                return acc, loss
+
+            grads, losses = jax.lax.scan(body, zero, micro)
+            # the 1/n_micro mean folds into the optimizer's clip scale —
+            # tree_map(g / n) would copy the full fp32 tree
+            grad_scale = 1.0 / n_micro
+            loss = jnp.mean(losses)
+        new_params, new_opt, metrics = adamw_update(
+            params, grads, opt, lr=lr, serialize=serialize_update,
+            grad_scale=grad_scale)
+        # donated params/opt force output shardings to match inputs; no
+        # extra constraint copies needed here
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# LM steps
+# ---------------------------------------------------------------------------
+def lm_train_step(cfg: transformer.LMConfig, sh: Shardings,
+                  n_micro: int, serialize_update: bool = False,
+                  accum_dtype=jnp.float32):
+    # gradients accumulate in the *optimizer-state* sharding: under
+    # ZeRO-1 that reduce-scatters per-micro grads onto the data shard
+    # instead of all-reducing against replicated params
+    specs = transformer.param_specs(cfg, sh, for_opt_state=True)
+
+    def loss_fn(params, tokens):
+        return transformer.forward_loss(cfg, sh, params, tokens)
+
+    def split(tokens, n):
+        b, t = tokens.shape
+        return tokens.reshape(n, b // n, t)
+
+    return make_grad_accum_step(loss_fn, split, n_micro, specs, sh,
+                                serialize_update=serialize_update,
+                                accum_dtype=accum_dtype)
+
+
+def lm_prefill_step(cfg: transformer.LMConfig, sh: Shardings):
+    def step(params, tokens):
+        return transformer.prefill(cfg, sh, params, tokens)
+    return step
+
+
+def lm_decode_step(cfg: transformer.LMConfig, sh: Shardings):
+    def step(params, cache, token):
+        return transformer.decode_step(cfg, sh, params, cache, token)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# GNN / recsys steps
+# ---------------------------------------------------------------------------
+def gnn_train_step(cfg: gnn.GNNConfig, sh: Shardings):
+    def loss_fn(params, batch):
+        return gnn.forward_loss(cfg, sh, params, batch)
+    return make_grad_accum_step(loss_fn, None, 1, None, sh)
+
+
+def recsys_train_step(cfg: recsys.RecsysConfig, sh: Shardings):
+    specs = recsys.param_specs(cfg, sh)
+
+    def loss_fn(params, batch):
+        return recsys.forward_loss(cfg, sh, params, batch)
+    return make_grad_accum_step(loss_fn, None, 1, specs, sh)
+
+
+def recsys_serve_step(cfg: recsys.RecsysConfig, sh: Shardings):
+    def step(params, batch):
+        return recsys.forward_logits(cfg, sh, params, batch)
+    return step
+
+
+def recsys_retrieval_step(cfg: recsys.RecsysConfig, sh: Shardings,
+                          top_k: int = 100):
+    def step(params, batch):
+        return recsys.retrieval_scores(cfg, sh, params, batch,
+                                       top_k=top_k)
+    return step

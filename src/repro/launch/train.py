@@ -1,0 +1,123 @@
+"""End-to-end training driver (deliverable b): real data pipeline,
+sharded train steps, checkpoint/restart, straggler monitoring.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+        --steps 50 --reduced --ckpt /tmp/ckpt
+
+--reduced shrinks the arch to a CPU-trainable size (same code path:
+scan over layers, grad accumulation, sharded AdamW) so the driver runs
+end-to-end in this container; on TPU the full config trains unchanged.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs import get_arch
+from ..data import lm_batches, recsys_batches, gnn_full_batch
+from ..models import gnn, recsys, transformer
+from ..models.common import Shardings
+from ..optim import adamw_init
+from ..runtime import StragglerMonitor
+from .mesh import make_host_mesh
+from . import steps
+
+
+def reduced_lm(cfg: transformer.LMConfig) -> transformer.LMConfig:
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab=512, n_experts=min(cfg.n_experts, 4) if cfg.moe else 0,
+        top_k=min(cfg.top_k, 2) if cfg.moe else 0, dtype=jnp.float32)
+
+
+def reduced_gnn(cfg: gnn.GNNConfig) -> gnn.GNNConfig:
+    return dataclasses.replace(cfg, n_layers=2, d_hidden=32, d_feat=16,
+                               n_out=min(cfg.n_out, 4))
+
+
+def reduced_recsys(cfg: recsys.RecsysConfig) -> recsys.RecsysConfig:
+    return dataclasses.replace(cfg, rows_per_field=1000, n_sparse=8,
+                               mlp_dims=(64, 32))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    mesh = make_host_mesh()
+    sh = Shardings(mesh=mesh)
+    monitor = StragglerMonitor()
+
+    if spec.family == "lm":
+        cfg = reduced_lm(spec.model_cfg) if args.reduced else spec.model_cfg
+        params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
+        step_fn = steps.lm_train_step(cfg, sh, n_micro=1)
+        data = lm_batches(args.batch, args.seq, cfg.vocab, seed=args.seed)
+        batches = (jnp.asarray(b) for b in data)
+    elif spec.family == "gnn":
+        cfg = reduced_gnn(spec.model_cfg) if args.reduced else spec.model_cfg
+        params = gnn.init_params(cfg, jax.random.PRNGKey(args.seed))
+        step_fn = steps.gnn_train_step(cfg, sh)
+        from ..core.graph import road_like
+        g = road_like(512, seed=args.seed)
+        batch = gnn_full_batch(g, cfg.d_feat, cfg.n_classes,
+                               seed=args.seed, n_out=cfg.n_out)
+        batches = iter(lambda: {k: jnp.asarray(v)
+                                for k, v in batch.items()}, None)
+    else:
+        cfg = (reduced_recsys(spec.model_cfg) if args.reduced
+               else spec.model_cfg)
+        params = recsys.init_params(cfg, jax.random.PRNGKey(args.seed))
+        step_fn = steps.recsys_train_step(cfg, sh)
+        data = recsys_batches(args.batch, cfg.n_sparse,
+                              cfg.rows_per_field, cfg.hots_per_field,
+                              seed=args.seed)
+        batches = ({k: jnp.asarray(v) for k, v in b.items()}
+                   for b in data)
+
+    opt = adamw_init(params)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    ckpt = CheckpointManager(args.ckpt) if args.ckpt else None
+    start = 0
+    if ckpt is not None and ckpt.latest_step() is not None:
+        start, (params, opt) = ckpt.restore((params, opt))
+        print(f"restored step {start}")
+
+    losses = []
+    for step in range(start, args.steps):
+        batch = next(batches)
+        monitor.start()
+        params, opt, metrics = jit_step(params, opt, batch)
+        loss = float(metrics["loss"])
+        monitor.stop()
+        losses.append(loss)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        if ckpt is not None and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt))
+    if ckpt is not None:
+        ckpt.save(args.steps, (params, opt))
+    print("straggler summary:", monitor.summary())
+    print(f"loss: first={losses[0]:.4f} last={losses[-1]:.4f}")
+    assert np.isfinite(losses[-1]), "training diverged"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Shared model building blocks: norms, RoPE, attention, sharded CE.
+
+Sharding is expressed through ``Shardings``: a tiny helper bound to a
+mesh that turns PartitionSpecs into with_sharding_constraint calls and
+adapts to 2D (data, model) vs 3D (pod, data, model) meshes — the pod
+axis simply joins the data axis for batch/FSDP purposes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Shardings:
+    mesh: Optional[Mesh]
+
+    @property
+    def dp(self):
+        """Batch / FSDP axes: ('pod','data') on multi-pod, ('data',)."""
+        if self.mesh is None:
+            return None
+        names = self.mesh.axis_names
+        return tuple(a for a in ("pod", "data") if a in names) or None
+
+    @property
+    def tp(self):
+        if self.mesh is None:
+            return None
+        return "model" if "model" in self.mesh.axis_names else None
+
+    def spec(self, *axes) -> P:
+        return P(*axes)
+
+    def constrain(self, x: jax.Array, *axes) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*axes)))
+
+    def named(self, *axes) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*axes))
+
+
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [.. T] -> (cos, sin) each [..., T, head_dim/2] f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., T, n_heads, head_dim]; cos/sin broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, q_offset: jax.Array | int = 0,
+                  kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Grouped-query attention.
+
+    q [B, Tq, H, dh]; k/v [B, Tk, KV, dh]; H = KV * group.
+    ``q_offset``: absolute position of q[0] (decode: Tk_filled - 1).
+    ``kv_len``: number of valid cache slots (decode masking).
+    Returns [B, Tq, H, dh].
+    """
+    b, tq, h, dh = q.shape
+    _, tk, kv, _ = k.shape
+    group = h // kv
+    qg = q.reshape(b, tq, kv, group, dh)
+    scale = dh ** -0.5
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(tq)[:, None] + q_offset
+        kpos = jnp.arange(tk)[None, :]
+        mask = kpos <= qpos                      # [tq, tk]
+        if kv_len is not None:
+            mask = mask & (kpos < kv_len)
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    elif kv_len is not None:
+        mask = jnp.arange(tk) < kv_len                   # [tk]
+        scores = jnp.where(mask[None, None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, tq, h, dh)
+
+
+def cross_entropy_vocab_sharded(logits: jax.Array, labels: jax.Array,
+                                sh: Shardings) -> jax.Array:
+    """Mean CE with logits [B, T, V] sharded on V over the model axis.
+
+    Written with plain reductions over V: under SPMD the max/sum reduce
+    over the sharded vocab axis lowers to one all-reduce each — the full
+    logits are never gathered to one device.
+    """
+    logits = logits.astype(jnp.float32)
+    logits = sh.constrain(logits, sh.dp, None, sh.tp)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    # gold logit via gather along the sharded vocab axis: lowers to a
+    # masked local gather + all-reduce, without materialising a second
+    # [tokens, V/shard] one-hot buffer
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def causal_lm_loss(logits: jax.Array, tokens: jax.Array,
+                   sh: Shardings) -> jax.Array:
+    """Next-token prediction: logits[:, :-1] vs tokens[:, 1:]."""
+    return cross_entropy_vocab_sharded(logits[:, :-1], tokens[:, 1:], sh)

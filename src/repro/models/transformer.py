@@ -1,0 +1,481 @@
+"""Decoder-only transformer LM: dense + MoE, GQA, RoPE, SwiGLU, RMSNorm.
+
+Covers the five assigned LM architectures (granite-8b, command-r-plus,
+phi4-mini, llama4-scout MoE, granite-moe).  Design notes:
+
+  * scan-over-layers with stacked [L, ...] weights keeps the HLO small
+    (critical when compiling against 512 partitions) and remat wraps the
+    layer body.
+  * training shards: batch on (pod, data); params FSDP on 'data' +
+    tensor-parallel on 'model' (heads / d_ff / vocab); kv-heads (8 <
+    model axis) replicate on 'model'; the pod axis replicates params and
+    all-reduces grads (2-level DP).
+  * prefill uses q-chunked attention (fixed [chunk, T] score tiles) so
+    32k-token prefill never materialises a T x T score matrix.
+  * decode keeps a [L, B, Tmax, KV, dh] cache, sequence-sharded when the
+    batch axis cannot cover the mesh (long-context cells).
+  * MoE uses sort-free gather/scatter dispatch with static capacity:
+    position-in-expert comes from a cumsum over the one-hot [N, E] mask
+    (cheap, no D factor), the heavy tensors only move through gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from .common import (Shardings, apply_rope, causal_lm_loss, gqa_attention,
+                     rms_norm, rope_angles)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    rope_theta: float = 500_000.0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_chunk: int = 1024           # q-chunk for long prefill
+    # memory levers (see EXPERIMENTS.md §Perf):
+    gather_fsdp_in_body: bool = False  # re-gather FSDP weights per layer
+    seq_shard_activations: bool = False  # sequence-parallel residual
+    # ZeRO stage: 3 = params+opt FSDP-sharded on 'data' (default);
+    # 1 = params replicated on 'data' (no per-layer weight all-gathers),
+    # optimizer state still sharded.  Right for models whose bf16 params
+    # fit per-device (EXPERIMENTS.md §Perf P1).
+    zero_stage: int = 3
+    # remat policy: True = full per-layer recompute; "save_tp_outputs"
+    # keeps the two all-reduced tensors per layer so the recompute pass
+    # skips their collectives (costs 2 x [tokens, d] bf16 per layer)
+    remat_policy: str = "full"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // 256) * 256
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND model-FLOPs accounting)."""
+        d, f, h, kv, dh = (self.d_model, self.d_ff, self.n_heads,
+                           self.n_kv_heads, self.head_dim)
+        attn = d * h * dh + 2 * d * kv * dh + h * dh * d
+        if self.moe:
+            ffn = self.n_experts * 3 * d * f + d * self.n_experts
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return (self.n_layers * per_layer + self.vocab_padded * d + d)
+
+    def n_active_params(self) -> int:
+        if not self.moe:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        dense_ffn = 3 * d * f * self.top_k + d * self.n_experts
+        moe_ffn = self.n_experts * 3 * d * f + d * self.n_experts
+        return self.n_params() - self.n_layers * (moe_ffn - dense_ffn)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def init_params(cfg: LMConfig, key: jax.Array) -> Dict:
+    d, f, h, kv, dh = (cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim)
+    L, V = cfg.n_layers, cfg.vocab_padded
+    k = jax.random.split(key, 10)
+    s = lambda *sh: 1.0 / jnp.sqrt(jnp.prod(jnp.array(sh[-1:])))
+    dt = cfg.dtype
+
+    def normal(kk, shape, scale):
+        return (jax.random.normal(kk, shape, jnp.float32) * scale).astype(dt)
+
+    layers = {
+        "attn_norm": jnp.ones((L, d), dt),
+        "ffn_norm": jnp.ones((L, d), dt),
+        "wq": normal(k[0], (L, d, h, dh), d ** -0.5),
+        "wk": normal(k[1], (L, d, kv, dh), d ** -0.5),
+        "wv": normal(k[2], (L, d, kv, dh), d ** -0.5),
+        "wo": normal(k[3], (L, h, dh, d), (h * dh) ** -0.5),
+    }
+    if cfg.moe:
+        E = cfg.n_experts
+        layers.update({
+            "router": normal(k[4], (L, d, E), d ** -0.5),
+            "w_gate": normal(k[5], (L, E, d, f), d ** -0.5),
+            "w_up": normal(k[6], (L, E, d, f), d ** -0.5),
+            "w_down": normal(k[7], (L, E, f, d), f ** -0.5),
+        })
+    else:
+        layers.update({
+            "w_gate": normal(k[5], (L, d, f), d ** -0.5),
+            "w_up": normal(k[6], (L, d, f), d ** -0.5),
+            "w_down": normal(k[7], (L, f, d), f ** -0.5),
+        })
+    return {
+        # tied in/out embedding: small init keeps initial logits ~O(1)
+        "embed": normal(k[8], (V, d), d ** -0.5),
+        "final_norm": jnp.ones((d,), dt),
+        "layers": layers,
+    }
+
+
+def param_specs(cfg: LMConfig, sh: Shardings, *,
+                for_opt_state: bool = False) -> Dict:
+    """PartitionSpec tree matching init_params output.
+
+    Under ZeRO-1 (zero_stage=1) parameters replicate over 'data' while
+    optimizer state keeps the data shard (``for_opt_state=True``)."""
+    tp = sh.tp
+    fsdp = "data" if (sh.mesh is not None
+                      and "data" in sh.mesh.axis_names) else None
+    if cfg.zero_stage == 1 and not for_opt_state:
+        fsdp = None
+    tp_size = (sh.mesh.shape["model"]
+               if sh.mesh is not None and tp else 1)
+    heads_ok = cfg.n_heads % max(tp_size, 1) == 0
+    h_tp = tp if heads_ok else None
+    P_ = sh.spec
+    layers = {
+        "attn_norm": P_(None, None),
+        "ffn_norm": P_(None, None),
+        "wq": P_(None, fsdp, h_tp, None),
+        "wk": P_(None, fsdp, None, None),
+        "wv": P_(None, fsdp, None, None),
+        "wo": P_(None, h_tp, None, fsdp),
+    }
+    if cfg.moe:
+        e_tp = tp if cfg.n_experts % max(tp_size, 1) == 0 else None
+        layers.update({
+            "router": P_(None, fsdp, None),
+            "w_gate": P_(None, e_tp, fsdp, None),
+            "w_up": P_(None, e_tp, fsdp, None),
+            "w_down": P_(None, e_tp, None, fsdp),
+        })
+    else:
+        f_tp = tp if cfg.d_ff % max(tp_size, 1) == 0 else None
+        layers.update({
+            "w_gate": P_(None, fsdp, f_tp),
+            "w_up": P_(None, fsdp, f_tp),
+            "w_down": P_(None, f_tp, fsdp),
+        })
+    v_tp = tp if cfg.vocab_padded % max(tp_size, 1) == 0 else None
+    return {
+        # 2D-sharded embedding: vocab on model, d_model on data (FSDP) —
+        # the unsharded-on-data variant costs ~2 GB/device in fp32
+        # optimizer/grad copies on the 256k-vocab archs
+        "embed": P_(v_tp, fsdp),
+        "final_norm": P_(None),
+        "layers": layers,
+    }
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _attention_block(cfg: LMConfig, sh: Shardings, lw: Dict, x: jax.Array,
+                     cos: jax.Array, sin: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence causal attention, q-chunked for long T.
+
+    Returns (out, k, v) so prefill can cache k/v without recompute (the
+    training path simply drops them — dead values are pruned)."""
+    b, t, d = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, lw["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, lw["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, lw["wv"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = sh.constrain(q, sh.dp, None, sh.tp, None)
+    if t <= cfg.attn_chunk or t % cfg.attn_chunk != 0:
+        o = gqa_attention(q, k, v, causal=True)
+    else:
+        nc = t // cfg.attn_chunk
+
+        def chunk(carry, i):
+            qs = jax.lax.dynamic_slice_in_dim(q, i * cfg.attn_chunk,
+                                              cfg.attn_chunk, axis=1)
+            o = gqa_attention(qs, k, v, causal=True,
+                              q_offset=i * cfg.attn_chunk)
+            return carry, o
+
+        _, chunks = jax.lax.scan(chunk, 0, jnp.arange(nc))
+        o = jnp.moveaxis(chunks, 0, 1).reshape(b, t, cfg.n_heads,
+                                               cfg.head_dim)
+    o = sh.constrain(o, sh.dp, None, sh.tp, None)
+    return jnp.einsum("bthk,hkd->btd", o, lw["wo"]), k, v
+
+
+def _dense_ffn(cfg: LMConfig, sh: Shardings, lw: Dict,
+               x: jax.Array) -> jax.Array:
+    g = jnp.einsum("btd,df->btf", x, lw["w_gate"])
+    u = jnp.einsum("btd,df->btf", x, lw["w_up"])
+    hidden = jax.nn.silu(g) * u
+    hidden = sh.constrain(hidden, sh.dp, None, sh.tp)
+    return jnp.einsum("btf,fd->btd", hidden, lw["w_down"])
+
+
+def _moe_ffn(cfg: LMConfig, sh: Shardings, lw: Dict, x: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE with static-capacity gather/scatter dispatch.
+
+    Returns (output, aux_loss)."""
+    b, t, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = b * t
+    xf = x.reshape(N, d)
+    logits = jnp.einsum("nd,de->ne", xf, lw["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                     # [N, K]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    # Switch-style load-balance aux loss
+    density = jnp.mean(jax.nn.one_hot(eidx[:, 0], E), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * router_prob)
+    # ---- dispatch -----------------------------------------------------
+    cap = int(cfg.capacity_factor * N * K / E)
+    cap = max(8, -(-cap // 8) * 8)
+    flat_e = eidx.reshape(-1)                                # [N*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # [N*K, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1                     # pos in expert
+    pos = jnp.sum(pos * onehot, axis=-1)                     # [N*K]
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, E * cap)      # overflow slot
+    token_of = jnp.repeat(jnp.arange(N), K)
+    # inverse map: slot -> token (int scatter, small)
+    slot_token = jnp.zeros(E * cap + 1, jnp.int32).at[slot].set(
+        token_of, mode="drop")
+    slot_valid = jnp.zeros(E * cap + 1, jnp.bool_).at[slot].set(
+        keep, mode="drop")
+    buf = xf[slot_token[:E * cap]] * slot_valid[:E * cap, None]
+    buf = buf.reshape(E, cap, d)
+    buf = sh.constrain(buf, sh.tp, None, None)
+    # ---- expert compute -------------------------------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, lw["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, lw["w_up"])
+    hidden = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", hidden, lw["w_down"])
+    y = sh.constrain(y, sh.tp, None, None)
+    # ---- combine ----------------------------------------------------------
+    yf = y.reshape(E * cap, d)
+    gathered = yf[jnp.minimum(slot, E * cap - 1)]            # [N*K, d]
+    gathered = gathered * (keep[:, None] & (slot < E * cap)[:, None])
+    contrib = gathered.reshape(N, K, d) * gate[..., None].astype(x.dtype)
+    out = jnp.sum(contrib, axis=1).reshape(b, t, d)
+    return out, aux
+
+
+def _gather_lw(cfg: LMConfig, sh: Shardings, lw: Dict) -> Dict:
+    """Re-constrain the per-layer weight slices to drop the FSDP axis.
+
+    Placing the all-gather on the *sliced* (loop-index-dependent) weight
+    keeps it inside the scan body, so while-loop-invariant code motion
+    cannot hoist a full [L, ...] unsharded weight stack into live memory
+    (the 13 GB/device regression measured on command-r; EXPERIMENTS.md
+    §Perf iteration M1)."""
+    if sh.mesh is None or not cfg.gather_fsdp_in_body:
+        return lw
+    tp_size = sh.mesh.shape.get("model", 1)
+    h_tp = sh.tp if cfg.n_heads % max(tp_size, 1) == 0 else None
+    specs = {
+        "attn_norm": (None,), "ffn_norm": (None,),
+        "wq": (None, h_tp, None), "wk": (None, None, None),
+        "wv": (None, None, None), "wo": (h_tp, None, None),
+    }
+    if cfg.moe:
+        e_tp = sh.tp if cfg.n_experts % max(tp_size, 1) == 0 else None
+        specs.update({"router": (None, None),
+                      "w_gate": (e_tp, None, None),
+                      "w_up": (e_tp, None, None),
+                      "w_down": (e_tp, None, None)})
+    else:
+        f_tp = sh.tp if cfg.d_ff % max(tp_size, 1) == 0 else None
+        specs.update({"w_gate": (None, f_tp), "w_up": (None, f_tp),
+                      "w_down": (f_tp, None)})
+    return {k: sh.constrain(v, *specs[k]) for k, v in lw.items()}
+
+
+def _res_spec(cfg: LMConfig, sh: Shardings):
+    """Residual-stream sharding: sequence-parallel when enabled."""
+    if cfg.seq_shard_activations:
+        return (sh.dp, sh.tp, None)
+    return (sh.dp, None, None)
+
+
+def _layer(cfg: LMConfig, sh: Shardings, x: jax.Array, lw: Dict,
+           cos: jax.Array, sin: jax.Array):
+    """-> (h, aux_loss, k, v)."""
+    lw = _gather_lw(cfg, sh, lw)
+    attn, k, v = _attention_block(cfg, sh, lw,
+                                  rms_norm(x, lw["attn_norm"]), cos, sin)
+    # the two TP all-reduce outputs are checkpoint-named so the
+    # save_only_these_names remat policy can keep them and skip
+    # re-all-reducing in the recompute pass (EXPERIMENTS.md §Perf P1b)
+    attn = checkpoint_name(attn, "attn_out")
+    h = x + attn
+    h = sh.constrain(h, *_res_spec(cfg, sh))
+    hin = rms_norm(h, lw["ffn_norm"])
+    if cfg.moe:
+        out, aux = _moe_ffn(cfg, sh, lw, hin)
+    else:
+        out, aux = _dense_ffn(cfg, sh, lw, hin), jnp.float32(0.0)
+    out = checkpoint_name(out, "ffn_out")
+    h = h + out
+    return sh.constrain(h, *_res_spec(cfg, sh)), aux, k, v
+
+
+# ---------------------------------------------------------------------------
+# training forward
+# ---------------------------------------------------------------------------
+def forward_loss(cfg: LMConfig, sh: Shardings, params: Dict,
+                 tokens: jax.Array) -> jax.Array:
+    """Causal-LM loss for a [B, T] token batch."""
+    b, t = tokens.shape
+    h = params["embed"][tokens].astype(cfg.dtype)
+    h = sh.constrain(h, *_res_spec(cfg, sh))
+    cos, sin = rope_angles(jnp.arange(t), cfg.head_dim, cfg.rope_theta)
+
+    def body(carry, lw):
+        h = carry
+        h, aux, _, _ = _layer(cfg, sh, h, lw, cos, sin)
+        return h, aux
+
+    if cfg.remat and cfg.remat_policy == "save_tp_outputs":
+        layer_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "ffn_out"))
+    elif cfg.remat:
+        layer_fn = jax.checkpoint(body)
+    else:
+        layer_fn = body
+    h, auxs = jax.lax.scan(layer_fn, h, params["layers"])
+    h = rms_norm(h, params["final_norm"])
+    # re-assert the 2D embed sharding at the logits use-site so the
+    # cotangent (embed grad) comes back sharded rather than as a full
+    # [V/tp, D] fp32 buffer
+    fsdp = ("data" if sh.mesh is not None
+            and "data" in sh.mesh.axis_names else None)
+    emb = sh.constrain(params["embed"], sh.tp, fsdp)
+    logits = jnp.einsum("btd,vd->btv", h, emb)
+    loss = causal_lm_loss(logits, tokens, sh)
+    if cfg.moe:
+        loss = loss + 0.01 * jnp.mean(auxs)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# inference: prefill + decode
+# ---------------------------------------------------------------------------
+def prefill(cfg: LMConfig, sh: Shardings, params: Dict, tokens: jax.Array
+            ) -> Tuple[jax.Array, Dict]:
+    """[B, T] prompt -> (last-position logits [B, V], kv cache).
+
+    Cache layout: k/v [L, B, T, KV, dh] (sequence-sharded for the long
+    cells; see cache_specs)."""
+    b, t = tokens.shape
+    h = params["embed"][tokens].astype(cfg.dtype)
+    h = sh.constrain(h, sh.dp, None, None)
+    cos, sin = rope_angles(jnp.arange(t), cfg.head_dim, cfg.rope_theta)
+
+    def body(h, lw):
+        h, _, k, v = _layer(cfg, sh, h, lw, cos, sin)
+        # cache stash: keep the per-layer k/v sequence-sharded on the
+        # model axis so the stacked scan output is never materialised
+        # unsharded (matches cache_specs for the decode step)
+        k = sh.constrain(k, sh.dp, sh.tp, None, None)
+        v = sh.constrain(v, sh.dp, sh.tp, None, None)
+        return h, (k, v)
+
+    layer_fn = jax.checkpoint(body) if cfg.remat else body
+    h, (ck, cv) = jax.lax.scan(layer_fn, h, params["layers"])
+    h = rms_norm(h[:, -1:], params["final_norm"])
+    logits = jnp.einsum("btd,vd->btv", h, params["embed"])[:, 0]
+    return logits, {"k": ck, "v": cv, "len": jnp.full((), t, jnp.int32)}
+
+
+def decode_step(cfg: LMConfig, sh: Shardings, params: Dict, cache: Dict,
+                token: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One decode step: token [B] + cache -> (logits [B, V], cache).
+
+    fori_loop over layers with dynamic weight slices keeps cache updates
+    in place (dynamic_update_slice on the stacked [L, ...] cache)."""
+    L = cfg.n_layers
+    pos = cache["len"]
+    b = token.shape[0]
+    h = params["embed"][token[:, None]].astype(cfg.dtype)   # [B, 1, D]
+    cos, sin = rope_angles(pos[None], cfg.head_dim, cfg.rope_theta)
+    ck, cv = cache["k"], cache["v"]
+    t_max = ck.shape[2]
+
+    def body(l, carry):
+        h, ck, cv = carry
+        lw = jax.tree_util.tree_map(
+            lambda w: jax.lax.dynamic_index_in_dim(w, l, 0, keepdims=False),
+            params["layers"])
+        xn = rms_norm(h, lw["attn_norm"])
+        q = jnp.einsum("btd,dhk->bthk", xn, lw["wq"])
+        k = jnp.einsum("btd,dhk->bthk", xn, lw["wk"])
+        v = jnp.einsum("btd,dhk->bthk", xn, lw["wv"])
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        ckl = jax.lax.dynamic_slice_in_dim(ck, l, 1, axis=0)[0]
+        cvl = jax.lax.dynamic_slice_in_dim(cv, l, 1, axis=0)[0]
+        ckl = jax.lax.dynamic_update_slice(
+            ckl, k.astype(ckl.dtype), (0, pos, 0, 0))
+        cvl = jax.lax.dynamic_update_slice(
+            cvl, v.astype(cvl.dtype), (0, pos, 0, 0))
+        o = gqa_attention(q, ckl, cvl, causal=False, kv_len=pos + 1)
+        attn = jnp.einsum("bthk,hkd->btd", o, lw["wo"])
+        hh = h + attn
+        hin = rms_norm(hh, lw["ffn_norm"])
+        if cfg.moe:
+            out, _ = _moe_ffn(cfg, sh, lw, hin)
+        else:
+            out = _dense_ffn(cfg, sh, lw, hin)
+        hh = hh + out
+        ck = jax.lax.dynamic_update_slice(ck, ckl[None], (l, 0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, cvl[None], (l, 0, 0, 0, 0))
+        return hh, ck, cv
+
+    h, ck, cv = jax.lax.fori_loop(0, L, body, (h, ck, cv))
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("btd,vd->btv", h, params["embed"])[:, 0]
+    return logits, {"k": ck, "v": cv, "len": pos + 1}
+
+
+def cache_specs(cfg: LMConfig, sh: Shardings, batch: int, t_max: int,
+                *, shard_seq: bool) -> Dict:
+    """ShapeDtypeStructs + PartitionSpecs for the decode cache."""
+    kv, dh, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    shape = (L, batch, t_max, kv, dh)
+    if shard_seq:
+        # long-context: batch too small to cover the mesh; sequence is
+        # sharded over every axis (flash-decoding-style combine)
+        seq_axes = tuple(a for a in ("pod", "data", "model")
+                         if sh.mesh is not None
+                         and a in sh.mesh.axis_names)
+        spec = sh.spec(None, None, seq_axes or None, None, None)
+    else:
+        # batch on (pod, data) + sequence on model: the 32k x 128-batch
+        # caches are hundreds of GB and must shard on both
+        spec = sh.spec(None, sh.dp, sh.tp, None, None)
+    sds = jax.ShapeDtypeStruct(shape, cfg.dtype)
+    return {
+        "k": (sds, spec), "v": (sds, spec),
+        "len": (jax.ShapeDtypeStruct((), jnp.int32), sh.spec()),
+    }

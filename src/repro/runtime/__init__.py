@@ -1,0 +1,3 @@
+from .fault import (ElasticTrainer, FailureInjector, StragglerMonitor)
+
+__all__ = ["ElasticTrainer", "FailureInjector", "StragglerMonitor"]

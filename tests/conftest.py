@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests run against the single default CPU device (the 512-device flag is
+# dryrun.py-only, per the launch design).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

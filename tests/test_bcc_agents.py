@@ -1,0 +1,127 @@
+"""Cut-nodes/BCCs vs brute force + agent/DRA invariants (paper §IV)."""
+import heapq
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.agents import compute_dras
+from repro.core.bcc import biconnected_components
+from repro.core.graph import Graph, random_graph, road_like, tree_with_blobs
+
+
+def brute_cut_nodes(g: Graph) -> np.ndarray:
+    def ncc(skip=None):
+        seen = np.zeros(g.n, bool)
+        if skip is not None:
+            seen[skip] = True
+        cnt = 0
+        for s in range(g.n):
+            if seen[s]:
+                continue
+            cnt += 1
+            stack = [s]
+            seen[s] = True
+            while stack:
+                x = stack.pop()
+                a, b = g.indptr[x], g.indptr[x + 1]
+                for y in g.indices[a:b]:
+                    if not seen[y] and y != skip:
+                        seen[y] = True
+                        stack.append(int(y))
+        return cnt
+    base = ncc()
+    out = np.zeros(g.n, bool)
+    for v in range(g.n):
+        if g.indptr[v + 1] > g.indptr[v]:
+            out[v] = ncc(v) > base
+    return out
+
+
+def dijkstra_all(g: Graph, s: int) -> np.ndarray:
+    dist = np.full(g.n, np.inf)
+    dist[s] = 0
+    pq = [(0.0, s)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > dist[u]:
+            continue
+        a, b = g.indptr[u], g.indptr[u + 1]
+        for v, w in zip(g.indices[a:b], g.weights[a:b]):
+            nd = d + w
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, int(v)))
+    return dist
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_cut_nodes_match_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 35))
+    g = random_graph(n, int(rng.integers(n - 1, 3 * n)), seed=seed)
+    res = biconnected_components(g)
+    assert (res.cut == brute_cut_nodes(g)).all()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_every_edge_in_exactly_one_bcc(seed):
+    g = random_graph(20, 40, seed=seed)
+    res = biconnected_components(g)
+    cover = 0
+    for comp in res.bcc_nodes:
+        s = set(comp.tolist())
+        cover += sum(1 for u, v in zip(g.edge_u, g.edge_v)
+                     if u in s and v in s)
+    assert cover == g.m
+
+
+@given(st.integers(0, 10_000))
+def test_bcc_runs_on_random_graphs(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 25))
+    g = random_graph(n, int(rng.integers(1, 2 * n)), seed=seed)
+    res = biconnected_components(g)
+    assert res.n_bcc >= 1
+    # cut nodes belong to >= 2 BCCs (defining property)
+    membership = np.zeros(g.n)
+    for comp in res.bcc_nodes:
+        membership[comp] += 1
+    assert (membership[res.cut] >= 2).all()
+
+
+@pytest.mark.parametrize("gname,factory", [
+    ("blobs", lambda: tree_with_blobs(8, 4, seed=2)),
+    ("road", lambda: road_like(1500, seed=3)),
+])
+def test_dra_invariants(gname, factory):
+    """Props 3-9: pieces sealed by the agent, exact distances, bounded
+    size, disjoint DRAs."""
+    g = factory()
+    dras = compute_dras(g, c=2)
+    assert dras.n_nontrivial_agents > 0
+    seen = np.zeros(g.n, bool)
+    for a in dras.agents:
+        d = dijkstra_all(g, a.agent)
+        np.testing.assert_allclose(d[a.nodes], a.dist_to_agent)
+        assert not seen[a.nodes].any(), "DRAs must be disjoint"
+        seen[a.nodes] = True
+        for piece in a.pieces:
+            assert piece.size <= dras.threshold
+            pset = set(piece.tolist())
+            assert a.agent in pset
+            for x in piece:
+                if x == a.agent:
+                    continue
+                nbrs, _ = g.neighbors(int(x))
+                assert all(int(y) in pset for y in nbrs), \
+                    "piece leaks around its agent"
+
+
+def test_shrink_plus_represented_partitions_nodes():
+    g = road_like(1200, seed=5)
+    dras = compute_dras(g, c=2)
+    rep = dras.represented_mask()
+    sh = dras.shrink_nodes()
+    assert rep.sum() + sh.size == g.n
+    assert not rep[sh].any()

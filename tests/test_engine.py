@@ -1,0 +1,113 @@
+"""DISLAND end-to-end: host engine, device engine, baselines — all
+validated against Dijkstra ground truth."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dijkstra
+from repro.core.agent_wrap import AgentAccelerated, PlainDijkstra
+from repro.core.arcflags import ArcFlags
+from repro.core.ch import CH
+from repro.core.device_engine import (build_device_index, serve_one_to_all,
+                                      serve_step)
+from repro.core.engine import DislandEngine
+from repro.core.graph import road_like, tree_with_blobs
+from repro.core.supergraph import build_index
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    g = road_like(1600, seed=21)
+    ix = build_index(g)
+    return g, ix
+
+
+def _random_pairs(g, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, g.n, size=(n, 2))
+
+
+def test_disland_engine_exact(small_world):
+    g, ix = small_world
+    eng = DislandEngine(ix)
+    for s, t in _random_pairs(g, 60, seed=1):
+        want = dijkstra.pair(g, int(s), int(t))
+        got = eng.query(int(s), int(t))
+        if np.isinf(want):
+            assert np.isinf(got)
+        else:
+            assert abs(got - want) < 1e-6, (s, t, got, want)
+
+
+def test_device_engine_matches_host(small_world):
+    g, ix = small_world
+    dix = build_device_index(ix)
+    pairs = _random_pairs(g, 120, seed=2)
+    s = jnp.asarray(pairs[:, 0], jnp.int32)
+    t = jnp.asarray(pairs[:, 1], jnp.int32)
+    got = np.asarray(serve_step(dix, s, t))
+    for i, (a, b) in enumerate(pairs):
+        want = dijkstra.pair(g, int(a), int(b))
+        if np.isinf(want):
+            assert np.isinf(got[i])
+        else:
+            assert abs(got[i] - want) < 1e-3, (a, b, got[i], want)
+
+
+def test_device_one_to_all(small_world):
+    g, ix = small_world
+    dix = build_device_index(ix)
+    src = 17
+    got = np.asarray(serve_one_to_all(dix, src))
+    want = dijkstra.sssp(g, src)
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-5)
+    assert np.isinf(got[~fin]).all()
+
+
+def test_super_graph_is_small(small_world):
+    g, ix = small_world
+    sup = ix.super_graph.graph
+    assert sup.n < 0.5 * g.n
+    assert sup.m < g.m
+
+
+def test_extra_space_is_moderate(small_world):
+    """Paper: auxiliary structures ~ 1/2 of the input graph edges."""
+    g, ix = small_world
+    extra = ix.extra_space_edges()
+    assert extra["total"] < 2 * g.m
+
+
+@pytest.mark.parametrize("name,factory", [
+    ("ch", lambda g: CH(g)),
+    ("arcflags", lambda g: ArcFlags(g, n_regions=8)),
+    ("agent_ch", lambda g: AgentAccelerated(g, lambda s: CH(s))),
+    ("agent_bidij", lambda g: AgentAccelerated(
+        g, lambda s: PlainDijkstra(s, bidirectional=True))),
+])
+def test_baselines_exact(name, factory):
+    g = road_like(900, seed=4)
+    algo = factory(g)
+    for s, t in _random_pairs(g, 25, seed=3):
+        want = dijkstra.pair(g, int(s), int(t))
+        got = algo.query(int(s), int(t))
+        if np.isinf(want):
+            assert np.isinf(got)
+        else:
+            assert abs(got - want) < 1e-6, (name, s, t, got, want)
+
+
+def test_blob_graph_same_dra_cases():
+    g = tree_with_blobs(10, 5, seed=6)
+    ix = build_index(g)
+    eng = DislandEngine(ix)
+    dix = build_device_index(ix)
+    pairs = _random_pairs(g, 80, seed=7)
+    s = jnp.asarray(pairs[:, 0], jnp.int32)
+    t = jnp.asarray(pairs[:, 1], jnp.int32)
+    got = np.asarray(serve_step(dix, s, t))
+    for i, (a, b) in enumerate(pairs):
+        want = dijkstra.pair(g, int(a), int(b))
+        assert abs(eng.query(int(a), int(b)) - want) < 1e-6
+        assert abs(got[i] - want) < 1e-3

@@ -1,0 +1,112 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles, in
+interpret mode (force='pallas'), plus semiring property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dijkstra
+from repro.core.graph import random_graph
+from repro.kernels import ops, ref
+
+
+def _rand(shape, rng, inf_frac=0.2, dtype=np.float32):
+    x = rng.random(shape).astype(np.float32) * 10
+    x[rng.random(shape) < inf_frac] = np.inf
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (5, 7, 3), (64, 200, 64),
+                                   (130, 128, 257), (128, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_minplus_matches_ref(m, k, n, dtype):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    a = _rand((m, k), rng, dtype=dtype)
+    b = _rand((k, n), rng, dtype=dtype)
+    got = ops.minplus(a, b, bm=8, bn=128, bk=8, force="pallas")
+    want = ref.minplus_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@pytest.mark.parametrize("m,k,n", [(5, 7, 3), (64, 100, 33)])
+def test_minplus_accum_matches_ref(m, k, n):
+    rng = np.random.default_rng(0)
+    a = _rand((m, k), rng)
+    b = _rand((k, n), rng)
+    c = _rand((m, n), rng, inf_frac=0.5)
+    got = ops.minplus_accum(c, a, b, bm=8, bn=128, bk=8, force="pallas")
+    np.testing.assert_allclose(got, ref.minplus_accum_ref(c, a, b),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("b,n", [(1, 8), (3, 16), (2, 64)])
+def test_fw_batch_matches_ref(b, n):
+    rng = np.random.default_rng(b * 100 + n)
+    d = _rand((b, n, n), rng, inf_frac=0.5)
+    d = jnp.minimum(d, jnp.transpose(d, (0, 2, 1)))
+    got = ops.fw_batch(d, force="pallas")
+    np.testing.assert_allclose(got, ref.fw_batch_ref(d), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,block", [(10, 8), (100, 32), (64, 64)])
+def test_fw_blocked_matches_ref(n, block):
+    rng = np.random.default_rng(n)
+    d = _rand((n, n), rng, inf_frac=0.6)
+    d = jnp.minimum(d, d.T)
+    got = ops.fw_apsp(d, block=block, force="pallas")
+    np.testing.assert_allclose(got, ref.fw_ref(d), rtol=1e-6)
+
+
+def test_fw_matches_dijkstra():
+    """APSP kernel vs heap Dijkstra on a real graph."""
+    g = random_graph(40, 80, seed=9)
+    adj = np.full((g.n, g.n), np.inf, np.float32)
+    adj[g.edge_u, g.edge_v] = g.edge_w
+    adj[g.edge_v, g.edge_u] = g.edge_w
+    got = np.asarray(ops.fw_apsp(jnp.asarray(adj), block=16,
+                                 force="pallas"))
+    for s in range(0, g.n, 7):
+        want = dijkstra.sssp(g, s)
+        fin = np.isfinite(want)
+        np.testing.assert_allclose(got[s][fin], want[fin], rtol=1e-5)
+
+
+# ---- property tests --------------------------------------------------------
+@given(st.integers(0, 10_000))
+@settings(max_examples=15)
+def test_fw_idempotent(seed):
+    """APSP is a fixpoint: fw(fw(D)) == fw(D)."""
+    rng = np.random.default_rng(seed)
+    d = _rand((1, 12, 12), rng, inf_frac=0.4)
+    d = jnp.minimum(d, jnp.transpose(d, (0, 2, 1)))
+    once = ops.fw_batch(d, force="ref")
+    twice = ops.fw_batch(once, force="ref")
+    np.testing.assert_allclose(once, twice, rtol=1e-6)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15)
+def test_minplus_associative(seed):
+    """(A (x) B) (x) C == A (x) (B (x) C) — semiring associativity."""
+    rng = np.random.default_rng(seed)
+    a = _rand((6, 5), rng)
+    b = _rand((5, 7), rng)
+    c = _rand((7, 4), rng)
+    left = ref.minplus_ref(ref.minplus_ref(a, b), c)
+    right = ref.minplus_ref(a, ref.minplus_ref(b, c))
+    np.testing.assert_allclose(left, right, rtol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15)
+def test_minplus_triangle_inequality(seed):
+    """D (x) D <= D for any APSP matrix D (metric closure)."""
+    rng = np.random.default_rng(seed)
+    d = _rand((1, 10, 10), rng, inf_frac=0.3)
+    d = jnp.minimum(d, jnp.transpose(d, (0, 2, 1)))
+    apsp = ops.fw_batch(d, force="ref")[0]
+    sq = ref.minplus_ref(apsp, apsp)
+    assert bool(jnp.all(sq >= apsp - 1e-4))

@@ -1,0 +1,126 @@
+"""REF graphs, vertex-cover landmark covers (Thm 2), hybrid covers,
+and the BGP partitioner (paper §III + §V)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import dijkstra
+from repro.core.graph import Graph, random_graph, road_like
+from repro.core.landmarks import (hybrid_cover, landmark_cover_2approx,
+                                  landmark_cover_cost, ref_graph,
+                                  vertex_cover_2approx)
+from repro.core.partition import partition_bgp
+
+
+def all_pairs(g: Graph) -> np.ndarray:
+    return np.stack([dijkstra.sssp(g, s) for s in range(g.n)])
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_ref_graph_preserves_distances(seed):
+    g = random_graph(25, 60, seed=seed)
+    ref = ref_graph(g)
+    assert ref.m <= g.m
+    np.testing.assert_allclose(all_pairs(ref), all_pairs(g))
+
+
+def test_vertex_cover_covers_every_edge():
+    g = random_graph(40, 90, seed=3)
+    vc = vertex_cover_2approx(g)
+    inv = np.zeros(g.n, bool)
+    inv[vc] = True
+    assert (inv[g.edge_u] | inv[g.edge_v]).all()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_landmark_cover_property_on_ref_graph(seed):
+    """Theorem 2: a vertex cover of an REF graph is a landmark cover —
+    for every pair some landmark lies on a shortest path."""
+    g = random_graph(18, 30, seed=seed)
+    cover, ref = landmark_cover_2approx(g)
+    dist = all_pairs(ref)
+    lm = set(int(x) for x in cover)
+    for s in range(ref.n):
+        for t in range(ref.n):
+            if s == t or not np.isfinite(dist[s, t]):
+                continue
+            ok = any(abs(dist[s, x] + dist[x, t] - dist[s, t]) < 1e-9
+                     for x in lm)
+            assert ok, (s, t)
+
+
+def test_landmark_cover_cost_accounting():
+    g = road_like(900, seed=1)
+    cover, _ = landmark_cover_2approx(g)
+    cost = landmark_cover_cost(g, cover)
+    # paper Table I: landmarks are a large fraction of nodes and the
+    # cover dwarfs the graph
+    assert 0.2 < cost["frac_nodes"] < 1.0
+    assert cost["ratio"] > 10
+    assert cost["lower_bound"] == len(cover) // 2
+
+
+@pytest.mark.parametrize("use_cost_model", [True, False])
+def test_hybrid_cover_preserves_boundary_distances(use_cost_model):
+    g = road_like(700, seed=2)
+    rng = np.random.default_rng(0)
+    boundary = rng.choice(g.n, size=12, replace=False)
+    cov = hybrid_cover(g, boundary, use_cost_model=use_cost_model)
+    # rebuild a graph from enforced edges only; boundary-to-boundary
+    # distances must match the original exactly
+    eu, ev, ew = [], [], []
+    for (u, x, d) in cov.landmark_edges:
+        eu.append(int(u)); ev.append(int(x)); ew.append(d)
+    for (a, b, d) in cov.direct_edges:
+        eu.append(int(a)); ev.append(int(b)); ew.append(d)
+    nodes = sorted(set(eu) | set(ev) | set(int(b) for b in boundary))
+    remap = {x: i for i, x in enumerate(nodes)}
+    sg = Graph.from_edges(len(nodes), [remap[x] for x in eu],
+                          [remap[x] for x in ev], ew)
+    for i, b1 in enumerate(boundary):
+        want = dijkstra.sssp(g, int(b1))
+        got = dijkstra.sssp(sg, remap[int(b1)])
+        for b2 in boundary[i + 1:]:
+            w = want[int(b2)]
+            gg = got[remap[int(b2)]]
+            if np.isfinite(w):
+                assert abs(gg - w) < 1e-6, (b1, b2, gg, w)
+
+
+def test_hybrid_cover_cost_model_reduces_edges():
+    g = road_like(900, seed=5)
+    rng = np.random.default_rng(1)
+    boundary = rng.choice(g.n, size=14, replace=False)
+    with_cm = hybrid_cover(g, boundary, use_cost_model=True)
+    without = hybrid_cover(g, boundary, use_cost_model=False)
+    # paper Table V: the cost model never increases enforced edges
+    assert with_cm.n_enforced_edges <= without.n_enforced_edges
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(3))
+def test_partition_respects_gamma_and_covers(seed):
+    g = road_like(1500, seed=seed)
+    gamma = 2 * int(np.sqrt(g.n))
+    part = partition_bgp(g, gamma, seed=seed)
+    sizes = np.bincount(part.labels)
+    assert sizes.max() <= gamma
+    assert sizes.sum() == g.n
+    assert part.n_fragments >= g.n // gamma
+
+
+def test_partition_boundary_vs_edge_cut_bound():
+    """Paper §V key observation: |B| <= 2 |E_B|."""
+    g = road_like(1200, seed=7)
+    part = partition_bgp(g, 2 * int(np.sqrt(g.n)))
+    b = part.boundary_mask(g).sum()
+    assert b <= 2 * part.edge_cut(g)
+
+
+@given(st.integers(0, 1000))
+def test_partition_random_graphs(seed):
+    g = random_graph(30, 60, seed=seed)
+    part = partition_bgp(g, 10, seed=0)
+    sizes = np.bincount(part.labels, minlength=part.n_fragments)
+    assert sizes.max() <= 10
+    assert (part.labels >= 0).all()

@@ -1,0 +1,205 @@
+"""Optimizer, checkpoint manager, fault runtime, SSSP, data pipelines."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.core import dijkstra
+from repro.core.graph import road_like
+from repro.core.sssp import apsp_from_sources, bellman_ford, sources_init
+from repro.data import (NeighborSampler, grid_distance_queries,
+                        gnn_molecule_batch, lm_batches, recsys_batches)
+from repro.optim import (adamw_init, adamw_update, cosine_schedule,
+                         dequantize_int8, quantize_int8)
+from repro.runtime import (ElasticTrainer, FailureInjector,
+                           StragglerMonitor)
+from repro.runtime.fault import SimulatedNodeFailure
+
+
+# ---- optimizer -------------------------------------------------------------
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - 1.0) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, lr=5e-2,
+                                      weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.ones(3), atol=1e-2)
+
+
+def test_adamw_serialize_matches_parallel():
+    params = {"a": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((4,))}
+    grads = {"a": jnp.ones((2, 3)) * 0.1, "b": -jnp.ones((4,)) * 0.2}
+    o1 = adamw_init(params)
+    p1, s1, _ = adamw_update(params, grads, o1, lr=1e-2, serialize=False)
+    o2 = adamw_init(params)
+    p2, s2, _ = adamw_update(params, grads, o2, lr=1e-2, serialize=True)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(a, b)
+
+
+def test_grad_scale_equals_prescaled():
+    params = {"w": jnp.array([1.0, 2.0])}
+    grads = {"w": jnp.array([8.0, -4.0])}
+    p1, _, m1 = adamw_update(params, grads, adamw_init(params), lr=1e-2,
+                             grad_scale=0.25)
+    pre = {"w": grads["w"] * 0.25}
+    p2, _, m2 = adamw_update(params, pre, adamw_init(params), lr=1e-2)
+    np.testing.assert_allclose(p1["w"], p2["w"], rtol=1e-6)
+    np.testing.assert_allclose(float(m1["grad_norm"]),
+                               float(m2["grad_norm"]), rtol=1e-6)
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(f(jnp.int32(0))) == 0.0
+    assert abs(float(f(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(f(jnp.int32(100))) < 1e-6
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20)
+def test_int8_quantization_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32) * 10)
+    q, scale = quantize_int8(x)
+    back = dequantize_int8(q, scale)
+    max_err = float(jnp.max(jnp.abs(back - x)))
+    assert max_err <= float(scale) * 0.5 + 1e-6
+
+
+# ---- checkpoint -------------------------------------------------------------
+def test_checkpoint_roundtrip_retention_atomicity(tmp_path):
+    ck = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.arange(10.0), "opt": {"m": jnp.ones((3, 3))}}
+    for step in [5, 10, 15]:
+        ck.save(step, jax.tree_util.tree_map(lambda x: x * step, state))
+    assert ck.all_steps() == [10, 15]   # retention
+    step, got = ck.restore(state)
+    assert step == 15
+    np.testing.assert_allclose(got["w"], np.arange(10.0) * 15)
+    # stale tmp dirs are GC'd on next save
+    os.makedirs(str(tmp_path / "step_000000099.tmp-123"), exist_ok=True)
+    ck.save(20, state)
+    assert not any(".tmp" in n for n in os.listdir(tmp_path))
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    ck = CheckpointManager(str(tmp_path))
+    ck.save(1, {"a": jnp.ones(3)})
+    with pytest.raises(ValueError):
+        ck.restore({"a": jnp.ones(3), "b": jnp.ones(2)})
+
+
+# ---- runtime ---------------------------------------------------------------
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(factor=3.0)
+    for _ in range(20):
+        mon.observe(0.1)
+    assert mon.observe(1.0) is True
+    assert mon.observe(0.1) is False
+    assert mon.summary()["stragglers"] == 1
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector(fail_at_step=3)
+    inj.check(2)
+    with pytest.raises(SimulatedNodeFailure):
+        inj.check(3)
+    inj.check(3)  # second time: already failed, no raise
+
+
+def test_elastic_trainer_recovers_from_failure(tmp_path):
+    """Full restart path: fail at step 7, restore from step 5, finish."""
+    ck = CheckpointManager(str(tmp_path), keep=3)
+
+    def make_mesh(n):
+        return None
+
+    def make_step(mesh):
+        def step(state, batch):
+            return {"x": state["x"] + batch}
+        return step, None
+
+    def init_state(mesh):
+        return {"x": jnp.zeros(())}
+
+    def batches():
+        while True:
+            yield jnp.ones(())
+
+    tr = ElasticTrainer(ckpt=ck, make_mesh=make_mesh,
+                        make_step=make_step, init_state=init_state,
+                        checkpoint_every=5)
+    inj = FailureInjector(fail_at_step=7)
+    out = tr.run(12, batches(), injector=inj)
+    assert out["restarts"] == 1
+    assert out["final_step"] == 12
+    _, state = ck.restore({"x": jnp.zeros(())})
+    assert float(state["x"]) == 12.0
+
+
+# ---- device SSSP -------------------------------------------------------------
+def test_bellman_ford_matches_dijkstra():
+    g = road_like(600, seed=11)
+    src = jnp.asarray(np.concatenate([g.edge_u, g.edge_v]), jnp.int32)
+    dst = jnp.asarray(np.concatenate([g.edge_v, g.edge_u]), jnp.int32)
+    w = jnp.asarray(np.concatenate([g.edge_w, g.edge_w]), jnp.float32)
+    sources = jnp.asarray([0, 5, 17], jnp.int32)
+    got = np.asarray(apsp_from_sources(src, dst, w, sources, n=g.n))
+    for i, s in enumerate([0, 5, 17]):
+        want = dijkstra.sssp(g, s)
+        fin = np.isfinite(want)
+        np.testing.assert_allclose(got[i][fin], want[fin], rtol=1e-5)
+        assert np.isinf(got[i][~fin]).all()
+
+
+def test_bellman_ford_padding_edges_are_inert():
+    src = jnp.asarray([0, 1, 0], jnp.int32)
+    dst = jnp.asarray([1, 2, 0], jnp.int32)
+    w = jnp.asarray([1.0, 2.0, np.inf], jnp.float32)
+    out = bellman_ford(src, dst, w, sources_init(
+        jnp.asarray([0], jnp.int32), 3), n=3)
+    np.testing.assert_allclose(np.asarray(out)[0], [0.0, 1.0, 3.0])
+
+
+# ---- data ---------------------------------------------------------------
+def test_neighbor_sampler_produces_valid_subgraph():
+    g = road_like(800, seed=13)
+    samp = NeighborSampler(g, fanouts=(5, 3), d_feat=8, n_classes=4)
+    rng = np.random.default_rng(0)
+    batch = samp.sample(rng.integers(0, g.n, 16))
+    n = batch["node_feat"].shape[0]
+    assert batch["edge_src"].max() < n
+    assert batch["edge_dst"].max() < n
+    assert batch["loss_mask"].sum() == 16
+    assert batch["labels"].shape == (n,)
+
+
+def test_grid_queries_bucketed():
+    g = road_like(2000, seed=14)
+    qs = grid_distance_queries(g, n_per_set=20, n_sets=6, seed=0)
+    assert set(qs) == set(range(1, 7))
+    for i, pairs in qs.items():
+        assert pairs.shape[1] == 2
+
+
+def test_generators_deterministic():
+    a = next(lm_batches(2, 8, 100, seed=3))
+    b = next(lm_batches(2, 8, 100, seed=3))
+    np.testing.assert_array_equal(a, b)
+    ra = next(recsys_batches(4, 3, 50, 2, seed=5))
+    rb = next(recsys_batches(4, 3, 50, 2, seed=5))
+    np.testing.assert_array_equal(ra["sparse_ids"], rb["sparse_ids"])
+    m = gnn_molecule_batch(3, 8, 12, 4, seed=7)
+    assert m["node_feat"].shape == (24, 4)
