@@ -1,14 +1,36 @@
 """Benchmark harness entry point: one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table3,exp5]
+    PYTHONPATH=src python -m benchmarks.run [--only table3,exp5] \
+        [--json BENCH_serve.json]
 
-Prints CSV rows (section,graph,...) so downstream tooling can diff runs.
+Prints CSV rows (section,graph,...) so downstream tooling can diff
+runs; --json additionally appends structured perf records (section,
+graph, qps, us_per_query) for the latency sections, so the serve-path
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+
+def _perf_records(rows: list[str]) -> list[dict]:
+    """Extract (section, graph, qps, us_per_query) from latency rows."""
+    records = []
+    for row in rows:
+        parts = row.split(",")
+        if parts[0] == "exp5" and parts[1] != "graph":
+            us = float(parts[4])
+            records.append({
+                "section": "exp5",
+                "graph": parts[1],
+                "bucket": parts[2],
+                "algo": parts[3],
+                "us_per_query": us,
+                "qps": round(1e6 / us, 1) if us > 0 else float("inf"),
+            })
+    return records
 
 
 def main() -> None:
@@ -18,6 +40,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section prefixes")
+    ap.add_argument("--json", default=None,
+                    help="append structured perf records to this file")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     out: list[str] = []
@@ -31,6 +55,12 @@ def main() -> None:
         out.append(f"# {name} took {time.perf_counter() - t0:.1f}s")
     out.append(f"# total {time.perf_counter() - t_all:.1f}s")
     print("\n".join(out))
+    if args.json:
+        from repro.perflog import append_records
+        records = _perf_records(out)
+        append_records(args.json, records)
+        print(f"# {len(records)} perf records appended to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.core import dijkstra
 from repro.core.device_engine import build_device_index, serve_step
+from repro.core.dist_engine import QueryPlanner
 from repro.core.engine import DislandEngine
 from repro.core.graph import road_like
 from repro.core.supergraph import build_index
@@ -42,6 +43,13 @@ def main() -> None:
     dist = jax.jit(lambda a, b: serve_step(dix, a, b))(qs, qt)
     print(f"batched device engine: {dist.shape[0]} queries, "
           f"mean dist {float(jnp.mean(jnp.where(jnp.isfinite(dist), dist, 0))):.1f}")
+
+    # 4. query planner: bucket the batch by case so each jitted
+    #    sub-program does only its own work
+    planner = QueryPlanner(dix)
+    dist_p = planner(np.asarray(qs), np.asarray(qt))
+    assert np.allclose(np.asarray(dist), dist_p, rtol=1e-4, equal_nan=False)
+    print(f"planner buckets: {planner.last_counts} (matches serve_step)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 gate + serve smoke, the one command a PR must keep green:
+#   bash scripts/check.sh [--fast]
+# --fast skips the pytest suite (smokes only).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== tier-1 tests =="
+    python -m pytest -x -q
+fi
+
+echo "== serve smoke (2k nodes, CPU, validated) =="
+python -m repro.launch.serve --nodes 2000 --batches 2 --batch-size 256 \
+    --validate 64 --json ""
+
+echo "== quickstart =="
+python examples/quickstart.py
+
+echo "ALL CHECKS PASSED"

@@ -1,0 +1,25 @@
+"""jax version-portability shims.
+
+The container pins jax 0.4.x, where ``shard_map`` still lives under
+``jax.experimental`` and ``Mesh`` has no ``axis_types``.  Newer jax
+moves both into the public namespace; these helpers pick whichever is
+available so the rest of the codebase stays version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.6
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types wherever the API supports it."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)

@@ -5,14 +5,21 @@ every query path becomes gathers + (min,+) algebra over padded tensors.
 
 Offline (build_device_index, device-resident products):
   * per-fragment dense APSP        [k, maxf, maxf]   (Pallas blocked FW)
+  * boundary-row table             [k, maxf, mb]     (node -> boundary)
   * SUPER boundary x boundary APSP [S+1, S+1]        (batched BF / FW)
-  * per-piece APSP, size-bucketed  [P_b, mp_b, mp_b] (Pallas batched FW)
+  * per-piece APSP, flattened      [sum_b P_b*mp_b^2] (+ per-node
+    base/stride so one gather answers any same-piece query)
   * per-node lookup vectors        agent/fragment/piece ids + positions
 
 Online (serve_step — one jitted program per query batch):
   dist(s,t) = same-DRA answer                                (case 1)
-            | d(s,u_s) + min(local, min-plus combine) + d(u_t,t)  (case 2)
-  combine = min_{b1,b2} row_s[b1] + D_super[b1,b2] + row_t[b2].
+            | d(s,u_s) + min(local, combine) + d(u_t,t)      (case 2)
+  combine = min_{b1,b2} row_s[b1] + D_super[b1,b2] + row_t[b2],
+computed without ever materializing a [q, mb, mb] block: on TPU the
+boundary rows are scattered into SUPER coordinates and contracted by
+the fused minplus_twoside Pallas kernel (D_super tiles stay resident
+in VMEM); on CPU an x-chunked gather keeps the peak intermediate at
+[q, 8, mb] (DESIGN.md §4).
 
 Everything is exact (validated against the host engine).
 """
@@ -41,18 +48,20 @@ class DeviceIndex:
     dist_to_agent: jax.Array     # f32
     frag_of: jax.Array           # int32 (fragment of each *shrink* node)
     pos_in_frag: jax.Array       # int32
-    piece_bucket: jax.Array      # int32 (-1 for non-represented)
-    piece_idx: jax.Array         # int32 index within bucket
+    piece_gid: jax.Array         # int32 global piece id (-1 if none)
     pos_in_piece: jax.Array      # int32
+    piece_base: jax.Array        # int32 offset of piece block in flat
+    piece_stride: jax.Array      # int32 row stride (= padded piece size)
     # fragments
     frag_apsp: jax.Array         # f32 [k, maxf, maxf]
+    brow: jax.Array              # f32 [k, maxf, mb] node->boundary rows
     bpos: jax.Array              # int32 [k, mb] boundary position in frag
     bvalid: jax.Array            # bool [k, mb]
     bnd_super: jax.Array         # int32 [k, mb] super id (S = sentinel)
     # super graph
     d_super: jax.Array           # f32 [S+1, S+1] (+inf sentinel row/col)
-    # pieces (one APSP tensor per size bucket)
-    piece_apsp: List[jax.Array]  # f32 [P_b, mp_b, mp_b]
+    # pieces: every bucketed APSP tensor, flattened end to end
+    piece_flat: jax.Array        # f32 [sum_b P_b * mp_b * mp_b]
 
     def tree_flatten(self):
         fields = dataclasses.fields(self)
@@ -102,6 +111,12 @@ def build_device_index(ix: DislandIndex, *, force=None) -> DeviceIndex:
         bvalid[fi, :nb] = True
         bnd_super[fi, :nb] = super_id_of[f.nodes[f.boundary_local]]
     frag_apsp = ops.fw_batch(jnp.asarray(frag_adj), force=force)
+    # boundary-row table: brow[f, p, b] = dist(node at position p,
+    # boundary slot b) — serve_step gathers one row per query endpoint
+    # instead of a take_along_axis over [q, maxf]
+    brow = jnp.take_along_axis(frag_apsp,
+                               jnp.asarray(bpos)[:, None, :], axis=2)
+    brow = jnp.where(jnp.asarray(bvalid)[:, None, :], brow, INF)
 
     # ---- SUPER graph APSP (batched BF over the sparse edge list) --------
     sg = ix.super_graph.graph
@@ -117,11 +132,13 @@ def build_device_index(ix: DislandIndex, *, force=None) -> DeviceIndex:
     else:
         d_super = jnp.full((S + 1, S + 1), INF, jnp.float32)
 
-    # ---- pieces, bucketed by padded size ---------------------------------
-    piece_bucket = -np.ones(n, dtype=np.int32)
-    piece_idx = np.zeros(n, dtype=np.int32)
+    # ---- pieces: size-bucketed batched FW, then one flat table ----------
+    piece_gid = -np.ones(n, dtype=np.int32)
     pos_in_piece = np.zeros(n, dtype=np.int32)
+    piece_bucket = np.zeros(n, dtype=np.int32)
+    piece_bidx = np.zeros(n, dtype=np.int32)
     bucket_adjs: List[List[np.ndarray]] = [[] for _ in PIECE_BUCKETS]
+    next_gid = 0
     for a in ix.dras.agents:
         for piece in a.pieces:
             sz = piece.size
@@ -136,85 +153,144 @@ def build_device_index(ix: DislandIndex, *, force=None) -> DeviceIndex:
             # the agent belongs to many pieces: leave its lookup at -1 so
             # case-1 logic falls through to the exact ds+dt formula
             inner = ids != a.agent
+            piece_gid[ids[inner]] = next_gid
             piece_bucket[ids[inner]] = b
-            piece_idx[ids[inner]] = pi
+            piece_bidx[ids[inner]] = pi
             pos_in_piece[ids[inner]] = np.nonzero(inner)[0]
-    piece_apsp: List[jax.Array] = []
+            next_gid += 1
+    flat_parts: List[np.ndarray] = []
+    bucket_off = np.zeros(len(PIECE_BUCKETS), dtype=np.int64)
+    off = 0
     for b, adjs in enumerate(bucket_adjs):
+        bucket_off[b] = off
         if adjs:
-            piece_apsp.append(ops.fw_batch(jnp.asarray(np.stack(adjs)),
+            apsp = np.asarray(ops.fw_batch(jnp.asarray(np.stack(adjs)),
                                            force=force))
-        else:
-            # empty bucket: minimal inf dummy (never hit at query time)
-            piece_apsp.append(jnp.full((1, 1, 1), INF, jnp.float32))
+            flat_parts.append(apsp.reshape(-1))
+            off += apsp.size
+    piece_flat = (np.concatenate(flat_parts) if flat_parts
+                  else np.full(1, INF, np.float32))
+    caps = np.asarray(PIECE_BUCKETS, dtype=np.int64)
+    piece_base = (bucket_off[piece_bucket]
+                  + piece_bidx.astype(np.int64)
+                  * caps[piece_bucket] ** 2).astype(np.int32)
+    piece_stride = caps[piece_bucket].astype(np.int32)
 
     return DeviceIndex(
         agent_of=jnp.asarray(agent_of),
         dist_to_agent=jnp.asarray(dist_to_agent),
         frag_of=jnp.asarray(frag_of),
         pos_in_frag=jnp.asarray(pos_in_frag),
-        piece_bucket=jnp.asarray(piece_bucket),
-        piece_idx=jnp.asarray(piece_idx),
+        piece_gid=jnp.asarray(piece_gid),
         pos_in_piece=jnp.asarray(pos_in_piece),
+        piece_base=jnp.asarray(piece_base),
+        piece_stride=jnp.asarray(piece_stride),
         frag_apsp=frag_apsp,
+        brow=brow,
         bpos=jnp.asarray(bpos),
         bvalid=jnp.asarray(bvalid),
         bnd_super=jnp.asarray(bnd_super),
         d_super=d_super,
-        piece_apsp=piece_apsp,
+        piece_flat=jnp.asarray(piece_flat),
     )
 
 
 # ---------------------------------------------------------------------------
 def _same_dra_dist(dix: DeviceIndex, s, t, ds, dt):
-    """Case 1: same agent.  Same piece -> piece APSP; else via agent."""
-    pb_s, pb_t = dix.piece_bucket[s], dix.piece_bucket[t]
-    same_piece = ((pb_s == pb_t) & (pb_s >= 0)
-                  & (dix.piece_idx[s] == dix.piece_idx[t]))
+    """Case 1: same agent.  Same piece -> one flat gather; else via
+    agent.  The flat layout replaces the per-bucket Python loop with a
+    single padded gather over piece_flat."""
+    gid_s = dix.piece_gid[s]
+    same_piece = (gid_s >= 0) & (gid_s == dix.piece_gid[t])
     d_via_agent = ds + dt
-    out = d_via_agent
-    for b, apsp in enumerate(dix.piece_apsp):
-        hit = same_piece & (pb_s == b)
-        d_b = apsp[dix.piece_idx[s], dix.pos_in_piece[s],
-                   dix.pos_in_piece[t]]
-        out = jnp.where(hit, jnp.minimum(d_b, d_via_agent), out)
-    return out
+    idx = (dix.piece_base[s]
+           + dix.pos_in_piece[s] * dix.piece_stride[s]
+           + dix.pos_in_piece[t])
+    d_piece = dix.piece_flat[jnp.where(same_piece, idx, 0)]
+    return jnp.where(same_piece, jnp.minimum(d_piece, d_via_agent),
+                     d_via_agent)
 
 
-def serve_step(dix: DeviceIndex, s: jax.Array, t: jax.Array) -> jax.Array:
-    """Batched exact distance queries: s, t int32 [q] -> f32 [q]."""
+def _combine_mid(dix: DeviceIndex, row_s, bs, row_t, bt, *, force=None):
+    """combine = min_{b1,b2} row_s[b1] + D_super[bs[b1], bt[b2]]
+    + row_t[b2] without a [q, mb, mb] intermediate.
+
+    TPU: scatter-min the boundary rows into SUPER coordinates (one
+    O(q*mb) scatter each) and run the fused two-sided tropical kernel
+    against the resident D_super.  CPU/ref: chunk the b1 axis so the
+    gathered block never exceeds [q, 8, mb].
+    """
+    if ops.use_pallas(force):
+        s1 = dix.d_super.shape[0]
+        q = row_s.shape[0]
+        qi = jnp.arange(q, dtype=jnp.int32)[:, None]
+        rs = jnp.full((q, s1), INF, row_s.dtype).at[qi, bs].min(row_s)
+        rt = jnp.full((q, s1), INF, row_t.dtype).at[qi, bt].min(row_t)
+        return ops.minplus_twoside(rs, dix.d_super, rt, force=force)
+    q, mb = row_s.shape
+    c = min(8, mb)                       # mb is padded to a multiple of 8
+
+    def body(i, acc):
+        r_c = jax.lax.dynamic_slice_in_dim(row_s, i * c, c, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(bs, i * c, c, axis=1)
+        blk = dix.d_super[b_c[:, :, None], bt[:, None, :]]  # [q, c, mb]
+        cand = jnp.min(r_c[:, :, None] + blk, axis=1)
+        return jnp.minimum(acc, cand)
+
+    tmp = jax.lax.fori_loop(0, mb // c, body,
+                            jnp.full((q, mb), INF, row_s.dtype))
+    return jnp.min(tmp + row_t, axis=1)
+
+
+def serve_same_dra(dix: DeviceIndex, s: jax.Array,
+                   t: jax.Array) -> jax.Array:
+    """Planner bucket 1: both endpoints in the same DRA."""
+    ds, dt = dix.dist_to_agent[s], dix.dist_to_agent[t]
+    out = _same_dra_dist(dix, s, t, ds, dt)
+    return jnp.where(s == t, 0.0, out)
+
+
+def serve_cross(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
+                with_local: bool, force=None) -> jax.Array:
+    """Planner buckets 2/3: endpoints in different DRAs.  with_local
+    folds in the intra-fragment distance (same-fragment bucket only,
+    so the cross-fragment program skips that gather entirely)."""
     us, ut = dix.agent_of[s], dix.agent_of[t]
     ds, dt = dix.dist_to_agent[s], dix.dist_to_agent[t]
-    # ---- case 2: cross-DRA --------------------------------------------
     fs, ft = dix.frag_of[us], dix.frag_of[ut]
     ps, pt = dix.pos_in_frag[us], dix.pos_in_frag[ut]
-    row_s_full = dix.frag_apsp[fs, ps]          # [q, maxf]
-    row_t_full = dix.frag_apsp[ft, pt]
-    row_s = jnp.take_along_axis(row_s_full, dix.bpos[fs], axis=1)
-    row_t = jnp.take_along_axis(row_t_full, dix.bpos[ft], axis=1)
-    row_s = jnp.where(dix.bvalid[fs], row_s, INF)   # [q, mb]
-    row_t = jnp.where(dix.bvalid[ft], row_t, INF)
-    bs = dix.bnd_super[fs]                      # [q, mb]
-    bt = dix.bnd_super[ft]
-    blk = dix.d_super[bs[:, :, None], bt[:, None, :]]   # [q, mb, mb]
-    tmp = jnp.min(row_s[:, :, None] + blk, axis=1)      # [q, mb]
-    mid = jnp.min(tmp + row_t, axis=1)                  # [q]
-    local = jnp.where(fs == ft,
-                      dix.frag_apsp[fs, ps, pt], INF)
-    d_cross = ds + jnp.minimum(mid, local) + dt
-    valid_frag = (fs >= 0) & (ft >= 0)
-    d_cross = jnp.where(valid_frag, d_cross, INF)
-    # ---- case 1: same DRA ----------------------------------------------
-    d_same = _same_dra_dist(dix, s, t, ds, dt)
+    row_s = dix.brow[fs, ps]                     # [q, mb]
+    row_t = dix.brow[ft, pt]
+    mid = _combine_mid(dix, row_s, dix.bnd_super[fs], row_t,
+                       dix.bnd_super[ft], force=force)
+    if with_local:
+        mid = jnp.minimum(mid, jnp.where(fs == ft,
+                                         dix.frag_apsp[fs, ps, pt], INF))
+    d = ds + mid + dt
+    return jnp.where((fs >= 0) & (ft >= 0), d, INF)
+
+
+def serve_step(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
+               force=None) -> jax.Array:
+    """Batched exact distance queries: s, t int32 [q] -> f32 [q].
+
+    The monolithic program (every case in one jit); the query planner
+    in dist_engine.py runs the per-case programs instead.
+    """
+    us, ut = dix.agent_of[s], dix.agent_of[t]
+    d_cross = serve_cross(dix, s, t, with_local=True, force=force)
+    d_same = serve_same_dra(dix, s, t)
     out = jnp.where(us == ut, d_same, d_cross)
     return jnp.where(s == t, 0.0, out)
 
 
-def serve_one_to_all(dix: DeviceIndex, s: int | jax.Array) -> jax.Array:
+def serve_one_to_all(dix: DeviceIndex, s: int | jax.Array, *,
+                     force=None) -> jax.Array:
     """Exact distances from one source to EVERY node: [n].
 
-    The bulk/retrieval pattern: one vector-matrix (min,+) product against
-    the SUPER matrix (Pallas kernel on TPU) then a per-node gather
+    The bulk/retrieval pattern: scatter the source boundary row into
+    SUPER coordinates, one vector-matrix (min,+) product against the
+    SUPER matrix (Pallas kernel on TPU), then a per-node gather
     combine.  Used by the retrieval-style benchmarks.
     """
     s = jnp.asarray(s, jnp.int32).reshape(())
@@ -223,24 +299,20 @@ def serve_one_to_all(dix: DeviceIndex, s: int | jax.Array) -> jax.Array:
     ds = dix.dist_to_agent[s]
     fs = dix.frag_of[us]
     ps = dix.pos_in_frag[us]
-    row_s = jnp.take(dix.frag_apsp[fs, ps], dix.bpos[fs])
-    row_s = jnp.where(dix.bvalid[fs], row_s, INF)       # [mb]
+    row_s = dix.brow[fs, ps]                             # [mb]
     bs = dix.bnd_super[fs]                               # [mb]
-    d_sub = dix.d_super[bs, :]                           # [mb, S+1]
+    s1 = dix.d_super.shape[0]
+    rs = jnp.full((s1,), INF, row_s.dtype).at[bs].min(row_s)
     # u_s -> every super node (vector (x) matrix min-plus)
-    x = ops.minplus(row_s[None, :], d_sub)[0]            # [S+1]
-    x = jnp.append(x, INF)                               # sentinel slot
-    # per-target combine
+    x = ops.minplus(rs[None, :], dix.d_super, force=force)[0]   # [S+1]
+    # per-target combine (sentinel slots hit the +inf row of d_super)
     tt = jnp.arange(n, dtype=jnp.int32)
     ut = dix.agent_of[tt]
     dt = dix.dist_to_agent[tt]
     ft = dix.frag_of[ut]
     ptv = dix.pos_in_frag[ut]
-    row_t = jnp.take_along_axis(dix.frag_apsp[ft, ptv], dix.bpos[ft],
-                                axis=1)
-    row_t = jnp.where(dix.bvalid[ft], row_t, INF)        # [n, mb]
-    bt = jnp.where(dix.bvalid[ft], dix.bnd_super[ft], x.shape[0] - 1)
-    mid = jnp.min(x[bt] + row_t, axis=1)                 # [n]
+    row_t = dix.brow[ft, ptv]                            # [n, mb]
+    mid = jnp.min(x[dix.bnd_super[ft]] + row_t, axis=1)  # [n]
     local = jnp.where(ft == fs, dix.frag_apsp[ft, ps, ptv], INF)
     d_cross = ds + jnp.minimum(mid, local) + dt
     d_cross = jnp.where((fs >= 0) & (ft >= 0), d_cross, INF)

@@ -1,9 +1,15 @@
-"""Distributed DISLAND serving + offline build (shard_map).
+"""Distributed DISLAND serving + offline build (shard_map) + planner.
 
 Serving layout (production posture, DESIGN.md §5): the index tensors are
 *replicated* — on 16 GB chips the index is ~1/2 the input graph, so every
 device holds it and the query batch is sharded across the whole mesh
 (pure DP; zero query-time collectives; linear scaling with chips).
+
+The QueryPlanner is the host-side front end: it buckets each incoming
+batch by case (same-DRA / same-fragment / cross-fragment) and runs one
+specialized jitted program per bucket, so same-DRA queries never pay
+for the SUPER combine and cross-fragment queries never touch the piece
+tables (DESIGN.md §5).
 
 Offline build is the heavy part (batched FW over fragments, batched BF
 over SUPER sources): both are sharded over their batch dimension with a
@@ -16,13 +22,97 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..kernels import ops
 from . import sssp
-from .device_engine import DeviceIndex, serve_step
+from .device_engine import (DeviceIndex, serve_cross, serve_same_dra,
+                            serve_step)
 
 
+# ---------------------------------------------------------------------------
+# query planner
+# ---------------------------------------------------------------------------
+def _pad_pow2(n: int, floor: int = 16) -> int:
+    m = floor
+    while m < n:
+        m *= 2
+    return m
+
+
+class QueryPlanner:
+    """Bucket a query batch by case and dispatch per-case programs.
+
+    Bucket sizes are padded to powers of two (self-queries as filler)
+    so each sub-program compiles for O(log batch) distinct shapes.
+    """
+
+    CASES = ("same_dra", "same_frag", "cross_frag")
+
+    def __init__(self, dix: DeviceIndex, *, force=None):
+        self.dix = dix
+        self._agent_of = np.asarray(dix.agent_of)
+        self._frag_of = np.asarray(dix.frag_of)
+        self._fns = {
+            "same_dra": jax.jit(lambda s, t: serve_same_dra(dix, s, t)),
+            "same_frag": jax.jit(lambda s, t: serve_cross(
+                dix, s, t, with_local=True, force=force)),
+            "cross_frag": jax.jit(lambda s, t: serve_cross(
+                dix, s, t, with_local=False, force=force)),
+        }
+        self.last_counts: dict = {}
+
+    def warmup(self, batch_size: int) -> None:
+        """Compile every sub-program at every padded bucket size that a
+        batch of ``batch_size`` can produce, so no XLA compile lands in
+        the serving (timed) path."""
+        m = _pad_pow2(1)
+        sizes = []
+        while m <= _pad_pow2(batch_size):
+            sizes.append(m)
+            m *= 2
+        z = np.zeros(max(sizes), np.int32)
+        for fn in self._fns.values():
+            for size in sizes:
+                jax.block_until_ready(fn(jnp.asarray(z[:size]),
+                                         jnp.asarray(z[:size])))
+
+    def plan(self, s: np.ndarray, t: np.ndarray) -> dict:
+        """-> {case: index array} partition of the batch."""
+        us, ut = self._agent_of[s], self._agent_of[t]
+        fs, ft = self._frag_of[us], self._frag_of[ut]
+        case1 = us == ut
+        case2 = ~case1 & (fs == ft)
+        return {
+            "same_dra": np.nonzero(case1)[0],
+            "same_frag": np.nonzero(case2)[0],
+            "cross_frag": np.nonzero(~case1 & ~case2)[0],
+        }
+
+    def __call__(self, s, t) -> np.ndarray:
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        out = np.full(s.shape, np.inf, np.float32)
+        plan = self.plan(s, t)
+        self.last_counts = {c: int(ix.size) for c, ix in plan.items()}
+        for case, idx in plan.items():
+            if idx.size == 0:
+                continue
+            m = _pad_pow2(idx.size)
+            sp = np.zeros(m, np.int32)
+            tp = np.zeros(m, np.int32)
+            sp[:idx.size] = s[idx]
+            tp[:idx.size] = t[idx]
+            res = self._fns[case](jnp.asarray(sp), jnp.asarray(tp))
+            out[idx] = np.asarray(res)[:idx.size]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# sharded serving
+# ---------------------------------------------------------------------------
 def serve_sharded(mesh: Mesh, dix: DeviceIndex, s: jax.Array,
                   t: jax.Array, *,
                   batch_axes: Sequence[str] | None = None) -> jax.Array:
@@ -30,7 +120,7 @@ def serve_sharded(mesh: Mesh, dix: DeviceIndex, s: jax.Array,
     axes = tuple(batch_axes) if batch_axes else tuple(mesh.axis_names)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(), P(axes), P(axes)), out_specs=P(axes))
     def _local(dix_, s_, t_):
         return serve_step(dix_, s_, t_)
@@ -55,11 +145,14 @@ def serve_jit(mesh: Mesh, dix_like, *,
                    out_shardings=shard)
 
 
+# ---------------------------------------------------------------------------
+# sharded offline build
+# ---------------------------------------------------------------------------
 def fw_fragments_sharded(mesh: Mesh, frag_adj: jax.Array,
                          axis: str = "data") -> jax.Array:
     """Offline per-fragment APSP with the fragment batch sharded."""
 
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=P(axis), out_specs=P(axis))
     def _local(adj):
         return ops.fw_batch(adj)
@@ -73,7 +166,7 @@ def super_apsp_sharded(mesh: Mesh, src: jax.Array, dst: jax.Array,
     """Offline SUPER APSP: BF sources sharded, edge list replicated."""
     srcs = jnp.arange(n_super, dtype=jnp.int32)
 
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(), P(), P(), P(axis)),
                        out_specs=P(axis))
     def _local(src_, dst_, w_, sources_):

@@ -25,6 +25,7 @@ class DislandEngine:
     def __init__(self, index: DislandIndex):
         self.ix = index
         self._union_cache: Dict[Tuple[int, int], tuple] = {}
+        self._agent_by_id = {int(a.agent): a for a in index.dras.agents}
 
     # ---- case 1 helpers -------------------------------------------------
     def _same_dra(self, s: int, t: int, u: int) -> float:
@@ -35,13 +36,13 @@ class DislandEngine:
             return float(ix.dras.dist_to_agent[s])
         if ix.dras.piece_of[s] == ix.dras.piece_of[t]:
             # same A_u^i: local Dijkstra on the piece
-            for a in ix.dras.agents:
-                if a.agent == u:
-                    piece = a.pieces[int(ix.dras.piece_of[s])]
-                    sub, ids = ix.g.subgraph(piece)
-                    remap = {int(x): k for k, x in enumerate(ids)}
-                    return float(dijkstra.pair(sub, remap[s], remap[t]))
-            raise AssertionError("agent table inconsistent")
+            a = self._agent_by_id.get(u)
+            if a is None:
+                raise AssertionError("agent table inconsistent")
+            piece = a.pieces[int(ix.dras.piece_of[s])]
+            sub, ids = ix.g.subgraph(piece)
+            remap = {int(x): k for k, x in enumerate(ids)}
+            return float(dijkstra.pair(sub, remap[s], remap[t]))
         return float(ix.dras.dist_to_agent[s] + ix.dras.dist_to_agent[t])
 
     # ---- case 2: union graph --------------------------------------------

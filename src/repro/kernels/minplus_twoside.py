@@ -1,0 +1,101 @@
+"""Fused two-sided tropical contraction — the DISLAND combine step.
+
+    out[q] = min_{x, y} rows[q, x] + D[x, y] + rowt[q, y]
+
+This is the serve-path case-2 middle term: distances query-source ->
+SUPER nodes (rows), SUPER x SUPER APSP (D), SUPER -> query-target
+(rowt), contracted over BOTH super indices at once.  The naive
+formulation gathers a per-query [mb, mb] block of D (O(q*mb^2) HBM
+traffic); here D is streamed tile-by-tile through VMEM exactly once per
+query tile and the [q, x, y] intermediate is never materialized.
+
+TPU mapping (VPU work, no MXU form for (min,+)): grid is
+(q tiles, y tiles, x tiles) with the two contraction axes innermost and
+sequential, so the output tile is min-accumulated across all (x, y)
+tile pairs (revisiting pattern).  Each invocation reduces its
+[bq, bk1] x [bk1, bk2] x [bq, bk2] triple down to per-lane partial
+minima [bq, 128]; the final cross-lane min happens outside the kernel
+(a trivial [q, 128] -> [q] reduce).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+
+
+def _twoside_kernel(rows_ref, d_ref, rowt_ref, out_ref, *, k_chunk: int):
+    """Min-accumulate one (q, y, x) tile triple into lane partials."""
+    yi = pl.program_id(1)
+    xi = pl.program_id(2)
+
+    @pl.when((yi == 0) & (xi == 0))
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+
+    rows = rows_ref[...]          # [bq, bk1]
+    d = d_ref[...]                # [bk1, bk2]
+    rowt = rowt_ref[...]          # [bq, bk2]
+    bk1 = rows.shape[1]
+    bq, bk2 = rowt.shape
+
+    def body(i, acc):
+        r_c = jax.lax.dynamic_slice_in_dim(rows, i * k_chunk, k_chunk,
+                                           axis=1)
+        d_c = jax.lax.dynamic_slice_in_dim(d, i * k_chunk, k_chunk,
+                                           axis=0)
+        # [bq, kc, bk2] broadcast add, min over the x chunk
+        cand = jnp.min(r_c[:, :, None] + d_c[None, :, :], axis=1)
+        return jnp.minimum(acc, cand)
+
+    tmp = jax.lax.fori_loop(0, bk1 // k_chunk, body,
+                            jnp.full((bq, bk2), jnp.inf, rows.dtype))
+    tmp = tmp + rowt              # [bq, bk2]
+    # fold the y tile down to its 128 lanes; cross-lane min is done by
+    # the caller so every store here stays (8, 128)-aligned
+    part = jnp.min(tmp.reshape(bq, bk2 // _LANES, _LANES), axis=1)
+    out_ref[...] = jnp.minimum(out_ref[...], part)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk1", "bk2",
+                                             "k_chunk", "interpret"))
+def minplus_twoside_pallas(rows: jax.Array, d: jax.Array,
+                           rowt: jax.Array, *, bq: int = 128,
+                           bk1: int = 128, bk2: int = 128,
+                           k_chunk: int = 8,
+                           interpret: bool = False) -> jax.Array:
+    """out[q] = min_{x,y} rows[q,x] + d[x,y] + rowt[q,y].
+
+    Shapes: rows [q, k1], d [k1, k2], rowt [q, k2] -> out [q].
+    Pads every axis to tile multiples with +inf (absorbing element).
+    """
+    q, k1 = rows.shape
+    k1b, k2 = d.shape
+    qb, k2b = rowt.shape
+    assert k1 == k1b and k2 == k2b and q == qb, (rows.shape, d.shape,
+                                                rowt.shape)
+    assert bk2 % _LANES == 0 and bk1 % k_chunk == 0, (bk1, bk2, k_chunk)
+    qp = -(-q // bq) * bq
+    k1p = -(-k1 // bk1) * bk1
+    k2p = -(-k2 // bk2) * bk2
+    rows_p = jnp.full((qp, k1p), jnp.inf, rows.dtype).at[:q, :k1].set(rows)
+    d_p = jnp.full((k1p, k2p), jnp.inf, d.dtype).at[:k1, :k2].set(d)
+    rowt_p = jnp.full((qp, k2p), jnp.inf, rowt.dtype).at[:q, :k2].set(rowt)
+    grid = (qp // bq, k2p // bk2, k1p // bk1)
+    part = pl.pallas_call(
+        functools.partial(_twoside_kernel, k_chunk=k_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bk1), lambda qi, yi, xi: (qi, xi)),
+            pl.BlockSpec((bk1, bk2), lambda qi, yi, xi: (xi, yi)),
+            pl.BlockSpec((bq, bk2), lambda qi, yi, xi: (qi, yi)),
+        ],
+        out_specs=pl.BlockSpec((bq, _LANES), lambda qi, yi, xi: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((qp, _LANES), rows.dtype),
+        interpret=interpret,
+    )(rows_p, d_p, rowt_p)
+    return jnp.min(part, axis=1)[:q]

@@ -13,6 +13,7 @@ import jax
 
 from . import floyd_warshall as _fw
 from . import minplus as _mp
+from . import minplus_twoside as _ts
 from . import ref as _ref
 
 Force = Optional[Literal["pallas", "ref"]]
@@ -36,6 +37,23 @@ def minplus(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
         return _mp.minplus_pallas(a, b, bm=bm, bn=bn, bk=bk,
                                   interpret=interp)
     return _ref.minplus_ref(a, b)
+
+
+def minplus_twoside(rows: jax.Array, d: jax.Array, rowt: jax.Array, *,
+                    bq: int = 128, bk1: int = 128, bk2: int = 128,
+                    force: Force = None) -> jax.Array:
+    """Fused two-sided contraction: out[q] = min_{x,y} rows[q,x]
+    + d[x,y] + rowt[q,y] — the serve-path combine, [q,k,k]-free."""
+    pallas, interp = _use_pallas(force)
+    if pallas:
+        return _ts.minplus_twoside_pallas(rows, d, rowt, bq=bq, bk1=bk1,
+                                          bk2=bk2, interpret=interp)
+    return _ref.minplus_twoside_ref(rows, d, rowt)
+
+
+def use_pallas(force: Force = None) -> bool:
+    """Expose the dispatch decision (engines pick layouts with it)."""
+    return _use_pallas(force)[0]
 
 
 def minplus_accum(c: jax.Array, a: jax.Array, b: jax.Array, *,

@@ -15,6 +15,31 @@ def minplus_accum_ref(c: jax.Array, a: jax.Array, b: jax.Array
     return jnp.minimum(c, minplus_ref(a, b))
 
 
+def minplus_twoside_ref(rows: jax.Array, d: jax.Array, rowt: jax.Array,
+                        *, chunk: int = 16) -> jax.Array:
+    """out[q] = min_{x,y} rows[q,x] + d[x,y] + rowt[q,y].
+
+    x-chunked so the peak intermediate is [q, chunk, k2], never the
+    full [q, k1, k2] cube (mirrors the Pallas kernel's contract).
+    """
+    q, k1 = rows.shape
+    k2 = rowt.shape[1]
+    k1p = -(-k1 // chunk) * chunk
+    rows_p = jnp.full((q, k1p), jnp.inf, rows.dtype).at[:, :k1].set(rows)
+    d_p = jnp.full((k1p, k2), jnp.inf, d.dtype).at[:k1].set(d)
+
+    def body(i, acc):
+        r_c = jax.lax.dynamic_slice_in_dim(rows_p, i * chunk, chunk,
+                                           axis=1)
+        d_c = jax.lax.dynamic_slice_in_dim(d_p, i * chunk, chunk, axis=0)
+        cand = jnp.min(r_c[:, :, None] + d_c[None, :, :], axis=1)
+        return jnp.minimum(acc, cand)
+
+    tmp = jax.lax.fori_loop(0, k1p // chunk, body,
+                            jnp.full((q, k2), jnp.inf, rows.dtype))
+    return jnp.min(tmp + rowt, axis=1)
+
+
 def fw_ref(d: jax.Array) -> jax.Array:
     """Floyd-Warshall APSP on one [n, n] matrix (diag forced to 0)."""
     n = d.shape[0]

@@ -31,16 +31,18 @@ def index_struct(n=262_144, k=256, maxf=1024, mb=128, s_super=8192,
                  pieces=(20_000, 2_000, 200, 16, 1)) -> DeviceIndex:
     f32, i32 = jnp.float32, jnp.int32
     caps = (8, 32, 128, 512, 2048)
+    flat = sum(p * c * c for p, c in zip(pieces, caps))
     return DeviceIndex(
         agent_of=SDS((n,), i32), dist_to_agent=SDS((n,), f32),
         frag_of=SDS((n,), i32), pos_in_frag=SDS((n,), i32),
-        piece_bucket=SDS((n,), i32), piece_idx=SDS((n,), i32),
-        pos_in_piece=SDS((n,), i32),
+        piece_gid=SDS((n,), i32), pos_in_piece=SDS((n,), i32),
+        piece_base=SDS((n,), i32), piece_stride=SDS((n,), i32),
         frag_apsp=SDS((k, maxf, maxf), f32),
+        brow=SDS((k, maxf, mb), f32),
         bpos=SDS((k, mb), i32), bvalid=SDS((k, mb), jnp.bool_),
         bnd_super=SDS((k, mb), i32),
         d_super=SDS((s_super + 1, s_super + 1), f32),
-        piece_apsp=[SDS((p, c, c), f32) for p, c in zip(pieces, caps)],
+        piece_flat=SDS((flat,), f32),
     )
 
 
@@ -72,9 +74,12 @@ def main() -> None:
             "collective_bytes_dev": ana.collective_bytes,
             "roofline": {
                 "compute_s": ana.flops / PEAK_FLOPS,
-                # serving is gather-bound: index working set per batch
+                # serve traffic per query: two boundary rows + two
+                # scattered SUPER rows, plus D_super streamed once per
+                # 128-query tile by the fused combine kernel
                 "memory_s": (131_072 / mesh.size
-                             * (128 * 4 * 2 + 128 * 128 * 4)) / HBM_BW,
+                             * (128 * 4 * 2 + 8_193 * 4 * 2
+                                + 8_193 ** 2 * 4 / 128)) / HBM_BW,
                 "collective_s": ana.collective_bytes / LINK_BW,
             },
         }

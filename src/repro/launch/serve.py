@@ -1,9 +1,12 @@
 """DISLAND serving driver (the paper's end-to-end application).
 
 Builds the full index over a synthetic road graph, uploads the device
-tensors, then serves batched shortest-distance queries through the
-jitted serve_step — optionally sharded over a device mesh — and
-validates a sample against host Dijkstra.
+tensors, then serves batched shortest-distance queries — by default
+through the case-bucketing QueryPlanner (each jitted sub-program does
+only its bucket's work), or monolithically (--mode fused) or sharded
+over a device mesh (--mode sharded) — and validates a sample against
+host Dijkstra.  Each run appends a perf record to BENCH_serve.json so
+the µs/query trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m repro.launch.serve --nodes 4000 \
         --batches 5 --batch-size 1024 --validate 64
@@ -19,9 +22,10 @@ import numpy as np
 
 from ..core import dijkstra
 from ..core.device_engine import build_device_index, serve_step
-from ..core.dist_engine import serve_sharded
+from ..core.dist_engine import QueryPlanner, serve_sharded
 from ..core.graph import road_like
 from ..core.supergraph import build_index
+from ..perflog import append_records
 from ..runtime import StragglerMonitor
 from .mesh import make_host_mesh
 
@@ -33,8 +37,14 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=1024)
     ap.add_argument("--validate", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--mode", choices=("planner", "fused", "sharded"),
+                    default="planner")
+    ap.add_argument("--sharded", action="store_true",
+                    help="alias for --mode sharded")
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="perf-record file ('' disables)")
     args = ap.parse_args()
+    mode = "sharded" if args.sharded else args.mode
 
     t0 = time.perf_counter()
     g = road_like(args.nodes, seed=args.seed)
@@ -49,25 +59,54 @@ def main() -> None:
 
     rng = np.random.default_rng(args.seed + 1)
     monitor = StragglerMonitor()
-    if args.sharded:
+    planner = None
+    if mode == "sharded":
         mesh = make_host_mesh()
         fn = lambda s, t: serve_sharded(mesh, dix, s, t)  # noqa: E731
+    elif mode == "planner":
+        planner = QueryPlanner(dix)
+        fn = planner
     else:
-        fn = jax.jit(lambda s, t: serve_step(dix, s, t))
+        jfn = jax.jit(lambda s, t: serve_step(dix, s, t))
+        fn = jfn
+    # warm-up before timing: the planner pre-compiles every sub-program
+    # at every padded bucket size a batch can produce; the other modes
+    # compile their one program on a throwaway batch
+    if planner is not None:
+        planner.warmup(args.batch_size)
+    else:
+        s = jnp.asarray(rng.integers(0, g.n, args.batch_size), jnp.int32)
+        t = jnp.asarray(rng.integers(0, g.n, args.batch_size), jnp.int32)
+        jax.block_until_ready(jnp.asarray(fn(s, t)))
     total_q = 0
     last = None
     for i in range(args.batches):
         s = jnp.asarray(rng.integers(0, g.n, args.batch_size), jnp.int32)
         t = jnp.asarray(rng.integers(0, g.n, args.batch_size), jnp.int32)
         monitor.start()
-        out = jax.block_until_ready(fn(s, t))
+        out = jax.block_until_ready(jnp.asarray(fn(s, t)))
         monitor.stop()
         total_q += args.batch_size
         last = (np.asarray(s), np.asarray(t), np.asarray(out))
     summ = monitor.summary()
     per_q = summ["median_s"] / args.batch_size
+    qps = args.batch_size / summ["median_s"]
     print(f"served {total_q} queries; median batch {summ['median_s']*1e3:.2f}ms "
-          f"-> {per_q*1e6:.2f}us/query")
+          f"-> {per_q*1e6:.2f}us/query ({qps:,.0f} qps)")
+    if planner is not None:
+        print(f"planner buckets (last batch): {planner.last_counts}")
+    if args.json:
+        append_records(args.json, [{
+            "section": "serve",
+            "graph": f"road{args.nodes}",
+            "mode": mode,
+            "backend": jax.default_backend(),
+            "batch_size": args.batch_size,
+            "median_batch_ms": round(summ["median_s"] * 1e3, 3),
+            "us_per_query": round(per_q * 1e6, 3),
+            "qps": round(qps, 1),
+        }])
+        print(f"perf record appended to {args.json}")
     if args.validate:
         s, t, got = last
         bad = 0

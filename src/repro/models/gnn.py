@@ -27,6 +27,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
 from .common import Shardings
 
 
@@ -336,7 +337,7 @@ def forward_graphcast_sharded(cfg: GNNConfig, sh: Shardings, params: Dict,
     from jax.sharding import PartitionSpec as P
     import functools as ft
 
-    @ft.partial(jax.shard_map, mesh=mesh,
+    @ft.partial(shard_map, mesh=mesh,
                 in_specs=(P(), {k: P(axes) if batch[k].ndim == 1
                                 else P(axes, None) for k in batch}),
                 out_specs=P())
@@ -423,7 +424,7 @@ def forward_dimenet_sharded(cfg: GNNConfig, sh: Shardings, params: Dict,
 
     n_graphs = batch["target_g"].shape[0]
 
-    @ft.partial(jax.shard_map, mesh=mesh,
+    @ft.partial(shard_map, mesh=mesh,
                 in_specs=(P(), {k: (P(None) if k == "target_g"
                                     else P(axes) if batch[k].ndim == 1
                                     else P(axes, None)) for k in batch}),

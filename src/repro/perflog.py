@@ -1,0 +1,23 @@
+"""Append-only JSON perf records (BENCH_serve.json and friends).
+
+One list-of-dicts file per metric family; every serving/benchmark run
+appends, so the cross-PR trajectory stays in one place.  A corrupt or
+missing file degrades to an empty history instead of failing the run.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+
+def append_records(path: str, records: List[dict]) -> None:
+    existing: list = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = []
+    with open(path, "w") as f:
+        json.dump(existing + records, f, indent=1)

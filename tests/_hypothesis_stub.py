@@ -1,0 +1,76 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The test-suite only uses ``@given(st.integers(lo, hi))`` plus
+``@settings(max_examples=N)`` and the profile registration API, so a
+deterministic seeded sweep is a faithful (if less adversarial)
+replacement.  The real package, when present, always wins — conftest
+only installs this module into ``sys.modules`` on ImportError.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _IntStrategy:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng: random.Random) -> int:
+        return rng.randint(self.lo, self.hi)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 30) -> _IntStrategy:
+    return _IntStrategy(min_value, max_value)
+
+
+class settings:  # noqa: N801 - mirrors hypothesis' API
+    _profiles: dict = {}
+    _current = {"max_examples": _DEFAULT_MAX_EXAMPLES}
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._hyp_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, max_examples: int =
+                         _DEFAULT_MAX_EXAMPLES, **kw):
+        cls._profiles[name] = {"max_examples": max_examples}
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._current = dict(cls._profiles.get(
+            name, {"max_examples": _DEFAULT_MAX_EXAMPLES}))
+
+
+def given(*strategies: _IntStrategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_hyp_max_examples",
+                        settings._current["max_examples"])
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = tuple(s.sample(rng) for s in strategies)
+                fn(*args, *drawn, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -5,7 +5,13 @@ import sys
 # dryrun.py-only, per the launch design).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings
+try:
+    from hypothesis import settings
+except ImportError:  # container without hypothesis: deterministic stub
+    from _hypothesis_stub import install
+
+    install()
+    from hypothesis import settings
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")

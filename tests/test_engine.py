@@ -1,5 +1,6 @@
 """DISLAND end-to-end: host engine, device engine, baselines — all
 validated against Dijkstra ground truth."""
+import jax
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -10,6 +11,7 @@ from repro.core.arcflags import ArcFlags
 from repro.core.ch import CH
 from repro.core.device_engine import (build_device_index, serve_one_to_all,
                                       serve_step)
+from repro.core.dist_engine import QueryPlanner
 from repro.core.engine import DislandEngine
 from repro.core.graph import road_like, tree_with_blobs
 from repro.core.supergraph import build_index
@@ -63,6 +65,82 @@ def test_device_one_to_all(small_world):
     fin = np.isfinite(want)
     np.testing.assert_allclose(got[fin], want[fin], rtol=1e-5)
     assert np.isinf(got[~fin]).all()
+
+
+def _pairs_covering_all_buckets(g, dix, n_random=60, seed=11):
+    """Random pairs plus hand-picked ones so every planner bucket
+    (same-DRA / same-fragment / cross-fragment) is non-empty."""
+    rng = np.random.default_rng(seed)
+    pairs = list(map(tuple, rng.integers(0, g.n, size=(n_random, 2))))
+    agent_of = np.asarray(dix.agent_of)
+    frag_of = np.asarray(dix.frag_of)
+    # same-DRA: two distinct nodes sharing an agent
+    agents, counts = np.unique(agent_of, return_counts=True)
+    a = agents[np.argmax(counts)]
+    members = np.nonzero(agent_of == a)[0]
+    assert members.size >= 2, "graph has no non-trivial DRA"
+    pairs.append((int(members[0]), int(members[-1])))
+    # same-fragment, different DRA
+    fa = frag_of[agent_of]
+    for f in np.unique(fa[fa >= 0]):
+        nodes = np.nonzero(fa == f)[0]
+        us = agent_of[nodes]
+        if np.unique(us).size >= 2:
+            i = int(nodes[0])
+            j = int(nodes[np.argmax(us != us[0])])
+            pairs.append((i, j))
+            break
+    # cross-fragment
+    valid = np.nonzero(fa >= 0)[0]
+    f0 = fa[valid[0]]
+    other = valid[np.argmax(fa[valid] != f0)]
+    pairs.append((int(valid[0]), int(other)))
+    return np.asarray(pairs)
+
+
+@pytest.mark.parametrize("graph_factory,seed", [
+    (lambda: road_like(1400, seed=23), 23),
+    (lambda: tree_with_blobs(60, 7, seed=5), 5),
+])
+def test_planner_matches_host_engine(graph_factory, seed):
+    """QueryPlanner (bucketed jitted sub-programs) == DislandEngine,
+    with every bucket exercised."""
+    g = graph_factory()
+    ix = build_index(g)
+    dix = build_device_index(ix)
+    eng = DislandEngine(ix)
+    pairs = _pairs_covering_all_buckets(g, dix, seed=seed)
+    planner = QueryPlanner(dix)
+    got = planner(pairs[:, 0], pairs[:, 1])
+    assert all(n >= 1 for n in planner.last_counts.values()), \
+        planner.last_counts
+    got_mono = np.asarray(serve_step(dix, jnp.asarray(pairs[:, 0]),
+                                     jnp.asarray(pairs[:, 1])))
+    for i, (a, b) in enumerate(pairs):
+        want = eng.query(int(a), int(b))
+        for val in (got[i], got_mono[i]):
+            if np.isinf(want):
+                assert np.isinf(val)
+            else:
+                assert abs(val - want) < 1e-3, (a, b, val, want)
+
+
+def test_serve_step_never_materializes_qxmbxmb(small_world):
+    """The combine must stay [q, mb, mb]-free (the whole point of the
+    fused path): inspect the jaxpr of both dispatch modes."""
+    g, ix = small_world
+    dix = build_device_index(ix)
+    mb = dix.bpos.shape[1]
+    q = 64
+    s = jnp.zeros(q, jnp.int32)
+    t = jnp.ones(q, jnp.int32)
+    for force in (None, "pallas"):
+        closed = jax.make_jaxpr(
+            lambda a, b: serve_step(dix, a, b, force=force))(s, t)
+        text = str(closed)   # nested jaxprs (loop bodies) print inline
+        forbidden = f"f32[{q},{mb},{mb}]"
+        assert forbidden not in text, \
+            f"{forbidden} intermediate found (force={force})"
 
 
 def test_super_graph_is_small(small_world):

@@ -42,6 +42,35 @@ def test_minplus_accum_matches_ref(m, k, n):
                                rtol=1e-6)
 
 
+@pytest.mark.parametrize("q,k1,k2", [(1, 1, 1), (5, 7, 3), (37, 130, 201),
+                                     (128, 128, 128), (100, 300, 129)])
+@pytest.mark.parametrize("force", ["ref", "pallas"])
+def test_minplus_twoside_matches_naive(q, k1, k2, force):
+    """Fused two-sided contraction vs the direct [q,k1,k2] cube, on
+    shapes that are deliberately NOT tile multiples."""
+    rng = np.random.default_rng(q * 1000 + k1 + k2)
+    rows = _rand((q, k1), rng)
+    d = _rand((k1, k2), rng)
+    rowt = _rand((q, k2), rng)
+    naive = np.min(np.asarray(rows)[:, :, None] + np.asarray(d)[None]
+                   + np.asarray(rowt)[:, None, :], axis=(1, 2))
+    got = ops.minplus_twoside(rows, d, rowt, bq=8, bk1=16, bk2=128,
+                              force=force)
+    np.testing.assert_allclose(np.asarray(got), naive, rtol=1e-5)
+
+
+def test_minplus_twoside_all_inf():
+    """Disconnected case: every path +inf stays +inf (no NaN from
+    inf-inf arithmetic in the padding)."""
+    rows = jnp.full((4, 10), jnp.inf)
+    d = jnp.full((10, 6), jnp.inf)
+    rowt = jnp.full((4, 6), jnp.inf)
+    for force in ("ref", "pallas"):
+        got = np.asarray(ops.minplus_twoside(rows, d, rowt, bq=8, bk1=16,
+                                             bk2=128, force=force))
+        assert np.isinf(got).all() and not np.isnan(got).any()
+
+
 @pytest.mark.parametrize("b,n", [(1, 8), (3, 16), (2, 64)])
 def test_fw_batch_matches_ref(b, n):
     rng = np.random.default_rng(b * 100 + n)

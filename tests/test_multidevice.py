@@ -20,6 +20,7 @@ def _run(body: str) -> None:
         sys.path.insert(0, %r)
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
     """ % os.path.join(ROOT, "src")) + textwrap.dedent(body)
     res = subprocess.run([sys.executable, "-c", prog],
                          capture_output=True, text=True, timeout=420)
@@ -33,8 +34,7 @@ def test_sharded_serve_matches_host_engine():
         from repro.core.device_engine import build_device_index
         from repro.core.dist_engine import serve_sharded
         from repro.core.engine import DislandEngine
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         g = road_like(900, seed=31)
         ix = build_index(g)
         dix = build_device_index(ix)
@@ -57,11 +57,10 @@ def test_compressed_psum_approximates_mean():
     _run("""
         import functools
         from repro.optim import compressed_psum
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("d",))
         x = jnp.asarray(np.random.default_rng(0).normal(
             size=(8, 64)).astype(np.float32))
-        @functools.partial(jax.shard_map, mesh=mesh,
+        @functools.partial(shard_map, mesh=mesh,
                            in_specs=P("d"), out_specs=P("d"))
         def f(v):
             return compressed_psum(v[0], "d")[None]
@@ -80,8 +79,7 @@ def test_gnn_sharded_matches_dense():
         from repro.models import gnn
         from repro.models.common import Shardings
         P_ = 8
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         rng = np.random.default_rng(3)
         n, d = 64, 8          # 8 nodes per shard
         npp = n // P_
@@ -123,8 +121,7 @@ def test_dimenet_sharded_matches_dense_local_triplets():
         from repro.models import gnn
         from repro.models.common import Shardings
         P_ = 8
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         rng = np.random.default_rng(5)
         n, d = 64, 6
         npp = n // P_
@@ -181,8 +178,7 @@ def test_lm_sharded_loss_matches_single_device():
         import dataclasses
         from repro.models import transformer
         from repro.models.common import Shardings
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = transformer.LMConfig(
             name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
             d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=8,
