@@ -168,6 +168,50 @@ def exp5_query_latency(out: List[str]) -> None:
                    f"{dt * 1e6:.2f}")
 
 
+def exp7_incremental_refresh(out: List[str]) -> None:
+    """Exp-7 (beyond the paper): incremental index refresh vs rebuild.
+
+    Absorbs localized live-traffic batches through the delta path
+    (DESIGN.md §9) and compares against a from-scratch device rebuild
+    on the same structure — wall time and array-for-array parity.
+    """
+    from repro.core.device_engine import build_device_index
+    from repro.core.dist_engine import EpochedEngine
+    from repro.core.graph import traffic_updates
+    from repro.core.supergraph import reweight_index
+
+    out.append("exp7,graph,round,update_frac,dirty_frag_frac,"
+               "decrease_only,refresh_s,reweight_s,pipeline_s,"
+               "ratio_vs_pipeline,match")
+    name, g = next(_graphs((2500,)))
+    eng = EpochedEngine(g)
+    for r in range(3):
+        u, v, w = traffic_updates(eng.g, 0.02, seed=40 + r)
+        t0 = time.perf_counter()
+        stats = eng.apply_updates(u, v, w)
+        refresh_s = time.perf_counter() - t0
+        # reweight rebuild: exactness reference (same structure)
+        t0 = time.perf_counter()
+        sdix = build_device_index(reweight_index(eng.ix, eng.g))
+        reweight_s = time.perf_counter() - t0
+        # full pipeline: the pre-delta-path cost of a weight change
+        # (hybrid covers are weight-dependent, DESIGN.md §9)
+        t0 = time.perf_counter()
+        build_device_index(build_index(eng.g))
+        pipeline_s = time.perf_counter() - t0
+        match = all(
+            np.array_equal(np.asarray(getattr(eng.dix, f)),
+                           np.asarray(getattr(sdix, f)))
+            for f in ("frag_apsp", "brow", "d_super", "piece_flat",
+                      "dist_to_agent"))
+        out.append(f"exp7,{name},{r},0.02,"
+                   f"{stats.dirty_frag_frac:.3f},"
+                   f"{int(stats.decrease_only)},"
+                   f"{refresh_s:.3f},{reweight_s:.3f},{pipeline_s:.3f},"
+                   f"{refresh_s / max(pipeline_s, 1e-9):.3f},"
+                   f"{int(match)}")
+
+
 ALL = [table1_landmark_overhead, table3_agents, table4_partitions,
        table5_hybrid_covers, table6_super_graphs, exp4_preprocessing,
-       exp5_query_latency]
+       exp5_query_latency, exp7_incremental_refresh]

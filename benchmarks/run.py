@@ -16,7 +16,7 @@ import time
 
 
 def _perf_records(rows: list[str]) -> list[dict]:
-    """Extract (section, graph, qps, us_per_query) from latency rows."""
+    """Extract structured perf records from latency/refresh rows."""
     records = []
     for row in rows:
         parts = row.split(",")
@@ -29,6 +29,20 @@ def _perf_records(rows: list[str]) -> list[dict]:
                 "algo": parts[3],
                 "us_per_query": us,
                 "qps": round(1e6 / us, 1) if us > 0 else float("inf"),
+            })
+        elif parts[0] == "exp7" and parts[1] != "graph":
+            records.append({
+                "section": "exp7_refresh",
+                "graph": parts[1],
+                "round": int(parts[2]),
+                "update_frac": float(parts[3]),
+                "dirty_frag_frac": float(parts[4]),
+                "decrease_only": bool(int(parts[5])),
+                "refresh_s": float(parts[6]),
+                "scratch_reweight_s": float(parts[7]),
+                "scratch_pipeline_s": float(parts[8]),
+                "refresh_over_scratch": float(parts[9]),
+                "scratch_match": bool(int(parts[10])),
             })
     return records
 

@@ -1,21 +1,53 @@
 #!/usr/bin/env bash
-# Tier-1 gate + serve smoke, the one command a PR must keep green:
+# Tier-1 gate + smokes, the one command a PR must keep green (and the
+# single CI entry point, .github/workflows/ci.yml):
 #   bash scripts/check.sh [--fast]
 # --fast skips the pytest suite (smokes only).
-set -euo pipefail
+#
+# Every stage runs with its exit code captured explicitly; a failing
+# stage marks the whole run failed but later stages still execute, and
+# the script's own exit code aggregates them — `set -e` alone is not
+# relied on for the smoke invocations (a non-final failing stage must
+# not be maskable by a later passing one, and CI needs the non-zero
+# code propagated).
+set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+fail=0
+failed_stages=()
+
+run_stage() {
+    local name="$1"
+    shift
+    echo "== ${name} =="
+    if "$@"; then
+        echo "-- ${name}: OK"
+    else
+        local rc=$?
+        echo "-- ${name}: FAILED (exit ${rc})"
+        fail=1
+        failed_stages+=("${name}")
+    fi
+}
+
 if [[ "${1:-}" != "--fast" ]]; then
-    echo "== tier-1 tests =="
-    python -m pytest -x -q
+    run_stage "tier-1 tests" python -m pytest -x -q
 fi
 
-echo "== serve smoke (2k nodes, CPU, validated) =="
-python -m repro.launch.serve --nodes 2000 --batches 2 --batch-size 256 \
-    --validate 64 --json ""
+run_stage "serve smoke (2k nodes, CPU, validated)" \
+    python -m repro.launch.serve --nodes 2000 --batches 2 \
+    --batch-size 256 --validate 64 --json ""
 
-echo "== quickstart =="
-python examples/quickstart.py
+run_stage "live-traffic refresh smoke" \
+    python -m repro.launch.serve --nodes 2000 --batches 1 \
+    --batch-size 256 --validate 32 --update-batches 1 \
+    --update-frac 0.02 --json ""
 
+run_stage "quickstart" python examples/quickstart.py
+
+if [[ ${fail} -ne 0 ]]; then
+    echo "CHECKS FAILED: ${failed_stages[*]}"
+    exit 1
+fi
 echo "ALL CHECKS PASSED"

@@ -18,6 +18,7 @@ shard_map, which is where the multi-pod mesh earns its keep.
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Sequence
 
 import jax
@@ -28,8 +29,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat import shard_map
 from ..kernels import ops
 from . import sssp
-from .device_engine import (DeviceIndex, serve_cross, serve_same_dra,
-                            serve_step)
+from .device_engine import (DeviceIndex, RefreshStats,
+                            build_device_index_with_plan, refresh_index,
+                            serve_cross, serve_same_dra, serve_step,
+                            warmup_refresh)
+from .supergraph import DislandIndex, build_index
 
 
 # ---------------------------------------------------------------------------
@@ -47,22 +51,34 @@ class QueryPlanner:
 
     Bucket sizes are padded to powers of two (self-queries as filler)
     so each sub-program compiles for O(log batch) distinct shapes.
+
+    The index is passed to each jitted sub-program as an *argument*,
+    not closed over: an epoch swap (``set_index``) is then just a
+    pointer replacement — the new epoch's tensors have identical
+    shapes/dtypes, so every cached executable is reused and no XLA
+    compile lands anywhere near the serving path (DESIGN.md §9).
     """
 
     CASES = ("same_dra", "same_frag", "cross_frag")
 
     def __init__(self, dix: DeviceIndex, *, force=None):
+        self._fns = {
+            "same_dra": jax.jit(serve_same_dra),
+            "same_frag": jax.jit(functools.partial(
+                serve_cross, with_local=True, force=force)),
+            "cross_frag": jax.jit(functools.partial(
+                serve_cross, with_local=False, force=force)),
+        }
+        self.last_counts: dict = {}
+        self.set_index(dix)
+
+    def set_index(self, dix: DeviceIndex) -> None:
+        """Publish a new index epoch.  In-flight batches keep the old
+        arrays alive (immutable); subsequent calls plan and serve
+        against the new epoch with zero recompilation."""
         self.dix = dix
         self._agent_of = np.asarray(dix.agent_of)
         self._frag_of = np.asarray(dix.frag_of)
-        self._fns = {
-            "same_dra": jax.jit(lambda s, t: serve_same_dra(dix, s, t)),
-            "same_frag": jax.jit(lambda s, t: serve_cross(
-                dix, s, t, with_local=True, force=force)),
-            "cross_frag": jax.jit(lambda s, t: serve_cross(
-                dix, s, t, with_local=False, force=force)),
-        }
-        self.last_counts: dict = {}
 
     def warmup(self, batch_size: int) -> None:
         """Compile every sub-program at every padded bucket size that a
@@ -76,7 +92,7 @@ class QueryPlanner:
         z = np.zeros(max(sizes), np.int32)
         for fn in self._fns.values():
             for size in sizes:
-                jax.block_until_ready(fn(jnp.asarray(z[:size]),
+                jax.block_until_ready(fn(self.dix, jnp.asarray(z[:size]),
                                          jnp.asarray(z[:size])))
 
     def plan(self, s: np.ndarray, t: np.ndarray) -> dict:
@@ -95,6 +111,9 @@ class QueryPlanner:
         s = np.asarray(s, np.int32)
         t = np.asarray(t, np.int32)
         out = np.full(s.shape, np.inf, np.float32)
+        # snapshot the epoch once: a concurrent set_index between
+        # bucket dispatches must not split one batch across two epochs
+        dix = self.dix
         plan = self.plan(s, t)
         self.last_counts = {c: int(ix.size) for c, ix in plan.items()}
         for case, idx in plan.items():
@@ -105,9 +124,108 @@ class QueryPlanner:
             tp = np.zeros(m, np.int32)
             sp[:idx.size] = s[idx]
             tp[:idx.size] = t[idx]
-            res = self._fns[case](jnp.asarray(sp), jnp.asarray(tp))
+            res = self._fns[case](dix, jnp.asarray(sp),
+                                  jnp.asarray(tp))
             out[idx] = np.asarray(res)[:idx.size]
         return out
+
+
+# ---------------------------------------------------------------------------
+# epoch-swapped serving over a live-updating index
+# ---------------------------------------------------------------------------
+class EpochedEngine:
+    """Serve batched queries while absorbing live edge-weight updates.
+
+    Double-buffered epochs (DESIGN.md §9): queries always run against
+    the current *immutable* DeviceIndex; ``apply_updates`` runs the
+    incremental rebuild (device_engine.refresh_index) off to the side
+    and then publishes the result as epoch e+1 with a single planner
+    pointer swap.  Batches already in flight finish on epoch e — the
+    old arrays stay alive exactly as long as something references them.
+
+    Because the planner's jitted sub-programs take the index as an
+    argument, an epoch swap compiles nothing; refresh cost is the only
+    pause-free background work, and serving never blocks on it.
+    """
+
+    def __init__(self, g, *, c: int = 2, seed: int = 0, force=None,
+                 ix: DislandIndex | None = None,
+                 warm_refresh: bool = True):
+        self.g = g
+        self.ix = ix if ix is not None else build_index(g, c=c, seed=seed)
+        self.dix, self.plan = build_device_index_with_plan(self.ix,
+                                                           force=force)
+        self.planner = QueryPlanner(self.dix, force=force)
+        self.epoch = 0
+        self.force = force
+        self.last_stats: RefreshStats | None = None
+        self._lock = threading.Lock()
+        if warm_refresh:
+            # compile the refresh FW programs now, not mid-update
+            warmup_refresh(self.plan, force=force)
+            self._warm_refresh_path()
+
+    def _warm_refresh_path(self) -> None:
+        """Trace/compile the full delta path with a no-op update batch
+        (existing edges re-assigned their current weights): exercises
+        classification, the padded FW scatter/gather programs, and the
+        piece rewrite, all without changing any distance — so the first
+        real apply_updates runs entirely on warm programs."""
+        plan = self.plan
+        g = self.g
+        fa = plan.frag_of
+        picks: list = []
+        # one edge in each of up to 8 distinct fragments (covers the
+        # pow2-padded scatter shapes 4 and 8) ...
+        m_frag = (fa[g.edge_u] >= 0) & (fa[g.edge_u] == fa[g.edge_v])
+        e_frag = np.nonzero(m_frag)[0]
+        if e_frag.size:
+            _, first = np.unique(fa[g.edge_u[e_frag]], return_index=True)
+            picks += list(e_frag[first[:8]])
+        # ... and one edge in a piece of each bucket size in use
+        gid_e = np.where(plan.piece_gid[g.edge_u] >= 0,
+                         plan.piece_gid[g.edge_u],
+                         plan.piece_gid[g.edge_v])
+        e_piece = np.nonzero(gid_e >= 0)[0]
+        if e_piece.size:
+            _, first = np.unique(plan.piece_cap[gid_e[e_piece]],
+                                 return_index=True)
+            picks += list(e_piece[first])
+        if not picks:
+            return
+        idx = np.asarray(sorted(set(picks)))
+        refresh_index(self.dix, plan, g, g.edge_u[idx], g.edge_v[idx],
+                      g.edge_w[idx], force=self.force)
+
+    def query(self, s, t) -> np.ndarray:
+        """Planner-bucketed batched queries on the current epoch."""
+        return self.planner(s, t)
+
+    def warmup(self, batch_size: int) -> None:
+        self.planner.warmup(batch_size)
+
+    def apply_updates(self, u, v, w) -> RefreshStats:
+        """Absorb a weight-update batch and publish the next epoch.
+
+        Serving continues on the old epoch until the final swap; the
+        lock only serializes concurrent updaters, never readers.
+        """
+        with self._lock:
+            w_old = self.g.edge_w[self.g.edge_ids(u, v)]
+            g_new = self.g.with_edge_weights(u, v, w)
+            new_dix, stats = refresh_index(self.dix, self.plan, g_new,
+                                           u, v, w, w_old=w_old,
+                                           force=self.force)
+            # an epoch publishes fully materialized: readers must never
+            # stall on a lazily-executing refresh
+            jax.block_until_ready(new_dix)
+            # publish: readers see (epoch, dix) flip atomically per ref
+            self.g = g_new
+            self.dix = new_dix
+            self.planner.set_index(new_dix)
+            self.epoch += 1
+            self.last_stats = stats
+            return stats
 
 
 # ---------------------------------------------------------------------------

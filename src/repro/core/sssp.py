@@ -70,3 +70,23 @@ def apsp_from_sources(src: jax.Array, dst: jax.Array, w: jax.Array,
                       sources: jax.Array, *, n: int) -> jax.Array:
     """Distances from each of ``sources`` to every node: [S, n]."""
     return bellman_ford(src, dst, w, sources_init(sources, n), n=n)
+
+
+# ---------------------------------------------------------------------------
+# A measured negative result worth keeping (DESIGN.md §9): warm-starting
+# the SUPER overlay refresh through this BF — init = the old d_super,
+# valid whenever no weight increased, since min-relaxation only lowers
+# values — was implemented and benchmarked for the incremental-refresh
+# path, and LOST to simply re-closing the dense overlay with the
+# blocked FW kernel.  Two independent reasons, both structural:
+#   * the segment_min sweep above is scatter-bound on CPU-XLA (~750ms
+#     per sweep at S=625/13k edges, x ~28 sweeps from scratch), and a
+#     warm init still needs several sweeps;
+#   * a *dense* warm sweep min(d, d (x) M) costs S^3 — i.e. one sweep
+#     already costs as much as the entire FW closure (~60ms at S=625),
+#     so warm-starting can never come out ahead on a clique-dense
+#     overlay.
+# The edge-list BF below remains the right tool for large sparse
+# inputs (it is what the sharded offline build uses); the overlay
+# refresh lives in device_engine.super_stage.
+# ---------------------------------------------------------------------------

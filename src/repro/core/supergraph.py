@@ -116,6 +116,50 @@ def build_index(g: Graph, c: int = 2, use_cost_model: bool = True,
                         frag_of=frag_of, timings=timings)
 
 
+def reweight_index(ix: DislandIndex, g_new: Graph) -> DislandIndex:
+    """Same index *structure*, new edge weights (DESIGN.md §9).
+
+    Weight updates never change cut nodes, BCCs, DRAs, fragments, or
+    the SUPER node universe — all are purely topological — so a live
+    traffic batch only invalidates the weight-dependent products.  This
+    rebuilds exactly those on the host: per-DRA agent distances, the
+    shrink/fragment subgraph weights.  Covers and the SUPER graph are
+    carried over structurally; their cached enforced-edge *distances*
+    are stale, which the device build never reads (it regathers Upsilon
+    weights from the fragment APSP, device_engine.super_weights) — use
+    ``build_index(g_new)`` if a fully-consistent host engine is needed.
+
+    ``build_device_index(reweight_index(ix, g_new))`` is therefore the
+    from-scratch reference the incremental ``refresh_index`` path is
+    differentially tested against, array-for-array.
+    """
+    from .agents import _sssp_within
+
+    if g_new.n != ix.g.n or g_new.m != ix.g.m:
+        raise ValueError("reweight_index requires identical topology")
+    dist_to_agent = ix.dras.dist_to_agent.copy()
+    agents = []
+    for a in ix.dras.agents:
+        allp = np.unique(np.concatenate(a.pieces))
+        dmap = _sssp_within(g_new, a.agent, allp)
+        d = np.array([dmap.get(int(x), np.inf) for x in a.nodes])
+        agents.append(dataclasses.replace(a, dist_to_agent=d))
+        dist_to_agent[a.nodes] = d
+    dras = dataclasses.replace(ix.dras, agents=agents,
+                               dist_to_agent=dist_to_agent)
+
+    shrink, shrink_ids = g_new.subgraph(ix.shrink_ids)
+    fragments = []
+    for i, f in enumerate(ix.fragments):
+        loc = ix.partition.fragment_nodes(i)
+        fg, _fids = shrink.subgraph(loc)
+        fragments.append(dataclasses.replace(f, graph=fg))
+
+    return dataclasses.replace(
+        ix, g=g_new, dras=dras, shrink=shrink, fragments=fragments,
+        timings=dict(ix.timings, reweighted=True))
+
+
 def _assemble_super(g: Graph, shrink: Graph, shrink_ids: np.ndarray,
                     part: PartitionResult,
                     fragments: List[Fragment]) -> SuperGraph:

@@ -77,7 +77,13 @@ def fw_batch(d: jax.Array, *, force: Force = None) -> jax.Array:
 
 def fw_apsp(d: jax.Array, *, block: int = 128,
             force: Force = None) -> jax.Array:
-    """Blocked APSP for a single [n, n] matrix."""
+    """Blocked APSP for a single [n, n] matrix.
+
+    The CPU path stays single-pivot on purpose: a chunked blocked-panel
+    jnp schedule was benchmarked 8x SLOWER at n=625 (the [n, chunk, n]
+    broadcast intermediates thrash memory, while XLA fuses the n small
+    col+row+min iterations cache-resident).
+    """
     pallas, interp = _use_pallas(force)
     if pallas:
         return _fw.fw_blocked(d, block=block, interpret=interp)

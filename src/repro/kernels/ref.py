@@ -55,3 +55,11 @@ def fw_ref(d: jax.Array) -> jax.Array:
 
 def fw_batch_ref(d: jax.Array) -> jax.Array:
     return jax.vmap(fw_ref)(d)
+
+
+# NOTE (measured): a chunked blocked-panel FW variant of fw_ref was
+# tried for the CPU overlay closure and came out ~8x slower at n=625 —
+# its [n, chunk, n] broadcast intermediates thrash memory, while the n
+# small single-pivot iterations above stay cache-resident and fuse.
+# The blocked schedule only pays off inside the Pallas kernel
+# (floyd_warshall.py), where tiles are explicitly VMEM-resident.

@@ -8,8 +8,15 @@ over a device mesh (--mode sharded) — and validates a sample against
 host Dijkstra.  Each run appends a perf record to BENCH_serve.json so
 the µs/query trajectory is tracked across PRs.
 
+``--update-batches`` turns on the live-traffic loop (planner mode):
+between serving batches, a localized weight-update batch is absorbed by
+the incremental refresh path and published as a new index epoch
+(DESIGN.md §9); refresh latency, the from-scratch rebuild baseline, and
+an exact-match check against that rebuild are all recorded.
+
     PYTHONPATH=src python -m repro.launch.serve --nodes 4000 \
-        --batches 5 --batch-size 1024 --validate 64
+        --batches 5 --batch-size 1024 --validate 64 \
+        --update-batches 3 --update-frac 0.02
 """
 from __future__ import annotations
 
@@ -22,12 +29,87 @@ import numpy as np
 
 from ..core import dijkstra
 from ..core.device_engine import build_device_index, serve_step
-from ..core.dist_engine import QueryPlanner, serve_sharded
-from ..core.graph import road_like
-from ..core.supergraph import build_index
-from ..perflog import append_records
+from ..core.dist_engine import EpochedEngine, serve_sharded
+from ..core.graph import road_like, traffic_updates
+from ..core.supergraph import build_index, reweight_index
+from ..perflog import append_records, latest
 from ..runtime import StragglerMonitor
 from .mesh import make_host_mesh
+
+REFRESHED_FIELDS = ("frag_apsp", "brow", "d_super", "piece_flat",
+                    "dist_to_agent")
+
+
+def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
+    """Absorb --update-batches rounds of localized traffic, serving and
+    validating on each new epoch; returns perf records."""
+    records = []
+    rng = np.random.default_rng(args.seed + 2)
+    for r in range(args.update_batches):
+        u, v, w = traffic_updates(engine.g, args.update_frac,
+                                  seed=args.seed + 10 + r)
+        t0 = time.perf_counter()
+        stats = engine.apply_updates(u, v, w)
+        refresh_s = time.perf_counter() - t0
+        s = rng.integers(0, engine.g.n, args.batch_size)
+        t = rng.integers(0, engine.g.n, args.batch_size)
+        t0 = time.perf_counter()
+        out = engine.query(s, t)
+        serve_s = time.perf_counter() - t0
+        bad = 0
+        for i in range(min(args.validate, len(s))):
+            want = dijkstra.pair(engine.g, int(s[i]), int(t[i]))
+            if not (np.isinf(want) and np.isinf(out[i])) \
+                    and abs(out[i] - want) > 1e-4 * max(want, 1):
+                bad += 1
+        # Two from-scratch baselines on the updated graph, re-measured
+        # each round so refresh and baseline share contention
+        # conditions:
+        #  * full pipeline (build_index + device build) — what a weight
+        #    change costs WITHOUT the delta path, since the hybrid
+        #    covers are weight-dependent (DESIGN.md §9);
+        #  * reweight + device rebuild (same structure) — itself only
+        #    possible because overlay weights are derived; also the
+        #    array-parity exactness reference (checked on round 0).
+        t0 = time.perf_counter()
+        build_device_index(build_index(engine.g))
+        pipeline_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sdix = build_device_index(reweight_index(engine.ix, engine.g))
+        reweight_s = time.perf_counter() - t0
+        scratch_match = all(
+            np.array_equal(np.asarray(getattr(engine.dix, f)),
+                           np.asarray(getattr(sdix, f)))
+            for f in REFRESHED_FIELDS)
+        rec = {
+            "section": "refresh",
+            "graph": f"road{args.nodes}",
+            "backend": jax.default_backend(),
+            "epoch": engine.epoch,
+            "update_frac": args.update_frac,
+            "refresh_s": round(refresh_s, 4),
+            "scratch_pipeline_s": round(pipeline_s, 4),
+            "scratch_reweight_s": round(reweight_s, 4),
+            "refresh_over_scratch": round(refresh_s / pipeline_s, 4),
+            "refresh_over_reweight": round(refresh_s / reweight_s, 4),
+            "initial_build_s": round(build_s, 4),
+            "post_refresh_mismatches": bad,
+            "scratch_match": scratch_match,
+            "serve_batch_ms": round(serve_s * 1e3, 3),
+            **stats.as_record(),
+        }
+        records.append(rec)
+        print(f"epoch {engine.epoch}: refresh {refresh_s*1e3:.0f}ms "
+              f"({stats.as_record()['dirty_frags']} frags, "
+              f"{stats.as_record()['dirty_pieces']} pieces, "
+              f"decrease_only={stats.decrease_only}) -> "
+              f"{refresh_s / pipeline_s:.1%} of full pipeline "
+              f"({pipeline_s:.2f}s), "
+              f"{refresh_s / reweight_s:.1%} of reweight rebuild "
+              f"({reweight_s:.2f}s), match={scratch_match}; "
+              f"validation {bad}/{args.validate} bad")
+        assert bad == 0
+    return records
 
 
 def main() -> None:
@@ -41,10 +123,16 @@ def main() -> None:
                     default="planner")
     ap.add_argument("--sharded", action="store_true",
                     help="alias for --mode sharded")
+    ap.add_argument("--update-batches", type=int, default=0,
+                    help="live-traffic rounds after serving (planner)")
+    ap.add_argument("--update-frac", type=float, default=0.02,
+                    help="fraction of edges perturbed per round")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="perf-record file ('' disables)")
     args = ap.parse_args()
     mode = "sharded" if args.sharded else args.mode
+    if args.update_batches and mode != "planner":
+        ap.error("--update-batches requires --mode planner")
 
     t0 = time.perf_counter()
     g = road_like(args.nodes, seed=args.seed)
@@ -53,9 +141,15 @@ def main() -> None:
     ix = build_index(g)
     print(f"index: {ix.timings} ({time.perf_counter() - t0:.1f}s)")
     t0 = time.perf_counter()
-    dix = build_device_index(ix)
+    engine = None
+    if mode == "planner":
+        engine = EpochedEngine(g, ix=ix)
+        dix = engine.dix
+    else:
+        dix = build_device_index(ix)
+    build_s = time.perf_counter() - t0
     print(f"device index: frag_apsp={dix.frag_apsp.shape} "
-          f"d_super={dix.d_super.shape} ({time.perf_counter() - t0:.1f}s)")
+          f"d_super={dix.d_super.shape} ({build_s:.1f}s)")
 
     rng = np.random.default_rng(args.seed + 1)
     monitor = StragglerMonitor()
@@ -64,7 +158,7 @@ def main() -> None:
         mesh = make_host_mesh()
         fn = lambda s, t: serve_sharded(mesh, dix, s, t)  # noqa: E731
     elif mode == "planner":
-        planner = QueryPlanner(dix)
+        planner = engine.planner
         fn = planner
     else:
         jfn = jax.jit(lambda s, t: serve_step(dix, s, t))
@@ -96,6 +190,11 @@ def main() -> None:
     if planner is not None:
         print(f"planner buckets (last batch): {planner.last_counts}")
     if args.json:
+        prev = latest(args.json, section="serve",
+                      graph=f"road{args.nodes}", mode=mode)
+        if prev:
+            print(f"previous {mode} record: "
+                  f"{prev['us_per_query']}us/query")
         append_records(args.json, [{
             "section": "serve",
             "graph": f"road{args.nodes}",
@@ -117,6 +216,12 @@ def main() -> None:
                 bad += 1
         print(f"validation: {bad} mismatches of {args.validate}")
         assert bad == 0
+    if args.update_batches:
+        records = _update_loop(engine, args, build_s)
+        if args.json:
+            append_records(args.json, records)
+            print(f"{len(records)} refresh records appended to "
+                  f"{args.json}")
 
 
 if __name__ == "__main__":

@@ -11,13 +11,31 @@ import os
 from typing import List
 
 
+def read_records(path: str) -> List[dict]:
+    """Full history at ``path`` ([] on missing/corrupt, same policy as
+    append_records)."""
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            out = json.load(f)
+        return out if isinstance(out, list) else []
+    except (json.JSONDecodeError, OSError):
+        return []
+
+
+def latest(path: str, **filters) -> dict | None:
+    """Most recent record whose fields match ``filters`` exactly, e.g.
+    ``latest("BENCH_serve.json", section="refresh", graph="road4000")``.
+    Serving/benchmark drivers use it to print the cross-PR delta next
+    to a fresh measurement."""
+    for rec in reversed(read_records(path)):
+        if all(rec.get(k) == v for k, v in filters.items()):
+            return rec
+    return None
+
+
 def append_records(path: str, records: List[dict]) -> None:
-    existing: list = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                existing = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            existing = []
+    existing = read_records(path)
     with open(path, "w") as f:
         json.dump(existing + records, f, indent=1)

@@ -143,6 +143,38 @@ def test_serve_step_never_materializes_qxmbxmb(small_world):
             f"{forbidden} intermediate found (force={force})"
 
 
+def test_refresh_programs_never_materialize_qxmbxmb(small_world):
+    """The epoch-swappable per-case programs (index passed as an
+    argument — what the planner runs across refreshes, DESIGN.md §9)
+    must stay [q, mb, mb]-free too: the refactor to dix-as-argument
+    must not have reintroduced the gather blowup in either dispatch
+    mode, for any planner bucket."""
+    import functools
+
+    from repro.core.device_engine import serve_cross, serve_same_dra
+
+    g, ix = small_world
+    dix = build_device_index(ix)
+    mb = dix.bpos.shape[1]
+    q = 64
+    s = jnp.zeros(q, jnp.int32)
+    t = jnp.ones(q, jnp.int32)
+    forbidden = f"f32[{q},{mb},{mb}]"
+    for force in (None, "pallas"):
+        programs = {
+            "same_dra": serve_same_dra,
+            "same_frag": functools.partial(serve_cross, with_local=True,
+                                           force=force),
+            "cross_frag": functools.partial(serve_cross,
+                                            with_local=False,
+                                            force=force),
+        }
+        for name, fn in programs.items():
+            text = str(jax.make_jaxpr(fn)(dix, s, t))
+            assert forbidden not in text, \
+                f"{forbidden} found in {name} (force={force})"
+
+
 def test_super_graph_is_small(small_world):
     g, ix = small_world
     sup = ix.super_graph.graph

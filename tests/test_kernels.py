@@ -59,6 +59,26 @@ def test_minplus_twoside_matches_naive(q, k1, k2, force):
     np.testing.assert_allclose(np.asarray(got), naive, rtol=1e-5)
 
 
+@pytest.mark.parametrize("q,k1,k2", [(9, 70, 53), (130, 257, 139),
+                                     (1, 333, 7)])
+def test_minplus_twoside_default_tiles_odd_shapes(q, k1, k2):
+    """Padding correctness at the DEFAULT tile sizes (bq=bk1=bk2=128):
+    mb/S shapes that are not multiples of any tile dimension — the
+    shapes the serve/refresh path actually produces, since mb is padded
+    to 8 (not 128) and S+1 is arbitrary.  The +inf padding is the
+    semiring's absorbing element, so fillers must never win a min."""
+    rng = np.random.default_rng(q * 7919 + k1 * 31 + k2)
+    rows = _rand((q, k1), rng)
+    d = _rand((k1, k2), rng)
+    rowt = _rand((q, k2), rng)
+    naive = np.min(np.asarray(rows)[:, :, None] + np.asarray(d)[None]
+                   + np.asarray(rowt)[:, None, :], axis=(1, 2))
+    for force in ("ref", "pallas"):
+        got = ops.minplus_twoside(rows, d, rowt, force=force)
+        np.testing.assert_allclose(np.asarray(got), naive, rtol=1e-5)
+        assert not np.isnan(np.asarray(got)).any()
+
+
 def test_minplus_twoside_all_inf():
     """Disconnected case: every path +inf stays +inf (no NaN from
     inf-inf arithmetic in the padding)."""
@@ -87,6 +107,20 @@ def test_fw_blocked_matches_ref(n, block):
     d = jnp.minimum(d, d.T)
     got = ops.fw_apsp(d, block=block, force="pallas")
     np.testing.assert_allclose(got, ref.fw_ref(d), rtol=1e-6)
+
+
+def test_fw_integer_weights_exact():
+    """Integer weights -> bitwise-exact FW distances in f32: the
+    invariant the refresh differential harness (incremental == scratch,
+    array-equal) rests on."""
+    rng = np.random.default_rng(77)
+    d = _rand((60, 60), rng, inf_frac=0.5)
+    d = jnp.minimum(d, d.T)
+    di = jnp.where(jnp.isfinite(d), jnp.round(d * 8), jnp.inf)
+    a = np.asarray(ops.fw_apsp(di))
+    b = np.asarray(ref.fw_ref(di))
+    np.testing.assert_array_equal(a, b)
+    assert (np.asarray(a)[np.isfinite(a)] % 1 == 0).all()
 
 
 def test_fw_matches_dijkstra():

@@ -1,0 +1,137 @@
+"""QueryPlanner edge cases: degenerate batches, empty buckets, and
+pow2-padding filler hygiene (DESIGN.md §5).
+
+The planner pads each case bucket to a power of two with (0, 0)
+self-query filler; none of that filler may ever leak into returned
+distances, for any batch composition.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dijkstra
+from repro.core.device_engine import build_device_index
+from repro.core.dist_engine import QueryPlanner, _pad_pow2
+from repro.core.graph import road_like
+from repro.core.supergraph import build_index
+
+
+@pytest.fixture(scope="module")
+def world():
+    g = road_like(1000, seed=41)
+    ix = build_index(g)
+    dix = build_device_index(ix)
+    return g, dix, QueryPlanner(dix)
+
+
+def _want(g, pairs):
+    return np.array([dijkstra.pair(g, int(a), int(b)) for a, b in pairs])
+
+
+def _check(g, planner, pairs):
+    pairs = np.asarray(pairs)
+    got = planner(pairs[:, 0], pairs[:, 1])
+    want = _want(g, pairs)
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-5)
+    assert np.isinf(got[~fin]).all()
+    return got
+
+
+def _pairs_of_case(g, dix, case, n):
+    """n query pairs all belonging to one planner case."""
+    agent_of = np.asarray(dix.agent_of)
+    frag_of = np.asarray(dix.frag_of)
+    fa = frag_of[agent_of]
+    out = []
+    if case == "same_dra":
+        agents, counts = np.unique(agent_of, return_counts=True)
+        a = agents[np.argmax(counts)]
+        members = np.nonzero(agent_of == a)[0]
+        assert members.size >= 2
+        for i in range(n):
+            out.append((int(members[i % members.size]),
+                        int(members[(i + 1) % members.size])))
+    elif case == "same_frag":
+        for f in np.unique(fa[fa >= 0]):
+            nodes = np.nonzero(fa == f)[0]
+            us = agent_of[nodes]
+            if np.unique(us).size >= 2:
+                j = int(np.argmax(us != us[0]))
+                for i in range(n):
+                    out.append((int(nodes[0]), int(nodes[j])))
+                break
+    else:  # cross_frag
+        valid = np.nonzero(fa >= 0)[0]
+        f0 = fa[valid[0]]
+        other = valid[np.argmax(fa[valid] != f0)]
+        for i in range(n):
+            out.append((int(valid[0]), int(other)))
+    assert len(out) == n, f"could not build {case} pairs"
+    return np.asarray(out)
+
+
+def test_batch_of_one(world):
+    g, dix, planner = world
+    for case in QueryPlanner.CASES:
+        pairs = _pairs_of_case(g, dix, case, 1)
+        _check(g, planner, pairs)
+        counts = dict(planner.last_counts)
+        assert counts[case] == 1
+        assert sum(counts.values()) == 1
+
+
+@pytest.mark.parametrize("case", QueryPlanner.CASES)
+def test_single_case_batches(world, case):
+    """A batch entirely of one case: the other two sub-programs must
+    not be dispatched at all (empty-bucket skip)."""
+    g, dix, planner = world
+    pairs = _pairs_of_case(g, dix, case, 13)   # odd size -> pow2 pad
+    _check(g, planner, pairs)
+    for c, n in planner.last_counts.items():
+        assert n == (13 if c == case else 0)
+
+
+def test_empty_batch(world):
+    g, dix, planner = world
+    got = planner(np.empty(0, np.int32), np.empty(0, np.int32))
+    assert got.shape == (0,)
+    assert all(n == 0 for n in planner.last_counts.values())
+
+
+@pytest.mark.parametrize("size", [1, 2, 3, 5, 17, 100])
+def test_pow2_filler_never_leaks(world, size):
+    """Non-pow2 batch sizes force filler slots; outputs must equal
+    per-pair host Dijkstra regardless — including the degenerate query
+    (0, 0) appearing *legitimately* inside the batch."""
+    g, dix, planner = world
+    rng = np.random.default_rng(size)
+    pairs = rng.integers(0, g.n, size=(size, 2))
+    pairs[0] = (0, 0)          # a real query identical to the filler
+    got = _check(g, planner, pairs)
+    assert got[0] == 0.0
+    # padded sizes are pow2 internally but output length is exact
+    assert got.shape == (size,)
+    assert _pad_pow2(size) >= size
+
+
+def test_self_queries_everywhere(world):
+    g, dix, planner = world
+    s = np.arange(0, g.n, 97, dtype=np.int32)
+    got = planner(s, s)
+    np.testing.assert_array_equal(got, np.zeros(s.size, np.float32))
+
+
+def test_epoch_swap_reuses_compiled_programs(world):
+    """set_index on a same-shaped index must not recompile any
+    sub-program (epoch swaps are pointer flips, DESIGN.md §9)."""
+    g, dix, planner = world
+    rng = np.random.default_rng(0)
+    pairs = rng.integers(0, g.n, size=(32, 2))
+    planner(pairs[:, 0], pairs[:, 1])            # compile at this size
+    compiles_before = {c: fn._cache_size() for c, fn in
+                       planner._fns.items()}
+    planner.set_index(dix)                       # same epoch re-publish
+    planner(pairs[:, 0], pairs[:, 1])
+    compiles_after = {c: fn._cache_size() for c, fn in
+                      planner._fns.items()}
+    assert compiles_before == compiles_after

@@ -1,0 +1,252 @@
+"""Differential harness for incremental index maintenance (DESIGN.md §9).
+
+The contract under test: after any sequence of edge-weight update
+batches, the incrementally-refreshed DeviceIndex is
+
+  1. array-equal, field for field, to a from-scratch device build on
+     the updated graph with the same structure (refresh == rebuild),
+  2. exact against host Dijkstra through the planner AND the monolithic
+     serve path on every epoch,
+
+on randomized ``road_like`` graphs, randomized update batches (jams +
+clears, localized + uniform), and randomized query batches.  Update
+weights are integers, so f32 distance arithmetic is exact and the
+comparisons can demand bitwise equality rather than tolerances.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dijkstra
+from repro.core.device_engine import (build_device_index, classify_updates,
+                                      refresh_index, serve_step)
+from repro.core.dist_engine import EpochedEngine
+from repro.core.graph import road_like, traffic_updates, tree_with_blobs
+from repro.core.supergraph import reweight_index
+
+REFRESHED_FIELDS = ("frag_apsp", "brow", "d_super", "piece_flat",
+                    "dist_to_agent")
+
+
+def _assert_scratch_equal(engine: EpochedEngine) -> None:
+    """Incremental rebuild == from-scratch rebuild, array-equal."""
+    sdix = build_device_index(reweight_index(engine.ix, engine.g))
+    for f in REFRESHED_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(engine.dix, f)),
+            np.asarray(getattr(sdix, f)),
+            err_msg=f"epoch {engine.epoch}: field {f} diverged from "
+                    "from-scratch rebuild")
+
+
+def _assert_serves_exact(engine: EpochedEngine, pairs) -> None:
+    """Planner + monolithic serve vs host Dijkstra on the live graph."""
+    got = engine.query(pairs[:, 0], pairs[:, 1])
+    mono = np.asarray(serve_step(engine.dix,
+                                 jnp.asarray(pairs[:, 0], jnp.int32),
+                                 jnp.asarray(pairs[:, 1], jnp.int32)))
+    for i, (a, b) in enumerate(pairs):
+        want = dijkstra.pair(engine.g, int(a), int(b))
+        for val in (got[i], mono[i]):
+            if np.isinf(want):
+                assert np.isinf(val), (a, b, val)
+            else:
+                assert abs(val - want) < 1e-3, \
+                    (engine.epoch, a, b, val, want)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=4)
+def test_refresh_differential(seed):
+    """Randomized graphs x randomized update sequences x randomized
+    queries: every epoch must match both Dijkstra and a from-scratch
+    rebuild (array-equal)."""
+    rng = np.random.default_rng(seed)
+    g = road_like(int(rng.integers(250, 500)), seed=seed)
+    engine = EpochedEngine(g)
+    pairs = rng.integers(0, g.n, size=(30, 2))
+    _assert_serves_exact(engine, pairs)          # epoch 0 sanity
+    for r in range(2):
+        u, v, w = traffic_updates(
+            engine.g, frac=float(rng.uniform(0.01, 0.08)),
+            seed=seed + r, localized=bool(r % 2),
+            jam_frac=float(rng.uniform(0.0, 1.0)))
+        engine.apply_updates(u, v, w)
+        _assert_scratch_equal(engine)
+        pairs = rng.integers(0, g.n, size=(30, 2))
+        _assert_serves_exact(engine, pairs)
+
+
+def test_refresh_blob_graph_pieces():
+    """Piece-heavy graph: updates land mostly inside DRAs, exercising
+    the piece rewrite + dist-to-agent re-derivation path."""
+    g = tree_with_blobs(25, 6, seed=9)
+    engine = EpochedEngine(g)
+    rng = np.random.default_rng(3)
+    for r in range(3):
+        u, v, w = traffic_updates(engine.g, frac=0.06, seed=50 + r,
+                                  localized=False)
+        stats = engine.apply_updates(u, v, w)
+        assert stats.n_inert == 0    # every edge maps onto a structure
+        _assert_scratch_equal(engine)
+        pairs = rng.integers(0, g.n, size=(25, 2))
+        _assert_serves_exact(engine, pairs)
+    assert engine.epoch == 3
+
+
+def test_decrease_and_increase_batches_agree():
+    """Jam-clear (decrease-only) and jam (increase) batches both land
+    on the same overlay fixpoint as a from-scratch solve, and the stats
+    classify the batch direction correctly."""
+    g = road_like(420, seed=13)
+    engine = EpochedEngine(g)
+    idx = np.arange(0, g.m, 7)
+    u, v = g.edge_u[idx], g.edge_v[idx]
+    stats = engine.apply_updates(u, v, np.maximum(1, g.edge_w[idx] // 3))
+    assert stats.decrease_only
+    _assert_scratch_equal(engine)
+    # now jam the same edges -> increase path
+    stats = engine.apply_updates(u, v, engine.g.edge_w[
+        engine.g.edge_ids(u, v)] * 5)
+    assert not stats.decrease_only and stats.total_increase > 0
+    _assert_scratch_equal(engine)
+
+
+def test_piece_only_increase_not_decrease_only():
+    """Batch direction is judged against the edges' previous weights,
+    not just overlay deltas: a jam entirely inside DRA pieces (no
+    overlay slot touched) must not be classified decrease_only."""
+    g = tree_with_blobs(15, 6, seed=4)
+    engine = EpochedEngine(g)
+    gid_e = np.maximum(engine.plan.piece_gid[g.edge_u],
+                       engine.plan.piece_gid[g.edge_v])
+    idx = np.nonzero(gid_e >= 0)[0][:5]
+    assert idx.size
+    stats = engine.apply_updates(g.edge_u[idx], g.edge_v[idx],
+                                 g.edge_w[idx] * 3)
+    assert not stats.decrease_only and stats.total_increase > 0
+    _assert_scratch_equal(engine)
+
+
+def test_failed_refresh_rolls_back_plan_caches():
+    """An exception mid-refresh must leave the plan's weight caches
+    describing the still-published epoch, so the next refresh composes
+    correctly (refresh == rebuild even after a failure)."""
+    g = road_like(400, seed=19)
+    engine = EpochedEngine(g)
+    frag_adj_before = engine.plan.frag_adj.copy()
+    sup_w_before = engine.plan.sup_w.copy()
+    u, v, w = traffic_updates(g, frac=0.05, seed=2)
+    bad_g = object()       # piece stage will blow up on .subgraph
+    has_piece = any(
+        engine.plan.piece_gid[a] >= 0 or engine.plan.piece_gid[b] >= 0
+        for a, b in zip(u, v))
+    if has_piece:
+        with pytest.raises(AttributeError):
+            refresh_index(engine.dix, engine.plan, bad_g, u, v, w)
+        np.testing.assert_array_equal(engine.plan.frag_adj,
+                                      frag_adj_before)
+        np.testing.assert_array_equal(engine.plan.sup_w, sup_w_before)
+    # and a real refresh afterwards still matches scratch
+    engine.apply_updates(u, v, w)
+    _assert_scratch_equal(engine)
+
+
+def test_classify_updates_targets():
+    """Every update lands on its structural owner: same-fragment edges
+    dirty exactly one fragment, cross-fragment edges exactly one E_B
+    slot, DRA-internal edges exactly one piece."""
+    g = road_like(500, seed=17)
+    engine = EpochedEngine(g)
+    plan = engine.plan
+    fa = plan.frag_of
+    # same-fragment shrink edge
+    m_frag = (fa[g.edge_u] >= 0) & (fa[g.edge_u] == fa[g.edge_v])
+    # cross-fragment shrink edge
+    m_eb = (fa[g.edge_u] >= 0) & (fa[g.edge_v] >= 0) \
+        & (fa[g.edge_u] != fa[g.edge_v])
+    # piece edge
+    m_piece = (plan.piece_gid[g.edge_u] >= 0) \
+        | (plan.piece_gid[g.edge_v] >= 0)
+    for mask, kind in ((m_frag, "frag"), (m_eb, "eb"),
+                       (m_piece, "piece")):
+        assert mask.any(), f"graph has no {kind} edge to test"
+        e = np.nonzero(mask)[0][0]
+        upd = classify_updates(plan, [g.edge_u[e]], [g.edge_v[e]],
+                               [g.edge_w[e] + 1])
+        assert upd.n_inert == 0
+        assert upd.dirty_frags.size == (1 if kind == "frag" else 0)
+        assert upd.eb_slots.size == (1 if kind == "eb" else 0)
+        assert upd.dirty_gids.size == (1 if kind == "piece" else 0)
+
+
+def test_unknown_edge_rejected():
+    g = road_like(300, seed=1)
+    with pytest.raises(ValueError):
+        g.with_edge_weights([0], [0], [5.0])
+    # a non-edge pair
+    a, b = int(g.edge_u[0]), int(g.edge_v[-1])
+    if g.edge_ids([a], [b])[0] < 0:
+        with pytest.raises(ValueError):
+            g.with_edge_weights([a], [b], [5.0])
+    with pytest.raises(ValueError):
+        g.with_edge_weights(g.edge_u[:1], g.edge_v[:1], [-1.0])
+
+
+def test_with_edge_weights_preserves_layout():
+    """CSR and edge-list views stay aligned after an update."""
+    g = road_like(300, seed=2)
+    idx = np.arange(0, g.m, 5)
+    w_new = g.edge_w[idx] + 7
+    g2 = g.with_edge_weights(g.edge_u[idx], g.edge_v[idx], w_new)
+    assert g2.n == g.n and g2.m == g.m
+    np.testing.assert_array_equal(g2.edge_u, g.edge_u)
+    np.testing.assert_array_equal(g2.edge_v, g.edge_v)
+    np.testing.assert_array_equal(g2.indices, g.indices)
+    np.testing.assert_array_equal(g2.edge_w[idx], w_new)
+    keep = np.ones(g.m, bool)
+    keep[idx] = False
+    np.testing.assert_array_equal(g2.edge_w[keep], g.edge_w[keep])
+    # CSR weights agree with the edge list everywhere
+    for u in range(0, g.n, 17):
+        nbrs, ws = g2.neighbors(u)
+        for v, w in zip(nbrs, ws):
+            e = g2.edge_ids([u], [v])[0]
+            assert g2.edge_w[e] == w
+
+
+def test_refresh_stats_shape():
+    """Refresh touches only what the update batch dirties."""
+    g = road_like(600, seed=23)
+    engine = EpochedEngine(g)
+    u, v, w = traffic_updates(g, frac=0.01, seed=5, localized=True)
+    dix_before = engine.dix
+    stats = engine.apply_updates(u, v, w)
+    assert stats.n_updates == len(u)
+    assert 0 < stats.n_dirty_frags <= stats.n_frags
+    assert stats.dirty_frag_frac <= 1.0
+    assert stats.timings["total"] > 0
+    # untouched fields are shared by reference across epochs (immutable
+    # double-buffering, not copies)
+    for f in ("agent_of", "frag_of", "pos_in_frag", "piece_gid",
+              "pos_in_piece", "bpos", "bvalid", "bnd_super"):
+        assert getattr(engine.dix, f) is getattr(dix_before, f)
+
+
+def test_refresh_index_composes_without_engine():
+    """refresh_index is usable standalone (no EpochedEngine): feed it
+    the plan + updated graph and the result matches a fresh build."""
+    from repro.core.device_engine import build_device_index_with_plan
+    from repro.core.supergraph import build_index
+
+    g = road_like(350, seed=31)
+    ix = build_index(g)
+    dix, plan = build_device_index_with_plan(ix)
+    u, v, w = traffic_updates(g, frac=0.05, seed=8)
+    g2 = g.with_edge_weights(u, v, w)
+    dix2, _stats = refresh_index(dix, plan, g2, u, v, w)
+    sdix = build_device_index(reweight_index(ix, g2))
+    for f in REFRESHED_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(dix2, f)),
+                                      np.asarray(getattr(sdix, f)))
