@@ -202,7 +202,8 @@ def exp7_incremental_refresh(out: List[str]) -> None:
         match = all(
             np.array_equal(np.asarray(getattr(eng.dix, f)),
                            np.asarray(getattr(sdix, f)))
-            for f in ("frag_apsp", "brow", "d_super", "piece_flat",
+            for f in ("frag_apsp", "frag_next", "brow", "d_super",
+                      "super_next", "piece_flat", "piece_next",
                       "dist_to_agent"))
         out.append(f"exp7,{name},{r},0.02,"
                    f"{stats.dirty_frag_frac:.3f},"
@@ -212,6 +213,54 @@ def exp7_incremental_refresh(out: List[str]) -> None:
                    f"{int(match)}")
 
 
+def exp8_path_reconstruction(out: List[str]) -> None:
+    """Exp-8 (beyond the paper): exact path serving via witness
+    unwinding (DESIGN.md §10) vs distance-only serving vs host Dijkstra
+    with predecessors.
+
+    The witness mode's extra device cost is the argmin carry; the host
+    cost is O(path length) table chasing per query — no graph search.
+    Every unwound path is validated edge-by-edge and weight-exact.
+    """
+    from repro.core.dist_engine import EpochedEngine
+    from repro.core.paths import path_weight
+
+    out.append("exp8,graph,algo,us_per_query,mean_hops,exact")
+    name, g = next(_graphs((2500,)))
+    eng = EpochedEngine(g, paths=True)
+    rng = np.random.default_rng(8)
+    q = 512
+    s = rng.integers(0, g.n, q).astype(np.int32)
+    t = rng.integers(0, g.n, q).astype(np.int32)
+    eng.warmup(q)
+    eng.unwinder()                       # snapshot outside the timing
+    # distance-only planner serving
+    t0 = time.perf_counter()
+    eng.query(s, t)
+    dist_us = (time.perf_counter() - t0) / q * 1e6
+    # witness serving + host unwind
+    t0 = time.perf_counter()
+    dist, paths = eng.query_path(s, t)
+    path_us = (time.perf_counter() - t0) / q * 1e6
+    hops = [len(p) - 1 for p in paths if p is not None]
+    exact = all(
+        (p is None and np.isinf(dist[i]))
+        or path_weight(g, p) == float(dist[i])
+        == dijkstra.pair(g, int(s[i]), int(t[i]))
+        for i, p in list(enumerate(paths))[:64])
+    # host baseline: one predecessor Dijkstra per query
+    t0 = time.perf_counter()
+    for a, b in zip(s[:64], t[:64]):
+        dijkstra.pair_with_path(g, int(a), int(b))
+    host_us = (time.perf_counter() - t0) / 64 * 1e6
+    out.append(f"exp8,{name},serve-dist,{dist_us:.1f},0,1")
+    out.append(f"exp8,{name},serve-paths,{path_us:.1f},"
+               f"{np.mean(hops):.1f},{int(exact)}")
+    out.append(f"exp8,{name},dijkstra-path,{host_us:.1f},"
+               f"{np.mean(hops):.1f},1")
+
+
 ALL = [table1_landmark_overhead, table3_agents, table4_partitions,
        table5_hybrid_covers, table6_super_graphs, exp4_preprocessing,
-       exp5_query_latency, exp7_incremental_refresh]
+       exp5_query_latency, exp7_incremental_refresh,
+       exp8_path_reconstruction]

@@ -30,6 +30,16 @@ def _perf_records(rows: list[str]) -> list[dict]:
                 "us_per_query": us,
                 "qps": round(1e6 / us, 1) if us > 0 else float("inf"),
             })
+        elif parts[0] == "exp8" and parts[1] != "graph":
+            us = float(parts[3])
+            records.append({
+                "section": "exp8_paths",
+                "graph": parts[1],
+                "algo": parts[2],
+                "us_per_query": us,
+                "mean_hops": float(parts[4]),
+                "exact": bool(int(parts[5])),
+            })
         elif parts[0] == "exp7" and parts[1] != "graph":
             records.append({
                 "section": "exp7_refresh",

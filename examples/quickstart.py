@@ -11,10 +11,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dijkstra
-from repro.core.device_engine import build_device_index, serve_step
+from repro.core.device_engine import (build_device_index_with_plan,
+                                      serve_step)
 from repro.core.dist_engine import QueryPlanner
 from repro.core.engine import DislandEngine
 from repro.core.graph import road_like
+from repro.core.paths import PathUnwinder, path_weight
 from repro.core.supergraph import build_index
 
 
@@ -36,7 +38,7 @@ def main() -> None:
     print(f"Dijkstra dist({s},{t}) = {dijkstra.pair(g, s, t):.1f}")
 
     # 3. device engine: one jitted program answers a whole batch
-    dix = build_device_index(ix)
+    dix, plan = build_device_index_with_plan(ix)
     rng = np.random.default_rng(1)
     qs = jnp.asarray(rng.integers(0, g.n, 512), jnp.int32)
     qt = jnp.asarray(rng.integers(0, g.n, 512), jnp.int32)
@@ -50,6 +52,16 @@ def main() -> None:
     dist_p = planner(np.asarray(qs), np.asarray(qt))
     assert np.allclose(np.asarray(dist), dist_p, rtol=1e-4, equal_nan=False)
     print(f"planner buckets: {planner.last_counts} (matches serve_step)")
+
+    # 5. exact *paths*: witness-mode serving + host-side unwinding
+    #    (DESIGN.md §10) — same index, no extra graph search
+    d_w, wit = planner.query_witness(np.asarray(qs[:8]),
+                                     np.asarray(qt[:8]))
+    unwinder = PathUnwinder(dix, plan)
+    path = unwinder.unwind(int(qs[0]), int(qt[0]), d_w[0], wit[0])
+    assert path_weight(g, path) == float(d_w[0])
+    print(f"path({int(qs[0])},{int(qt[0])}): {len(path) - 1} hops, "
+          f"weight {path_weight(g, path):.0f} == served distance")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""CI perf-regression gate for the serve path.
+
+Runs the serve smoke with ``--json`` into a fresh records file, then
+compares the fresh µs/query against the *median of the last N committed*
+``BENCH_serve.json`` records for the same config (section/graph/mode/
+backend/batch_size).  Fails (exit 1) when the fresh number exceeds
+``--factor`` x that median — 2.5x by default, deliberately loose because
+shared CI runners are noisy; the gate exists to catch order-of-magnitude
+mistakes (an accidental [q, mb, mb] materialization, a recompile in the
+serving loop), not 10% drift.  The median-of-history baseline makes one
+slow committed record unable to poison the gate in either direction.
+
+    python scripts/bench_gate.py                         # CI invocation
+    python scripts/bench_gate.py --inject-slowdown 10    # self-test: the
+        fresh measurement is multiplied by 10x, which MUST fail the gate
+
+The fresh records file (``--fresh``) is uploaded as a workflow artifact
+by CI so the cross-run trajectory is inspectable without committing
+noisy runner numbers to the repo history.
+
+With no matching history (new graph/mode/backend config) the gate warns
+and passes: a config's first record cannot regress against itself.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def run_serve(args) -> dict:
+    """Run the serve smoke as a subprocess, return its fresh record."""
+    from repro.perflog import latest
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--nodes", str(args.nodes), "--batches", str(args.batches),
+           "--batch-size", str(args.batch_size), "--mode", args.mode,
+           "--validate", str(args.validate), "--json", args.fresh]
+    print("bench_gate: running", " ".join(cmd), flush=True)
+    subprocess.run(cmd, check=True, cwd=REPO, env=env)
+    rec = latest(args.fresh, section="serve", graph=f"road{args.nodes}",
+                 mode=args.mode, batch_size=args.batch_size)
+    if rec is None:
+        raise SystemExit("bench_gate: serve run produced no record")
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--history", default=os.path.join(
+        REPO, "BENCH_serve.json"),
+        help="committed perf-record history to gate against")
+    ap.add_argument("--fresh", default=os.path.join(
+        REPO, "bench_gate_fresh.json"),
+        help="where the fresh run's records land (CI artifact)")
+    ap.add_argument("--nodes", type=int, default=4000)
+    ap.add_argument("--batches", type=int, default=3)
+    ap.add_argument("--batch-size", type=int, default=1024)
+    ap.add_argument("--validate", type=int, default=16)
+    ap.add_argument("--mode", default="planner")
+    ap.add_argument("--last", type=int, default=5,
+                    help="history records to take the median over")
+    ap.add_argument("--factor", type=float,
+                    default=float(os.environ.get("BENCH_GATE_FACTOR",
+                                                 "2.5")),
+                    help="fail when fresh > factor * median(history); "
+                         "overridable via BENCH_GATE_FACTOR (the "
+                         "committed baseline is machine-relative — if "
+                         "a CI runner class is uniformly slower than "
+                         "the recording machine, widen the factor or "
+                         "commit a runner-measured record rather than "
+                         "deleting the gate)")
+    ap.add_argument("--inject-slowdown", type=float, default=1.0,
+                    help="multiply the fresh measurement (gate "
+                         "self-test hook; >= factor must fail)")
+    args = ap.parse_args()
+
+    from repro.perflog import read_records
+
+    fresh = run_serve(args)
+    fresh_us = fresh["us_per_query"] * args.inject_slowdown
+    if args.inject_slowdown != 1.0:
+        print(f"bench_gate: INJECTED {args.inject_slowdown}x slowdown "
+              f"({fresh['us_per_query']} -> {fresh_us:.3f}us/query)")
+
+    hist = [r for r in read_records(args.history)
+            if r.get("section") == "serve"
+            and r.get("graph") == f"road{args.nodes}"
+            and r.get("mode") == args.mode
+            and r.get("backend") == fresh.get("backend")
+            and r.get("batch_size") == args.batch_size
+            and isinstance(r.get("us_per_query"), (int, float))]
+    if not hist:
+        print(f"bench_gate: PASS (no committed history for "
+              f"road{args.nodes}/{args.mode}/{fresh.get('backend')}/"
+              f"b{args.batch_size} in {args.history}; nothing to "
+              "regress against)")
+        return 0
+    window = [r["us_per_query"] for r in hist[-args.last:]]
+    baseline = statistics.median(window)
+    limit = args.factor * baseline
+    print(f"bench_gate: fresh {fresh_us:.3f}us/query vs median of last "
+          f"{len(window)} committed records {baseline:.3f}us/query "
+          f"(limit {limit:.3f} = {args.factor}x)")
+    if fresh_us > limit:
+        print(f"bench_gate: FAIL — {fresh_us:.3f}us/query is "
+              f"{fresh_us / baseline:.2f}x the committed median "
+              f"(allowed {args.factor}x)")
+        return 1
+    print("bench_gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,8 +31,20 @@ run_stage() {
     fi
 }
 
+# Lint first (cheapest signal).  ruff is a CI dependency, not a
+# container one — skip gracefully where it isn't installed.
+if command -v ruff >/dev/null 2>&1; then
+    run_stage "ruff lint" ruff check .
+else
+    echo "== ruff lint =="
+    echo "-- ruff lint: SKIPPED (ruff not installed)"
+fi
+
 if [[ "${1:-}" != "--fast" ]]; then
-    run_stage "tier-1 tests" python -m pytest -x -q
+    # no -x: CI should report ALL failures, not stop at the first;
+    # --durations surfaces the slowest tests so suite growth stays
+    # accountable
+    run_stage "tier-1 tests" python -m pytest -q --durations=10
 fi
 
 run_stage "serve smoke (2k nodes, CPU, validated)" \

@@ -54,14 +54,17 @@ class DeviceIndex:
     piece_stride: jax.Array      # int32 row stride (= padded piece size)
     # fragments
     frag_apsp: jax.Array         # f32 [k, maxf, maxf]
+    frag_next: jax.Array         # int32 [k, maxf, maxf] FW first hop (-1)
     brow: jax.Array              # f32 [k, maxf, mb] node->boundary rows
     bpos: jax.Array              # int32 [k, mb] boundary position in frag
     bvalid: jax.Array            # bool [k, mb]
     bnd_super: jax.Array         # int32 [k, mb] super id (S = sentinel)
     # super graph
     d_super: jax.Array           # f32 [S+1, S+1] (+inf sentinel row/col)
+    super_next: jax.Array        # int32 [S+1, S+1] overlay first hop (-1)
     # pieces: every bucketed APSP tensor, flattened end to end
     piece_flat: jax.Array        # f32 [sum_b P_b * mp_b * mp_b]
+    piece_next: jax.Array        # int32, same layout as piece_flat (-1)
 
     def tree_flatten(self):
         fields = dataclasses.fields(self)
@@ -297,10 +300,16 @@ def _brow_from(frag_apsp: jax.Array, bpos: np.ndarray,
 
 
 def frag_stage(plan: BuildPlan, *, force=None) -> tuple[jax.Array,
+                                                        jax.Array,
                                                         jax.Array]:
-    """Stage 1: batched Pallas FW over every fragment -> (apsp, brow)."""
-    frag_apsp = ops.fw_batch(jnp.asarray(plan.frag_adj), force=force)
-    return frag_apsp, _brow_from(frag_apsp, plan.bpos, plan.bvalid)
+    """Stage 1: batched witness FW over every fragment ->
+    (apsp, brow, next).  The witness kernel's distance output is
+    bit-identical to the distance-only kernel (same recurrence, same
+    pivot order), so the path table rides along for free."""
+    frag_apsp, frag_next = ops.fw_batch_next(jnp.asarray(plan.frag_adj),
+                                             force=force)
+    return (frag_apsp, _brow_from(frag_apsp, plan.bpos, plan.bvalid),
+            frag_next)
 
 
 def super_weights(plan: BuildPlan, blocks: np.ndarray,
@@ -335,26 +344,53 @@ def super_overlay(plan: BuildPlan) -> jax.Array:
     return jnp.asarray(m)
 
 
-def super_stage(plan: BuildPlan, *, force=None) -> jax.Array:
-    """Stage 2: SUPER APSP — dense FW closure of the boundary overlay.
+def overlay_slot_table(plan: BuildPlan) -> np.ndarray:
+    """Winning slot id per overlay adjacency pair [S, S] (-1: none).
+
+    Writes slots in descending weight order so the last (= lightest)
+    write wins, matching super_overlay's min-merge of parallel slots.
+    Computed whenever the overlay is (re)closed and carried on the
+    published DeviceIndex as the host-side ``host_ov_slot`` sidecar, so
+    path unwinding always reads slot provenance consistent with the
+    d_super/super_next epoch it serves — never the live-mutating
+    ``plan.sup_w`` (DESIGN.md §10).
+    """
+    ov = np.full((plan.S, plan.S), -1, np.int32)
+    if plan.sup_w.size:
+        order = np.argsort(plan.sup_w, kind="stable")[::-1]
+        src, dst = plan.sup_src[order], plan.sup_dst[order]
+        ov[src, dst] = order
+        ov[dst, src] = order
+    return ov
+
+
+def super_stage(plan: BuildPlan, *, force=None) -> tuple[jax.Array,
+                                                         jax.Array]:
+    """Stage 2: SUPER APSP — dense witness FW closure of the boundary
+    overlay -> (d_super, super_next).
 
     The overlay is small and clique-dense, which is exactly the regime
     where dense (min,+) algebra crushes edge-list relaxation: the FW
-    closure (blocked Pallas kernel on TPU) solves S=625 in ~60ms where
-    the segment_min Bellman-Ford needed a diameter's worth of ~750ms
-    sweeps (~20s) — measured on road4000, bit-identical results.  The
-    same closure serves scratch builds and incremental refreshes: a
-    warm-started BF was tried for the refresh path and measured out
-    (negative-result note in sssp.py; the edge-list BF remains the
-    tool for the large sparse sharded build,
-    dist_engine.super_apsp_sharded).
+    closure solves S=625 in ~60ms where the segment_min Bellman-Ford
+    needed a diameter's worth of ~750ms sweeps (~20s) — measured on
+    road4000, bit-identical results.  The same closure serves scratch
+    builds and incremental refreshes: a warm-started BF was tried for
+    the refresh path and measured out (negative-result note in sssp.py;
+    the edge-list BF remains the tool for the large sparse sharded
+    build, dist_engine.super_apsp_sharded).  Since PR 3 the closure
+    carries the first-hop witness matrix (DESIGN.md §10): super_next
+    chains through overlay-*adjacent* super nodes, and each adjacency
+    hop is resolved back to a concrete slot by PathUnwinder via the
+    epoch's overlay_slot_table sidecar.
     """
     S = plan.S
     d_super = jnp.full((S + 1, S + 1), INF, jnp.float32)
+    super_next = jnp.full((S + 1, S + 1), -1, jnp.int32)
     if S == 0 or plan.sup_src.size == 0:
-        return d_super
-    d_s = ops.fw_apsp(super_overlay(plan), force=force)
-    return d_super.at[:S, :S].set(d_s)
+        return d_super, super_next
+    d_s, n_s = ops.fw_next(super_overlay(plan), force=force)
+    return (d_super.at[:S, :S].set(d_s),
+            super_next.at[:S, :S].set(n_s))
 
 
 def _piece_adj(g, members: np.ndarray, cap: int) -> np.ndarray:
@@ -366,12 +402,13 @@ def _piece_adj(g, members: np.ndarray, cap: int) -> np.ndarray:
 
 
 def _fw_bucket(adjs: List[np.ndarray], *, force=None,
-               pad_pow2: bool = False) -> np.ndarray:
-    """Batched FW over equally-padded piece matrices.  ``pad_pow2``
-    (refresh path) rounds the batch up with +inf dummies, floored at 8,
-    so the jitted FW program compiles for O(log P) distinct batch
-    shapes — and a typical localized update batch always hits the
-    already-warm 8-shape (EpochedEngine pre-compiles it)."""
+               pad_pow2: bool = False) -> tuple[np.ndarray, np.ndarray]:
+    """Batched witness FW over equally-padded piece matrices ->
+    (dist blocks, next blocks).  ``pad_pow2`` (refresh path) rounds the
+    batch up with +inf dummies, floored at 8, so the jitted FW program
+    compiles for O(log P) distinct batch shapes — and a typical
+    localized update batch always hits the already-warm 8-shape
+    (EpochedEngine pre-compiles it)."""
     cap = adjs[0].shape[0]
     batch = np.stack(adjs)
     if pad_pow2 and _pow2(len(adjs), floor=8) != len(adjs):
@@ -379,26 +416,30 @@ def _fw_bucket(adjs: List[np.ndarray], *, force=None,
                        np.float32)
         full[:len(adjs)] = batch
         batch = full
-    out = np.asarray(ops.fw_batch(jnp.asarray(batch), force=force))
-    return out[:len(adjs)]
+    out, nxt = ops.fw_batch_next(jnp.asarray(batch), force=force)
+    return (np.asarray(out)[:len(adjs)], np.asarray(nxt)[:len(adjs)])
 
 
-def piece_stage(plan: BuildPlan, g, *, force=None) -> np.ndarray:
+def piece_stage(plan: BuildPlan, g, *, force=None) -> tuple[np.ndarray,
+                                                            np.ndarray]:
     """Stage 3: per-piece APSP, size-bucketed batched FW, flattened
-    end-to-end into the single piece_flat gather table (DESIGN.md §3)."""
+    end-to-end into the single piece_flat gather table (DESIGN.md §3),
+    plus the identically-laid-out first-hop witness table piece_next."""
     total = int(sum(int(c) * int(c) for c in plan.piece_cap))
     flat = np.full(max(total, 1), INF, dtype=np.float32)
+    nflat = np.full(max(total, 1), -1, dtype=np.int32)
     for cap in PIECE_BUCKETS:
         gids = np.nonzero(plan.piece_cap == cap)[0]
         if gids.size == 0:
             continue
         adjs = [_piece_adj(g, plan.piece_members[gid], cap)
                 for gid in gids]
-        blocks = _fw_bucket(adjs, force=force)
-        for gid, block in zip(gids, blocks):
+        blocks, nexts = _fw_bucket(adjs, force=force)
+        for gid, block, nxt in zip(gids, blocks, nexts):
             base = plan.piece_base[gid]
             flat[base:base + cap * cap] = block.reshape(-1)
-    return flat
+            nflat[base:base + cap * cap] = nxt.reshape(-1)
+    return flat, nflat
 
 
 def _node_piece_addressing(plan: BuildPlan) -> tuple[np.ndarray,
@@ -418,10 +459,10 @@ def build_device_index_with_plan(
     """Full from-scratch build: compose every stage, keep the plan
     around so refresh_index can run incrementally afterwards."""
     plan = make_build_plan(ix)
-    frag_apsp, brow = frag_stage(plan, force=force)
+    frag_apsp, brow, frag_next = frag_stage(plan, force=force)
     super_weights(plan, np.asarray(frag_apsp))
-    d_super = super_stage(plan, force=force)
-    piece_flat = piece_stage(plan, ix.g, force=force)
+    d_super, super_next = super_stage(plan, force=force)
+    piece_flat, piece_next = piece_stage(plan, ix.g, force=force)
     base, stride = _node_piece_addressing(plan)
     dix = DeviceIndex(
         agent_of=jnp.asarray(plan.agent_of),
@@ -434,13 +475,19 @@ def build_device_index_with_plan(
         piece_base=jnp.asarray(base),
         piece_stride=jnp.asarray(stride),
         frag_apsp=frag_apsp,
+        frag_next=frag_next,
         brow=brow,
         bpos=jnp.asarray(plan.bpos),
         bvalid=jnp.asarray(plan.bvalid),
         bnd_super=jnp.asarray(plan.bnd_super),
         d_super=d_super,
+        super_next=super_next,
         piece_flat=jnp.asarray(piece_flat),
+        piece_next=jnp.asarray(piece_next),
     )
+    # host-side sidecar (not a pytree field): slot provenance for the
+    # overlay closure this index was built with (overlay_slot_table)
+    dix.host_ov_slot = overlay_slot_table(plan)
     return dix, plan
 
 
@@ -460,7 +507,8 @@ def warmup_refresh(plan: BuildPlan, *, force=None) -> None:
                for cap in np.unique(plan.piece_cap)]
     for shp in set(shapes):
         jax.block_until_ready(
-            ops.fw_batch(jnp.full(shp, INF, jnp.float32), force=force))
+            ops.fw_batch_next(jnp.full(shp, INF, jnp.float32),
+                              force=force))
 
 
 # ---------------------------------------------------------------------------
@@ -568,22 +616,24 @@ class RefreshStats:
 
 
 def refresh_frag_stage(plan: BuildPlan, frag_apsp: jax.Array,
-                       brow: jax.Array, upd: UpdateClass, *,
+                       brow: jax.Array, frag_next: jax.Array,
+                       upd: UpdateClass, *,
                        force=None) -> tuple[jax.Array, jax.Array,
-                                            np.ndarray]:
-    """Re-run FW on the dirty fragment subset only.
+                                            jax.Array, np.ndarray]:
+    """Re-run witness FW on the dirty fragment subset only.
 
     The dirty batch is padded to a power of two with +inf dummies so
     refreshes compile O(log k) FW programs total; FW is row-independent
     across the batch, so the dirty rows come out bit-identical to a
-    full-batch from-scratch run.
+    full-batch from-scratch run — distances and first-hop witnesses
+    alike, which is what keeps epochs path-consistent (DESIGN.md §10).
     """
     plan.frag_adj[upd.frag_fi, upd.frag_pu, upd.frag_pv] = upd.frag_w
     plan.frag_adj[upd.frag_fi, upd.frag_pv, upd.frag_pu] = upd.frag_w
     dirty = upd.dirty_frags
     if dirty.size == 0:
-        return frag_apsp, brow, np.empty((0, plan.maxf, plan.maxf),
-                                         np.float32)
+        return frag_apsp, brow, frag_next, np.empty(
+            (0, plan.maxf, plan.maxf), np.float32)
     # every array op below runs at the padded size: repeating the first
     # dirty fragment is idempotent (same rows scattered twice), and the
     # fixed shapes keep refreshes on pre-compiled programs
@@ -593,31 +643,34 @@ def refresh_frag_stage(plan: BuildPlan, frag_apsp: jax.Array,
     pad = np.concatenate([dirty, np.full(p - d, dirty[0], np.int64)]) \
         if p > d else dirty
     jpad = jnp.asarray(pad)
-    jblocks = jnp.asarray(
-        ops.fw_batch(jnp.asarray(plan.frag_adj[pad]), force=force))
+    jblocks, jnexts = ops.fw_batch_next(jnp.asarray(plan.frag_adj[pad]),
+                                        force=force)
     frag_apsp = frag_apsp.at[jpad].set(jblocks)
+    frag_next = frag_next.at[jpad].set(jnexts)
     br = _brow_from(jblocks, plan.bpos[pad], plan.bvalid[pad])
-    return frag_apsp, brow.at[jpad].set(br), np.asarray(jblocks[:d])
+    return (frag_apsp, brow.at[jpad].set(br), frag_next,
+            np.asarray(jblocks[:d]))
 
 
 def refresh_piece_stage(plan: BuildPlan, g_new, dirty_gids: np.ndarray,
-                        piece_flat: np.ndarray,
+                        piece_flat: np.ndarray, piece_next: np.ndarray,
                         dist_to_agent: np.ndarray, *,
                         force=None) -> None:
-    """Recompute only the dirty pieces, writing their APSP blocks in
-    place into the flat table and re-deriving dist-to-agent for their
-    members from the agent's APSP row (paths from a represented node to
-    its agent never leave the piece, Props 3-9)."""
+    """Recompute only the dirty pieces, writing their APSP + witness
+    blocks in place into the flat tables and re-deriving dist-to-agent
+    for their members from the agent's APSP row (paths from a
+    represented node to its agent never leave the piece, Props 3-9)."""
     for cap in PIECE_BUCKETS:
         gids = [g for g in dirty_gids if plan.piece_cap[g] == cap]
         if not gids:
             continue
         adjs = [_piece_adj(g_new, plan.piece_members[gid], cap)
                 for gid in gids]
-        blocks = _fw_bucket(adjs, force=force, pad_pow2=True)
-        for gid, block in zip(gids, blocks):
+        blocks, nexts = _fw_bucket(adjs, force=force, pad_pow2=True)
+        for gid, block, nxt in zip(gids, blocks, nexts):
             base = plan.piece_base[gid]
             piece_flat[base:base + cap * cap] = block.reshape(-1)
+            piece_next[base:base + cap * cap] = nxt.reshape(-1)
             members = plan.piece_members[gid]
             inner = members != plan.piece_agent[gid]
             dist_to_agent[members[inner]] = block[
@@ -679,8 +732,9 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
     sup_w_before = plan.sup_w.copy()
     try:
         t0 = time.perf_counter()
-        frag_apsp, brow, blocks = refresh_frag_stage(
-            plan, dix.frag_apsp, dix.brow, upd, force=force)
+        frag_apsp, brow, frag_next, blocks = refresh_frag_stage(
+            plan, dix.frag_apsp, dix.brow, dix.frag_next, upd,
+            force=force)
         timings["frag_fw"] = time.perf_counter() - t0
 
         # ---- SUPER: regather dirty slot weights, re-close overlay ---
@@ -694,22 +748,29 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
         plan.sup_w[upd.eb_slots] = upd.eb_w
         slot_w_new = plan.sup_w[touched_slots]
         if (slot_w_old != slot_w_new).any():
-            d_super = super_stage(plan, force=force)
+            d_super, super_next = super_stage(plan, force=force)
+            ov_slot = overlay_slot_table(plan)
         else:
-            d_super = dix.d_super
+            # no overlay weight changed: closure AND witnesses are
+            # still exact, so the path tables carry over too
+            d_super, super_next = dix.d_super, dix.super_next
+            ov_slot = getattr(dix, "host_ov_slot", None)
         timings["super_fw"] = time.perf_counter() - t0
 
         # ---- pieces + dist-to-agent ---------------------------------
         t0 = time.perf_counter()
         if upd.dirty_gids.size:
             piece_flat = np.asarray(dix.piece_flat).copy()
+            piece_next = np.asarray(dix.piece_next).copy()
             dist_to_agent = np.asarray(dix.dist_to_agent).copy()
             refresh_piece_stage(plan, g_new, upd.dirty_gids, piece_flat,
-                                dist_to_agent, force=force)
+                                piece_next, dist_to_agent, force=force)
             piece_flat_j = jnp.asarray(piece_flat)
+            piece_next_j = jnp.asarray(piece_next)
             dist_j = jnp.asarray(dist_to_agent)
         else:
             piece_flat_j = dix.piece_flat
+            piece_next_j = dix.piece_next
             dist_j = dix.dist_to_agent
         timings["pieces"] = time.perf_counter() - t0
     except BaseException:
@@ -735,8 +796,12 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
 
     timings["total"] = time.perf_counter() - t_all
     new_dix = dataclasses.replace(
-        dix, frag_apsp=frag_apsp, brow=brow, d_super=d_super,
-        piece_flat=piece_flat_j, dist_to_agent=dist_j)
+        dix, frag_apsp=frag_apsp, frag_next=frag_next, brow=brow,
+        d_super=d_super, super_next=super_next,
+        piece_flat=piece_flat_j, piece_next=piece_next_j,
+        dist_to_agent=dist_j)
+    if ov_slot is not None:
+        new_dix.host_ov_slot = ov_slot
     stats = RefreshStats(
         n_updates=int(np.asarray(u).size),
         n_dirty_frags=int(upd.dirty_frags.size), n_frags=plan.k,
@@ -749,6 +814,21 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
 
 
 # ---------------------------------------------------------------------------
+# serving.  Witness conventions (DESIGN.md §10): the *_w variants return
+# (dist, wit) with wit int32 per query:
+#   same-DRA bucket:  WIT_PIECE (same-piece table won) or WIT_VIA_AGENT
+#   cross buckets:    x * (S+1) + y — the winning SUPER boundary pair —
+#                     or WIT_LOCAL (intra-fragment path won)
+#   any bucket:       WIT_NONE when the distance is +inf
+# The host-side PathUnwinder (paths.py) turns (s, t, wit) into a node
+# sequence by walking frag_next / piece_next / super_next.
+# ---------------------------------------------------------------------------
+WIT_NONE = -1       # unreachable; nothing to unwind
+WIT_LOCAL = -2      # case 2, intra-fragment path beat the SUPER combine
+WIT_VIA_AGENT = 0   # case 1, s -> agent -> t
+WIT_PIECE = 1       # case 1, same-piece direct path
+
+
 def _same_dra_dist(dix: DeviceIndex, s, t, ds, dt):
     """Case 1: same agent.  Same piece -> one flat gather; else via
     agent.  The flat layout replaces the per-bucket Python loop with a
@@ -795,12 +875,84 @@ def _combine_mid(dix: DeviceIndex, row_s, bs, row_t, bt, *, force=None):
     return jnp.min(tmp + row_t, axis=1)
 
 
+def _combine_mid_w(dix: DeviceIndex, row_s, bs, row_t, bt, *,
+                   force=None):
+    """Witness variant of _combine_mid -> (mid, wx, wy) where (wx, wy)
+    is the winning SUPER boundary pair in super ids (-1 when mid is
+    +inf).  Same two layouts as the distance path: fused argmin kernel
+    against the scattered rows on TPU, b1-chunked gather on CPU."""
+    if ops.use_pallas(force):
+        s1 = dix.d_super.shape[0]
+        q = row_s.shape[0]
+        qi = jnp.arange(q, dtype=jnp.int32)[:, None]
+        rs = jnp.full((q, s1), INF, row_s.dtype).at[qi, bs].min(row_s)
+        rt = jnp.full((q, s1), INF, row_t.dtype).at[qi, bt].min(row_t)
+        return ops.minplus_twoside_argmin(rs, dix.d_super, rt,
+                                          force=force)
+    q, mb = row_s.shape
+    c = min(8, mb)                       # mb is padded to a multiple of 8
+
+    def body(i, carry):
+        acc, accb = carry
+        r_c = jax.lax.dynamic_slice_in_dim(row_s, i * c, c, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(bs, i * c, c, axis=1)
+        blk = dix.d_super[b_c[:, :, None], bt[:, None, :]]  # [q, c, mb]
+        cube = r_c[:, :, None] + blk
+        cand = jnp.min(cube, axis=1)
+        hit = cube == cand[:, None, :]
+        loc = jnp.min(jnp.where(
+            hit, jax.lax.broadcasted_iota(jnp.int32, cube.shape, 1),
+            jnp.int32(mb)), axis=1)
+        better = cand < acc
+        return (jnp.where(better, cand, acc),
+                jnp.where(better, i * c + loc, accb))
+
+    acc0 = jnp.full((q, mb), INF, row_s.dtype)
+    accb0 = jnp.full((q, mb), -1, jnp.int32)
+    acc, accb = jax.lax.fori_loop(0, mb // c, body, (acc0, accb0))
+    tmp = acc + row_t                    # [q, mb]
+    mid = jnp.min(tmp, axis=1)
+    hit = tmp == mid[:, None]
+    pos_t = jnp.min(jnp.where(
+        hit, jnp.arange(mb, dtype=jnp.int32)[None, :], jnp.int32(mb)),
+        axis=1)
+    pos_t_c = jnp.clip(pos_t, 0, mb - 1)
+    pos_s = jnp.take_along_axis(accb, pos_t_c[:, None], axis=1)[:, 0]
+    fin = jnp.isfinite(mid)
+    wx = jnp.where(fin, jnp.take_along_axis(
+        bs, jnp.clip(pos_s, 0, mb - 1)[:, None], axis=1)[:, 0], -1)
+    wy = jnp.where(fin, jnp.take_along_axis(
+        bt, pos_t_c[:, None], axis=1)[:, 0], -1)
+    return mid, wx, wy
+
+
 def serve_same_dra(dix: DeviceIndex, s: jax.Array,
                    t: jax.Array) -> jax.Array:
     """Planner bucket 1: both endpoints in the same DRA."""
     ds, dt = dix.dist_to_agent[s], dix.dist_to_agent[t]
     out = _same_dra_dist(dix, s, t, ds, dt)
     return jnp.where(s == t, 0.0, out)
+
+
+def serve_same_dra_w(dix: DeviceIndex, s: jax.Array, t: jax.Array
+                     ) -> tuple[jax.Array, jax.Array]:
+    """serve_same_dra in return_witness mode -> (dist, wit) with wit in
+    {WIT_PIECE, WIT_VIA_AGENT, WIT_NONE}."""
+    ds, dt = dix.dist_to_agent[s], dix.dist_to_agent[t]
+    gid_s = dix.piece_gid[s]
+    same_piece = (gid_s >= 0) & (gid_s == dix.piece_gid[t])
+    d_via_agent = ds + dt
+    idx = (dix.piece_base[s]
+           + dix.pos_in_piece[s] * dix.piece_stride[s]
+           + dix.pos_in_piece[t])
+    d_piece = dix.piece_flat[jnp.where(same_piece, idx, 0)]
+    out = jnp.where(same_piece, jnp.minimum(d_piece, d_via_agent),
+                    d_via_agent)
+    wit = jnp.where(same_piece & (d_piece <= d_via_agent),
+                    WIT_PIECE, WIT_VIA_AGENT)
+    out = jnp.where(s == t, 0.0, out)
+    wit = jnp.where(jnp.isfinite(out), wit, WIT_NONE)
+    return out, wit.astype(jnp.int32)
 
 
 def serve_cross(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
@@ -823,6 +975,33 @@ def serve_cross(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
     return jnp.where((fs >= 0) & (ft >= 0), d, INF)
 
 
+def serve_cross_w(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
+                  with_local: bool, force=None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """serve_cross in return_witness mode -> (dist, wit): wit is the
+    packed winning SUPER pair x * (S+1) + y, WIT_LOCAL when the
+    intra-fragment path won (same-fragment bucket only), WIT_NONE when
+    unreachable."""
+    us, ut = dix.agent_of[s], dix.agent_of[t]
+    ds, dt = dix.dist_to_agent[s], dix.dist_to_agent[t]
+    fs, ft = dix.frag_of[us], dix.frag_of[ut]
+    ps, pt = dix.pos_in_frag[us], dix.pos_in_frag[ut]
+    row_s = dix.brow[fs, ps]                     # [q, mb]
+    row_t = dix.brow[ft, pt]
+    mid, wx, wy = _combine_mid_w(dix, row_s, dix.bnd_super[fs], row_t,
+                                 dix.bnd_super[ft], force=force)
+    s1 = dix.d_super.shape[0]
+    wit = wx * s1 + wy
+    if with_local:
+        local = jnp.where(fs == ft, dix.frag_apsp[fs, ps, pt], INF)
+        wit = jnp.where(local <= mid, WIT_LOCAL, wit)
+        mid = jnp.minimum(mid, local)
+    d = ds + mid + dt
+    d = jnp.where((fs >= 0) & (ft >= 0), d, INF)
+    wit = jnp.where(jnp.isfinite(d), wit, WIT_NONE)
+    return d, wit.astype(jnp.int32)
+
+
 def serve_step(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
                force=None) -> jax.Array:
     """Batched exact distance queries: s, t int32 [q] -> f32 [q].
@@ -835,6 +1014,24 @@ def serve_step(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
     d_same = serve_same_dra(dix, s, t)
     out = jnp.where(us == ut, d_same, d_cross)
     return jnp.where(s == t, 0.0, out)
+
+
+def serve_step_w(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
+                 force=None) -> tuple[jax.Array, jax.Array]:
+    """serve_step in return_witness mode -> (dist, wit).
+
+    The witness namespace is per-case (same-DRA flags vs packed SUPER
+    pairs); the host unwinder re-derives the case from agent_of, so no
+    case bits are spent in the witness itself.
+    """
+    us, ut = dix.agent_of[s], dix.agent_of[t]
+    d_cross, w_cross = serve_cross_w(dix, s, t, with_local=True,
+                                     force=force)
+    d_same, w_same = serve_same_dra_w(dix, s, t)
+    same = us == ut
+    out = jnp.where(same, d_same, d_cross)
+    wit = jnp.where(same, w_same, w_cross)
+    return jnp.where(s == t, 0.0, out), wit
 
 
 def serve_one_to_all(dix: DeviceIndex, s: int | jax.Array, *,

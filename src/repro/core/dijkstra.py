@@ -37,6 +37,41 @@ def sssp(g: Graph, s: int, targets: Optional[np.ndarray] = None
     return dist
 
 
+def pair_with_path(g: Graph, s: int, t: int
+                   ) -> tuple[float, Optional[list]]:
+    """s->t distance and one shortest path as a node list (None when
+    unreachable), with target early exit.  The predecessor tree is the
+    host path oracle the witness-unwinding device path (paths.py) is
+    differentially tested against."""
+    if s == t:
+        return 0.0, [int(s)]
+    dist = np.full(g.n, np.inf)
+    pred = np.full(g.n, -1, dtype=np.int64)
+    dist[s] = 0.0
+    pq = [(0.0, int(s))]
+    found = False
+    while pq:
+        d, u = heapq.heappop(pq)
+        if u == t:
+            found = True
+            break
+        if d > dist[u]:
+            continue
+        a, b = g.indptr[u], g.indptr[u + 1]
+        for v, w in zip(g.indices[a:b], g.weights[a:b]):
+            nd = d + float(w)
+            if nd < dist[v]:
+                dist[v] = nd
+                pred[v] = u
+                heapq.heappush(pq, (nd, int(v)))
+    if not found:
+        return np.inf, None
+    path = [int(t)]
+    while path[-1] != s:
+        path.append(int(pred[path[-1]]))
+    return float(dist[t]), path[::-1]
+
+
 def pair(g: Graph, s: int, t: int) -> float:
     """s->t distance with target early exit (unidirectional Dijkstra)."""
     if s == t:

@@ -31,8 +31,9 @@ from ..kernels import ops
 from . import sssp
 from .device_engine import (DeviceIndex, RefreshStats,
                             build_device_index_with_plan, refresh_index,
-                            serve_cross, serve_same_dra, serve_step,
-                            warmup_refresh)
+                            serve_cross, serve_cross_w, serve_same_dra,
+                            serve_same_dra_w, serve_step, warmup_refresh)
+from .paths import PathUnwinder
 from .supergraph import DislandIndex, build_index
 
 
@@ -61,7 +62,8 @@ class QueryPlanner:
 
     CASES = ("same_dra", "same_frag", "cross_frag")
 
-    def __init__(self, dix: DeviceIndex, *, force=None):
+    def __init__(self, dix: DeviceIndex, *, force=None,
+                 paths: bool = False):
         self._fns = {
             "same_dra": jax.jit(serve_same_dra),
             "same_frag": jax.jit(functools.partial(
@@ -69,6 +71,17 @@ class QueryPlanner:
             "cross_frag": jax.jit(functools.partial(
                 serve_cross, with_local=False, force=force)),
         }
+        # witness-returning (return_witness mode) sub-programs; jit
+        # wrappers are free until called, so these always exist and
+        # ``paths`` only decides whether warmup() compiles them
+        self._wfns = {
+            "same_dra": jax.jit(serve_same_dra_w),
+            "same_frag": jax.jit(functools.partial(
+                serve_cross_w, with_local=True, force=force)),
+            "cross_frag": jax.jit(functools.partial(
+                serve_cross_w, with_local=False, force=force)),
+        }
+        self.paths = paths
         self.last_counts: dict = {}
         self.set_index(dix)
 
@@ -90,7 +103,10 @@ class QueryPlanner:
             sizes.append(m)
             m *= 2
         z = np.zeros(max(sizes), np.int32)
-        for fn in self._fns.values():
+        fns = list(self._fns.values())
+        if self.paths:
+            fns += list(self._wfns.values())
+        for fn in fns:
             for size in sizes:
                 jax.block_until_ready(fn(self.dix, jnp.asarray(z[:size]),
                                          jnp.asarray(z[:size])))
@@ -107,13 +123,16 @@ class QueryPlanner:
             "cross_frag": np.nonzero(~case1 & ~case2)[0],
         }
 
-    def __call__(self, s, t) -> np.ndarray:
-        s = np.asarray(s, np.int32)
-        t = np.asarray(t, np.int32)
-        out = np.full(s.shape, np.inf, np.float32)
-        # snapshot the epoch once: a concurrent set_index between
-        # bucket dispatches must not split one batch across two epochs
-        dix = self.dix
+    def _dispatch(self, fns, s, t, outs, dix=None) -> None:
+        """Shared bucket/pad/dispatch loop: partition (s, t), pad each
+        bucket to a power of two, run its sub-program from ``fns`` and
+        scatter every output array into the matching array of ``outs``.
+
+        ``dix`` pins the epoch; defaulting to the planner's current
+        pointer, read ONCE so a concurrent set_index between bucket
+        dispatches cannot split one batch across two epochs.
+        """
+        dix = self.dix if dix is None else dix
         plan = self.plan(s, t)
         self.last_counts = {c: int(ix.size) for c, ix in plan.items()}
         for case, idx in plan.items():
@@ -124,10 +143,40 @@ class QueryPlanner:
             tp = np.zeros(m, np.int32)
             sp[:idx.size] = s[idx]
             tp[:idx.size] = t[idx]
-            res = self._fns[case](dix, jnp.asarray(sp),
-                                  jnp.asarray(tp))
-            out[idx] = np.asarray(res)[:idx.size]
+            res = fns[case](dix, jnp.asarray(sp), jnp.asarray(tp))
+            if len(outs) == 1:
+                res = (res,)
+            for out, r in zip(outs, res):
+                out[idx] = np.asarray(r)[:idx.size]
+
+    def __call__(self, s, t) -> np.ndarray:
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        out = np.full(s.shape, np.inf, np.float32)
+        self._dispatch(self._fns, s, t, (out,))
         return out
+
+    def query_witness(self, s, t, *, dix=None
+                      ) -> tuple[np.ndarray, np.ndarray]:
+        """Planner-bucketed return_witness serving -> (dist, wit).
+
+        Same bucketing/padding as __call__, dispatching the witness
+        sub-programs; wit follows the per-case encoding documented in
+        device_engine (WIT_* / packed SUPER pair).  Self queries get
+        distance 0 and WIT_NONE (nothing to unwind — the unwinder
+        special-cases s == t first).  Pass ``dix`` to serve against an
+        explicit epoch (EpochedEngine.query_path pairs it with the
+        matching unwinder snapshot).
+        """
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        out = np.full(s.shape, np.inf, np.float32)
+        wit = np.full(s.shape, -1, np.int32)
+        self._dispatch(self._wfns, s, t, (out, wit), dix=dix)
+        same = s == t
+        out[same] = 0.0
+        wit[same] = -1
+        return out, wit
 
 
 # ---------------------------------------------------------------------------
@@ -150,15 +199,17 @@ class EpochedEngine:
 
     def __init__(self, g, *, c: int = 2, seed: int = 0, force=None,
                  ix: DislandIndex | None = None,
-                 warm_refresh: bool = True):
+                 warm_refresh: bool = True, paths: bool = False):
         self.g = g
         self.ix = ix if ix is not None else build_index(g, c=c, seed=seed)
         self.dix, self.plan = build_device_index_with_plan(self.ix,
                                                            force=force)
-        self.planner = QueryPlanner(self.dix, force=force)
+        self.planner = QueryPlanner(self.dix, force=force, paths=paths)
         self.epoch = 0
         self.force = force
         self.last_stats: RefreshStats | None = None
+        # (dix, PathUnwinder) pair, replaced atomically (unwinder())
+        self._unwinder: tuple | None = None
         self._lock = threading.Lock()
         if warm_refresh:
             # compile the refresh FW programs now, not mid-update
@@ -200,6 +251,40 @@ class EpochedEngine:
     def query(self, s, t) -> np.ndarray:
         """Planner-bucketed batched queries on the current epoch."""
         return self.planner(s, t)
+
+    def unwinder(self, dix: DeviceIndex | None = None) -> PathUnwinder:
+        """A PathUnwinder paired with ``dix`` (default: the currently
+        published epoch).  Cached by index identity, so repeated
+        query_path calls within one epoch reuse the snapshot and a
+        concurrent epoch publish can never mismatch witnesses with
+        tables — the unwinder is keyed to the exact index object its
+        witnesses were served from."""
+        dix = self.dix if dix is None else dix
+        cached = self._unwinder          # single atomic read: (dix, uw)
+        if cached is not None and cached[0] is dix:
+            return cached[1]
+        uw = PathUnwinder(dix, self.plan)
+        # publish as one tuple and return the locally built instance,
+        # never the cache slot: a concurrent epoch publish may
+        # overwrite the slot with another epoch's unwinder in between
+        self._unwinder = (dix, uw)
+        return uw
+
+    def query_path(self, s, t) -> tuple[np.ndarray, list]:
+        """Batched exact shortest *paths*.
+
+        Returns (dist [q] f32, paths): paths[i] is the node sequence
+        s_i -> t_i whose edge weights sum to exactly dist[i], or None
+        when t_i is unreachable.  Distances come from the witness
+        sub-programs (device); unwinding is host-side table chasing
+        (DESIGN.md §10).  The epoch is pinned once: witnesses and
+        unwinder both bind to the same index snapshot, so an
+        apply_updates landing mid-call cannot tear them apart.
+        """
+        dix = self.planner.dix
+        dist, wit = self.planner.query_witness(s, t, dix=dix)
+        uw = self.unwinder(dix)
+        return dist, uw.unwind_many(s, t, dist, wit)
 
     def warmup(self, batch_size: int) -> None:
         self.planner.warmup(batch_size)

@@ -106,3 +106,61 @@ class DislandEngine:
 
     def query_many(self, pairs) -> np.ndarray:
         return np.array([self.query(int(s), int(t)) for s, t in pairs])
+
+    # ---- path oracle (host reference for the device witness path) -----
+    def _piece_path(self, s: int, t: int) -> list:
+        """Shortest s -> t path inside the DRA piece containing both
+        (paths between piece members and their agent never leave the
+        piece, Props 3-9)."""
+        if s == t:
+            return [int(s)]
+        ix = self.ix
+        ref = s if ix.dras.piece_of[s] >= 0 else t
+        a = self._agent_by_id[int(ix.dras.agent_of[ref])]
+        piece = a.pieces[int(ix.dras.piece_of[ref])]
+        sub, ids = ix.g.subgraph(piece)
+        remap = {int(x): k for k, x in enumerate(ids)}
+        _d, p = dijkstra.pair_with_path(sub, remap[s], remap[t])
+        assert p is not None, (s, t)
+        return [int(ids[x]) for x in p]
+
+    def query_path(self, s: int, t: int) -> tuple:
+        """(distance, node sequence) — the bi-level decomposition with
+        every leg resolved by a predecessor-tracking Dijkstra on its own
+        subgraph: piece paths never leave their piece, and the middle
+        u_s -> u_t leg never leaves the shrink graph (a path entering a
+        DRA must exit through the same agent, so with positive weights
+        it never pays to).  This is the host oracle the device witness
+        unwinding is differentially tested against.
+        """
+        if s == t:
+            return 0.0, [int(s)]
+        ix = self.ix
+        us = int(ix.dras.agent_of[s])
+        ut = int(ix.dras.agent_of[t])
+        if us == ut:
+            if ix.dras.piece_of[s] >= 0 and \
+                    ix.dras.piece_of[s] == ix.dras.piece_of[t]:
+                path = self._piece_path(s, t)
+            else:
+                leg_s = self._piece_path(s, us) if s != us else [s]
+                leg_t = self._piece_path(ut, t) if t != ut else [t]
+                path = leg_s + leg_t[1:]
+        else:
+            sid_s = int(ix.shrink_id_of[us])
+            sid_t = int(ix.shrink_id_of[ut])
+            if sid_s < 0 or sid_t < 0:
+                return float("inf"), None
+            _d, mid = dijkstra.pair_with_path(ix.shrink, sid_s, sid_t)
+            if mid is None:
+                return float("inf"), None
+            leg_s = self._piece_path(s, us) if s != us else [s]
+            leg_t = self._piece_path(ut, t) if t != ut else [t]
+            path = leg_s + [int(ix.shrink_ids[x]) for x in mid][1:] \
+                + leg_t[1:]
+        w = 0.0
+        for a, b in zip(path, path[1:]):
+            e = ix.g.edge_ids([a], [b])[0]
+            assert e >= 0, (a, b)
+            w += float(ix.g.edge_w[e])
+        return w, path

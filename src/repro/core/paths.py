@@ -1,0 +1,220 @@
+"""Host-side exact path reconstruction over the witness tables
+(DESIGN.md §10).
+
+The device index answers *distances* with (min,+) algebra; since PR 3
+every tropical reduction also records its argmin:
+
+  * ``frag_next``  — first hop of each intra-fragment shortest path,
+  * ``piece_next`` — the same for each DRA piece (flat layout shared
+    with ``piece_flat``),
+  * ``super_next`` — first hop through the SUPER overlay closure,
+  * the serve-path combine returns the winning boundary pair (b1, b2)
+    packed into an int32 witness (``serve_step_w`` and friends).
+
+``PathUnwinder`` walks those tables back to a concrete node sequence.
+Every super-overlay hop is overlay-*adjacent* by the successor-matrix
+invariant, so it resolves to either an E_B slot (a real graph edge
+between two boundary nodes) or a fragment boundary-clique slot, which
+recursively unwinds through that fragment's ``frag_next``.  No graph
+search runs anywhere — unwinding is pure table chasing, O(path length).
+
+Exactness: each table's successor entries are argmins of the exact
+distance recurrences, so the unwound edge sequence sums to exactly the
+served distance (integer weights make f32/f64 agreement bitwise; the
+differential harness in tests/test_paths.py enforces equality against
+both ``serve_step`` and host Dijkstra).
+
+Epoch discipline: an unwinder snapshots the arrays it needs at
+construction, so it stays internally consistent even while the engine
+publishes new epochs; pair it with witnesses served by the *same*
+epoch's index (EpochedEngine.query_path does this for you).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .device_engine import (WIT_LOCAL, WIT_NONE, WIT_PIECE, BuildPlan,
+                            DeviceIndex, overlay_slot_table)
+
+
+class PathUnwinder:
+    """Walk witness tables from one epoch's (DeviceIndex, BuildPlan).
+
+    Everything read from ``plan`` here is *structure* (piece registry,
+    fragment/boundary lookups, SUPER slot topology), which weight
+    updates never mutate — so a snapshot stays valid across refreshes.
+    The one weight-dependent host table, the overlay slot provenance,
+    travels WITH the index epoch (``dix.host_ov_slot``, written by the
+    build/refresh stages); the plan-derived fallback below is for
+    standalone indices that never saw a refresh.
+    """
+
+    def __init__(self, dix: DeviceIndex, plan: BuildPlan):
+        self.plan = plan
+        self.s1 = int(dix.d_super.shape[0])          # S + 1
+        # device tables, snapshotted to host numpy
+        self.agent_of = np.asarray(dix.agent_of)
+        self.piece_gid = np.asarray(dix.piece_gid)
+        self.pos_in_piece = np.asarray(dix.pos_in_piece)
+        self.frag_next = np.asarray(dix.frag_next)
+        self.piece_next = np.asarray(dix.piece_next)
+        self.super_next = np.asarray(dix.super_next)
+        # position -> original id, per fragment (inverse of the plan's
+        # frag_of/pos_in_frag lookups)
+        k, maxf = plan.k, plan.maxf
+        self.frag_nodes = np.full((k, maxf), -1, np.int64)
+        hot = np.nonzero(plan.frag_of >= 0)[0]
+        self.frag_nodes[plan.frag_of[hot], plan.pos_in_frag[hot]] = hot
+        # super id -> (home fragment, position, original id)
+        S = plan.S
+        self.super_frag = np.full(S, -1, np.int64)
+        self.super_pos = np.zeros(S, np.int64)
+        fi_idx, b_idx = np.nonzero(plan.bvalid)
+        sid = plan.bnd_super[fi_idx, b_idx]
+        self.super_frag[sid] = fi_idx
+        self.super_pos[sid] = plan.bpos[fi_idx, b_idx]
+        self.super_node = np.where(
+            self.super_frag >= 0,
+            self.frag_nodes[self.super_frag, self.super_pos], -1)
+        # winning slot per overlay adjacency pair, paired with this
+        # dix's d_super/super_next epoch (see class docstring)
+        ov = getattr(dix, "host_ov_slot", None)
+        self.ov_slot = ov if ov is not None else overlay_slot_table(plan)
+
+    # ---- table walks ---------------------------------------------------
+    def _frag_walk(self, fi: int, pa: int, pb: int) -> List[int]:
+        """Original-id node sequence of the fragment-internal shortest
+        path from position pa to pb (inclusive ends)."""
+        nxt = self.frag_next[fi]
+        seq = [pa]
+        u = pa
+        while u != pb:
+            u = int(nxt[u, pb])
+            if u < 0 or len(seq) > nxt.shape[0]:
+                raise RuntimeError(
+                    f"inconsistent frag_next walk (frag {fi}, "
+                    f"{pa}->{pb})")
+            seq.append(u)
+        return [int(self.frag_nodes[fi, p]) for p in seq]
+
+    def _piece_walk(self, gid: int, pa: int, pb: int) -> List[int]:
+        plan = self.plan
+        cap = int(plan.piece_cap[gid])
+        base = int(plan.piece_base[gid])
+        nxt = self.piece_next[base:base + cap * cap].reshape(cap, cap)
+        members = plan.piece_members[gid]
+        seq = [pa]
+        u = pa
+        while u != pb:
+            u = int(nxt[u, pb])
+            if u < 0 or len(seq) > cap:
+                raise RuntimeError(
+                    f"inconsistent piece_next walk (piece {gid}, "
+                    f"{pa}->{pb})")
+            seq.append(u)
+        return [int(members[p]) for p in seq]
+
+    def _leg_to_agent(self, s: int) -> List[int]:
+        """s -> its agent, inside s's piece ([s] when s IS an agent or a
+        trivial node)."""
+        gid = int(self.piece_gid[s])
+        if gid < 0:
+            return [int(s)]
+        return self._piece_walk(gid, int(self.pos_in_piece[s]),
+                                int(self.plan.piece_agent_pos[gid]))
+
+    def _super_walk(self, x: int, y: int) -> List[int]:
+        """Overlay-adjacent super-id sequence x -> y from super_next."""
+        seq = [x]
+        u = x
+        while u != y:
+            u = int(self.super_next[u, y])
+            if u < 0 or len(seq) > self.s1:
+                raise RuntimeError(
+                    f"inconsistent super_next walk ({x}->{y})")
+            seq.append(u)
+        return seq
+
+    def _expand_super_hop(self, a: int, b: int) -> List[int]:
+        """One overlay adjacency hop -> original node ids AFTER a's
+        node (E_B slot: the neighbour; clique slot: the intra-fragment
+        path)."""
+        plan = self.plan
+        slot = int(self.ov_slot[a, b])
+        if slot < 0:
+            raise RuntimeError(f"no overlay slot for super hop {a}->{b}")
+        fi = int(plan.sup_fi[slot])
+        if fi < 0:                      # E_B: a real boundary-boundary edge
+            return [int(self.super_node[b])]
+        if a == int(plan.sup_src[slot]):
+            pa, pb = int(plan.sup_pu[slot]), int(plan.sup_pv[slot])
+        else:
+            pa, pb = int(plan.sup_pv[slot]), int(plan.sup_pu[slot])
+        return self._frag_walk(fi, pa, pb)[1:]
+
+    # ---- public API ----------------------------------------------------
+    def unwind(self, s: int, t: int, dist: float,
+               wit: int) -> Optional[List[int]]:
+        """(s, t, served distance, served witness) -> node sequence of
+        an exact shortest path, or None when t is unreachable."""
+        s, t, wit = int(s), int(t), int(wit)
+        if s == t:
+            return [s]
+        if not np.isfinite(dist) or wit == WIT_NONE:
+            return None
+        us, ut = int(self.agent_of[s]), int(self.agent_of[t])
+        if us == ut:                                   # case 1
+            if wit == WIT_PIECE:
+                gid = int(self.piece_gid[s])
+                return self._piece_walk(gid, int(self.pos_in_piece[s]),
+                                        int(self.pos_in_piece[t]))
+            leg_s = self._leg_to_agent(s)              # WIT_VIA_AGENT
+            leg_t = self._leg_to_agent(t)
+            return leg_s + leg_t[::-1][1:]
+        # case 2: s -> u_s -> (middle) -> u_t -> t
+        plan = self.plan
+        fs, ft = int(plan.frag_of[us]), int(plan.frag_of[ut])
+        ps, pt = int(plan.pos_in_frag[us]), int(plan.pos_in_frag[ut])
+        path = self._leg_to_agent(s)
+        if wit == WIT_LOCAL:
+            path += self._frag_walk(fs, ps, pt)[1:]
+        else:                                          # packed (x, y)
+            x, y = wit // self.s1, wit % self.s1
+            path += self._frag_walk(fs, ps, int(self.super_pos[x]))[1:]
+            sup = self._super_walk(x, y)
+            for a, b in zip(sup, sup[1:]):
+                path += self._expand_super_hop(a, b)
+            path += self._frag_walk(ft, int(self.super_pos[y]), pt)[1:]
+        leg_t = self._leg_to_agent(t)
+        return path + leg_t[::-1][1:]
+
+    def unwind_many(self, s, t, dist, wit) -> List[Optional[List[int]]]:
+        return [self.unwind(a, b, d, w)
+                for a, b, d, w in zip(np.asarray(s), np.asarray(t),
+                                      np.asarray(dist), np.asarray(wit))]
+
+
+def unwind_path(dix: DeviceIndex, plan: BuildPlan, s: int, t: int,
+                dist: float, wit: int) -> Optional[List[int]]:
+    """One-shot convenience around PathUnwinder (build the unwinder
+    once and reuse it when serving many queries)."""
+    return PathUnwinder(dix, plan).unwind(s, t, dist, wit)
+
+
+def path_weight(g, path: Sequence[int]) -> float:
+    """Sum of edge weights along ``path``, validating every consecutive
+    pair is a real edge of ``g``.  Raises ValueError on a broken hop —
+    the differential tests lean on this to reject 'plausible' paths."""
+    path = list(path)
+    if len(path) <= 1:
+        return 0.0
+    u = np.asarray(path[:-1])
+    v = np.asarray(path[1:])
+    eid = g.edge_ids(u, v)
+    if (eid < 0).any():
+        bad = int(np.nonzero(eid < 0)[0][0])
+        raise ValueError(
+            f"path hop ({path[bad]}, {path[bad + 1]}) is not an edge")
+    return float(g.edge_w[eid].sum())

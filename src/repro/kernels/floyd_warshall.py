@@ -1,11 +1,15 @@
 """Blocked Floyd-Warshall APSP Pallas kernels.
 
-Two entry points:
+Three entry points:
 
   * ``fw_batch_pallas``  — grid over a batch of small dense matrices
     (DISLAND fragments, padded to a common size <= 256); the whole
     [nf, nf] tile lives in VMEM and a fori_loop runs the classic FW
     recurrence with a functional carry.
+
+  * ``fw_batch_next_pallas`` — the same, additionally carrying the
+    first-hop successor matrix (int32) for exact path reconstruction
+    (DESIGN.md §10); distances come out bit-identical.
 
   * ``fw_blocked``       — classic 3-phase blocked FW for one larger
     matrix: phase 1 = diagonal-block FW (this kernel), phases 2/3 =
@@ -23,6 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .minplus import minplus_accum_pallas
+from .ref import fw_next_init
 
 
 def _fw_block_kernel(d_ref, o_ref):
@@ -54,6 +59,52 @@ def fw_batch_pallas(d: jax.Array, *, interpret: bool = False) -> jax.Array:
         out_shape=jax.ShapeDtypeStruct((b, n, n), d.dtype),
         interpret=interpret,
     )(d)
+
+
+def _fw_next_block_kernel(d_ref, n_ref, do_ref, no_ref):
+    """Witness-carrying FW on one [nf, nf] tile: alongside the distance
+    recurrence, carry nxt[i, j] = first hop of a shortest i -> j path
+    (int32, -1 = unreachable/diagonal).  Same strict-improvement update
+    in the same pivot order as _fw_block_kernel, so the distance output
+    is bit-identical — path tables can ride along any build without
+    perturbing the distances the rest of the index is tested against."""
+    x = d_ref[0]
+    nx0 = n_ref[0]
+    n = x.shape[0]
+
+    def body(k, carry):
+        mat, nxt = carry
+        row = jax.lax.dynamic_slice_in_dim(mat, k, 1, axis=0)  # [1, n]
+        col = jax.lax.dynamic_slice_in_dim(mat, k, 1, axis=1)  # [n, 1]
+        cand = col + row
+        nk = jax.lax.dynamic_slice_in_dim(nxt, k, 1, axis=1)   # nxt[:, k]
+        better = cand < mat
+        return (jnp.where(better, cand, mat),
+                jnp.where(better, jnp.broadcast_to(nk, nxt.shape), nxt))
+
+    mat, nxt = jax.lax.fori_loop(0, n, body, (x, nx0))
+    do_ref[0] = mat
+    no_ref[0] = nxt
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fw_batch_next_pallas(d: jax.Array, *, interpret: bool = False
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Batched witness APSP: d[b, n, n] -> (dist, nxt) per batch entry."""
+    b, n, n2 = d.shape
+    assert n == n2
+    d0, nxt0 = fw_next_init(d)
+    return pl.pallas_call(
+        _fw_next_block_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))],
+        out_specs=[pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, n, n), d.dtype),
+                   jax.ShapeDtypeStruct((b, n, n), jnp.int32)],
+        interpret=interpret,
+    )(d0, nxt0)
 
 
 def _fw_diag(d_kk: jax.Array, interpret: bool) -> jax.Array:

@@ -99,3 +99,114 @@ def minplus_twoside_pallas(rows: jax.Array, d: jax.Array,
         interpret=interpret,
     )(rows_p, d_p, rowt_p)
     return jnp.min(part, axis=1)[:q]
+
+
+def _twoside_argmin_kernel(rows_ref, d_ref, rowt_ref, out_ref, wit_ref,
+                           *, k_chunk: int, k2_stride: int):
+    """Witness-carrying variant of _twoside_kernel: alongside the lane
+    partial minima, carry the winning (x, y) pair packed as
+    x * k2_stride + y (global padded coordinates, int32).  Ties resolve
+    to the smallest packed witness, deterministically."""
+    yi = pl.program_id(1)
+    xi = pl.program_id(2)
+
+    @pl.when((yi == 0) & (xi == 0))
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+        wit_ref[...] = jnp.full_like(wit_ref, -1)
+
+    rows = rows_ref[...]          # [bq, bk1]
+    d = d_ref[...]                # [bk1, bk2]
+    rowt = rowt_ref[...]          # [bq, bk2]
+    bk1 = rows.shape[1]
+    bq, bk2 = rowt.shape
+
+    def body(i, carry):
+        acc, accx = carry
+        r_c = jax.lax.dynamic_slice_in_dim(rows, i * k_chunk, k_chunk,
+                                           axis=1)
+        d_c = jax.lax.dynamic_slice_in_dim(d, i * k_chunk, k_chunk,
+                                           axis=0)
+        cube = r_c[:, :, None] + d_c[None, :, :]   # [bq, kc, bk2]
+        cand = jnp.min(cube, axis=1)
+        hit = cube == cand[:, None, :]
+        loc = jnp.min(jnp.where(
+            hit,
+            jax.lax.broadcasted_iota(jnp.int32, cube.shape, 1),
+            jnp.int32(bk1)), axis=1)
+        better = cand < acc
+        return (jnp.where(better, cand, acc),
+                jnp.where(better, i * k_chunk + loc, accx))
+
+    acc0 = jnp.full((bq, bk2), jnp.inf, rows.dtype)
+    accx0 = jnp.full((bq, bk2), -1, jnp.int32)
+    acc, accx = jax.lax.fori_loop(0, bk1 // k_chunk, body, (acc0, accx0))
+    tmp = acc + rowt              # [bq, bk2]
+    # pack the global witness per (q, y) cell, then fold y to 128 lanes
+    # keeping value/witness aligned (min-of-where instead of argmin so
+    # every op stays lane-shaped)
+    y_glob = yi * bk2 + jax.lax.broadcasted_iota(jnp.int32, tmp.shape, 1)
+    wxy = (xi * bk1 + accx) * k2_stride + y_glob
+    g = bk2 // _LANES
+    tmp_r = tmp.reshape(bq, g, _LANES)
+    wxy_r = wxy.reshape(bq, g, _LANES)
+    part = jnp.min(tmp_r, axis=1)                        # [bq, 128]
+    hit = tmp_r == part[:, None, :]
+    pwit = jnp.min(jnp.where(hit, wxy_r, jnp.iinfo(jnp.int32).max),
+                   axis=1)
+    cur = out_ref[...]
+    cur_wit = wit_ref[...]
+    better = part < cur
+    out_ref[...] = jnp.where(better, part, cur)
+    wit_ref[...] = jnp.where(better, pwit, cur_wit)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk1", "bk2",
+                                             "k_chunk", "interpret"))
+def minplus_twoside_argmin_pallas(rows: jax.Array, d: jax.Array,
+                                  rowt: jax.Array, *, bq: int = 128,
+                                  bk1: int = 128, bk2: int = 128,
+                                  k_chunk: int = 8,
+                                  interpret: bool = False
+                                  ) -> tuple[jax.Array, jax.Array,
+                                             jax.Array]:
+    """Witness-returning twoside contraction: (out, wx, wy) with
+    out[q] = rows[q, wx[q]] + d[wx[q], wy[q]] + rowt[q, wy[q]] for every
+    finite out[q]; wx = wy = -1 where out[q] is +inf.  Same tiling and
+    revisiting pattern as minplus_twoside_pallas; padded cells are +inf
+    so they can never win a witness."""
+    q, k1 = rows.shape
+    k1b, k2 = d.shape
+    qb, k2b = rowt.shape
+    assert k1 == k1b and k2 == k2b and q == qb, (rows.shape, d.shape,
+                                                rowt.shape)
+    assert bk2 % _LANES == 0 and bk1 % k_chunk == 0, (bk1, bk2, k_chunk)
+    qp = -(-q // bq) * bq
+    k1p = -(-k1 // bk1) * bk1
+    k2p = -(-k2 // bk2) * bk2
+    rows_p = jnp.full((qp, k1p), jnp.inf, rows.dtype).at[:q, :k1].set(rows)
+    d_p = jnp.full((k1p, k2p), jnp.inf, d.dtype).at[:k1, :k2].set(d)
+    rowt_p = jnp.full((qp, k2p), jnp.inf, rowt.dtype).at[:q, :k2].set(rowt)
+    grid = (qp // bq, k2p // bk2, k1p // bk1)
+    part, pwit = pl.pallas_call(
+        functools.partial(_twoside_argmin_kernel, k_chunk=k_chunk,
+                          k2_stride=k2p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bk1), lambda qi, yi, xi: (qi, xi)),
+            pl.BlockSpec((bk1, bk2), lambda qi, yi, xi: (xi, yi)),
+            pl.BlockSpec((bq, bk2), lambda qi, yi, xi: (qi, yi)),
+        ],
+        out_specs=[pl.BlockSpec((bq, _LANES), lambda qi, yi, xi: (qi, 0)),
+                   pl.BlockSpec((bq, _LANES), lambda qi, yi, xi: (qi, 0))],
+        out_shape=[jax.ShapeDtypeStruct((qp, _LANES), rows.dtype),
+                   jax.ShapeDtypeStruct((qp, _LANES), jnp.int32)],
+        interpret=interpret,
+    )(rows_p, d_p, rowt_p)
+    out = jnp.min(part, axis=1)
+    hit = part == out[:, None]
+    wit = jnp.min(jnp.where(hit, pwit, jnp.iinfo(jnp.int32).max), axis=1)
+    fin = jnp.isfinite(out)
+    wx = jnp.where(fin, wit // k2p, -1)
+    wy = jnp.where(fin, wit % k2p, -1)
+    return out[:q], wx[:q], wy[:q]

@@ -51,6 +51,21 @@ def minplus_twoside(rows: jax.Array, d: jax.Array, rowt: jax.Array, *,
     return _ref.minplus_twoside_ref(rows, d, rowt)
 
 
+def minplus_twoside_argmin(rows: jax.Array, d: jax.Array,
+                           rowt: jax.Array, *, bq: int = 128,
+                           bk1: int = 128, bk2: int = 128,
+                           force: Force = None
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Witness-returning twoside contraction -> (out, wx, wy): the
+    winning (x, y) pair alongside each minimum, -1 where out is +inf.
+    The path-reconstruction serve mode's combine step (DESIGN.md §10)."""
+    pallas, interp = _use_pallas(force)
+    if pallas:
+        return _ts.minplus_twoside_argmin_pallas(
+            rows, d, rowt, bq=bq, bk1=bk1, bk2=bk2, interpret=interp)
+    return _ref.minplus_twoside_argmin_ref(rows, d, rowt)
+
+
 def use_pallas(force: Force = None) -> bool:
     """Expose the dispatch decision (engines pick layouts with it)."""
     return _use_pallas(force)[0]
@@ -73,6 +88,31 @@ def fw_batch(d: jax.Array, *, force: Force = None) -> jax.Array:
     if pallas:
         return _fw.fw_batch_pallas(d, interpret=interp)
     return _ref.fw_batch_ref(d)
+
+
+def fw_batch_next(d: jax.Array, *, force: Force = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Witness-carrying batched APSP -> (dist, nxt); dist bit-identical
+    to fw_batch, nxt[b, i, j] = first hop of a shortest i -> j path in
+    batch entry b (-1: unreachable / diagonal)."""
+    pallas, interp = _use_pallas(force)
+    if pallas:
+        return _fw.fw_batch_next_pallas(d, interpret=interp)
+    return _ref.fw_batch_next_ref(d)
+
+
+def fw_next(d: jax.Array, *, force: Force = None
+            ) -> tuple[jax.Array, jax.Array]:
+    """Witness-carrying APSP for a single [n, n] matrix.
+
+    The Pallas path runs the whole matrix as a batch of one (the SUPER
+    overlay is a few hundred nodes, comfortably VMEM-resident; a blocked
+    witness closure is not worth its complexity at that size)."""
+    pallas, interp = _use_pallas(force)
+    if pallas:
+        dist, nxt = _fw.fw_batch_next_pallas(d[None], interpret=interp)
+        return dist[0], nxt[0]
+    return _ref.fw_next_ref(d)
 
 
 def fw_apsp(d: jax.Array, *, block: int = 128,

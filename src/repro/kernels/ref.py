@@ -40,6 +40,52 @@ def minplus_twoside_ref(rows: jax.Array, d: jax.Array, rowt: jax.Array,
     return jnp.min(tmp + rowt, axis=1)
 
 
+def minplus_twoside_argmin_ref(rows: jax.Array, d: jax.Array,
+                               rowt: jax.Array, *, chunk: int = 16
+                               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Witness-tracking twoside contraction: (out, wx, wy) with
+    out[q] = rows[q, wx[q]] + d[wx[q], wy[q]] + rowt[q, wy[q]] whenever
+    out[q] is finite; wx = wy = -1 otherwise.  Same x-chunked schedule
+    as minplus_twoside_ref, carrying the winning x per (q, y) cell."""
+    q, k1 = rows.shape
+    k2 = rowt.shape[1]
+    k1p = -(-k1 // chunk) * chunk
+    rows_p = jnp.full((q, k1p), jnp.inf, rows.dtype).at[:, :k1].set(rows)
+    d_p = jnp.full((k1p, k2), jnp.inf, d.dtype).at[:k1].set(d)
+
+    def body(i, carry):
+        acc, accx = carry
+        r_c = jax.lax.dynamic_slice_in_dim(rows_p, i * chunk, chunk,
+                                           axis=1)
+        d_c = jax.lax.dynamic_slice_in_dim(d_p, i * chunk, chunk, axis=0)
+        cube = r_c[:, :, None] + d_c[None, :, :]       # [q, chunk, k2]
+        cand = jnp.min(cube, axis=1)
+        # smallest chunk-local x achieving the min (tie-stable)
+        hit = cube == cand[:, None, :]
+        loc = jnp.min(jnp.where(hit,
+                                jnp.arange(chunk, dtype=jnp.int32)[None, :,
+                                                                   None],
+                                jnp.int32(k1p)), axis=1)
+        better = cand < acc
+        return (jnp.where(better, cand, acc),
+                jnp.where(better, i * chunk + loc, accx))
+
+    acc0 = jnp.full((q, k2), jnp.inf, rows.dtype)
+    accx0 = jnp.full((q, k2), -1, jnp.int32)
+    acc, accx = jax.lax.fori_loop(0, k1p // chunk, body, (acc0, accx0))
+    tmp = acc + rowt                                   # [q, k2]
+    out = jnp.min(tmp, axis=1)
+    hit = tmp == out[:, None]
+    wy = jnp.min(jnp.where(hit, jnp.arange(k2, dtype=jnp.int32)[None, :],
+                           jnp.int32(k2)), axis=1)
+    fin = jnp.isfinite(out)
+    wy = jnp.where(fin, wy, -1)
+    wx = jnp.where(fin,
+                   jnp.take_along_axis(accx, jnp.clip(wy, 0)[:, None],
+                                       axis=1)[:, 0], -1)
+    return out, wx, wy
+
+
 def fw_ref(d: jax.Array) -> jax.Array:
     """Floyd-Warshall APSP on one [n, n] matrix (diag forced to 0)."""
     n = d.shape[0]
@@ -55,6 +101,49 @@ def fw_ref(d: jax.Array) -> jax.Array:
 
 def fw_batch_ref(d: jax.Array) -> jax.Array:
     return jax.vmap(fw_ref)(d)
+
+
+def fw_next_init(d: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(diag-zeroed distances, first-hop successor init) for witness FW.
+
+    nxt[i, j] = j where (i, j) is a direct edge, -1 elsewhere (incl. the
+    diagonal) — the classic FW path-reconstruction convention: following
+    nxt from i lands one adjacency hop closer to j at every step.
+    """
+    n = d.shape[-1]
+    eye = jnp.eye(n, dtype=bool)
+    d0 = jnp.where(eye, 0.0, d)
+    cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), d.shape)
+    nxt0 = jnp.where(jnp.isfinite(d0) & ~eye, cols, -1)
+    return d0, nxt0
+
+
+def fw_next_ref(d: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Witness-carrying Floyd-Warshall on one [n, n] matrix.
+
+    Returns (dist, nxt); dist is bit-identical to fw_ref (the update is
+    the same strict-improvement recurrence in the same pivot order), and
+    nxt[i, j] is the first hop of a shortest i -> j path (-1 when
+    j is unreachable or i == j).
+    """
+    n = d.shape[0]
+    mat0, nxt0 = fw_next_init(d)
+
+    def body(k, carry):
+        mat, nxt = carry
+        row = jax.lax.dynamic_slice_in_dim(mat, k, 1, axis=0)
+        col = jax.lax.dynamic_slice_in_dim(mat, k, 1, axis=1)
+        cand = col + row
+        nk = jax.lax.dynamic_slice_in_dim(nxt, k, 1, axis=1)  # nxt[:, k]
+        better = cand < mat
+        return (jnp.where(better, cand, mat),
+                jnp.where(better, jnp.broadcast_to(nk, nxt.shape), nxt))
+
+    return jax.lax.fori_loop(0, n, body, (mat0, nxt0))
+
+
+def fw_batch_next_ref(d: jax.Array) -> tuple[jax.Array, jax.Array]:
+    return jax.vmap(fw_next_ref)(d)
 
 
 # NOTE (measured): a chunked blocked-panel FW variant of fw_ref was

@@ -38,11 +38,14 @@ def index_struct(n=262_144, k=256, maxf=1024, mb=128, s_super=8192,
         piece_gid=SDS((n,), i32), pos_in_piece=SDS((n,), i32),
         piece_base=SDS((n,), i32), piece_stride=SDS((n,), i32),
         frag_apsp=SDS((k, maxf, maxf), f32),
+        frag_next=SDS((k, maxf, maxf), i32),
         brow=SDS((k, maxf, mb), f32),
         bpos=SDS((k, mb), i32), bvalid=SDS((k, mb), jnp.bool_),
         bnd_super=SDS((k, mb), i32),
         d_super=SDS((s_super + 1, s_super + 1), f32),
+        super_next=SDS((s_super + 1, s_super + 1), i32),
         piece_flat=SDS((flat,), f32),
+        piece_next=SDS((flat,), i32),
     )
 
 

@@ -31,12 +31,14 @@ from ..core import dijkstra
 from ..core.device_engine import build_device_index, serve_step
 from ..core.dist_engine import EpochedEngine, serve_sharded
 from ..core.graph import road_like, traffic_updates
+from ..core.paths import path_weight
 from ..core.supergraph import build_index, reweight_index
 from ..perflog import append_records, latest
 from ..runtime import StragglerMonitor
 from .mesh import make_host_mesh
 
-REFRESHED_FIELDS = ("frag_apsp", "brow", "d_super", "piece_flat",
+REFRESHED_FIELDS = ("frag_apsp", "frag_next", "brow", "d_super",
+                    "super_next", "piece_flat", "piece_next",
                     "dist_to_agent")
 
 
@@ -112,6 +114,53 @@ def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
     return records
 
 
+def _paths_loop(engine: EpochedEngine, args) -> list:
+    """Serve the path-unwinding workload (planner witness programs +
+    host-side unwind) and validate a sample; returns perf records."""
+    rng = np.random.default_rng(args.seed + 3)
+    monitor = StragglerMonitor()
+    total = 0
+    last = None
+    for _ in range(args.batches):
+        s = rng.integers(0, engine.g.n, args.batch_size).astype(np.int32)
+        t = rng.integers(0, engine.g.n, args.batch_size).astype(np.int32)
+        monitor.start()
+        dist, paths = engine.query_path(s, t)
+        monitor.stop()
+        total += args.batch_size
+        last = (s, t, dist, paths)
+    summ = monitor.summary()
+    per_p = summ["median_s"] / args.batch_size
+    pps = args.batch_size / summ["median_s"]
+    hops = [len(p) - 1 for p in last[3] if p is not None]
+    print(f"paths: {total} unwound; median batch "
+          f"{summ['median_s'] * 1e3:.2f}ms -> {per_p * 1e6:.2f}us/path "
+          f"({pps:,.0f} paths/s, mean {np.mean(hops):.1f} hops)")
+    s, t, dist, paths = last
+    bad = 0
+    for i in range(min(args.validate, len(s))):
+        want = dijkstra.pair(engine.g, int(s[i]), int(t[i]))
+        if np.isinf(want):
+            bad += paths[i] is not None
+            continue
+        w = path_weight(engine.g, paths[i])   # raises on a broken hop
+        if not (w == float(dist[i]) == want):
+            bad += 1
+    print(f"path validation: {bad} mismatches of {args.validate} "
+          "(edge-valid, weight == serve == Dijkstra, exact)")
+    assert bad == 0
+    return [{
+        "section": "serve_paths",
+        "graph": f"road{args.nodes}",
+        "backend": jax.default_backend(),
+        "batch_size": args.batch_size,
+        "median_batch_ms": round(summ["median_s"] * 1e3, 3),
+        "us_per_path": round(per_p * 1e6, 3),
+        "paths_per_s": round(pps, 1),
+        "mean_hops": round(float(np.mean(hops)), 1) if hops else 0.0,
+    }]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=4000)
@@ -123,6 +172,9 @@ def main() -> None:
                     default="planner")
     ap.add_argument("--sharded", action="store_true",
                     help="alias for --mode sharded")
+    ap.add_argument("--paths", action="store_true",
+                    help="also serve exact paths (witness mode + host "
+                         "unwind, planner only) and report paths/sec")
     ap.add_argument("--update-batches", type=int, default=0,
                     help="live-traffic rounds after serving (planner)")
     ap.add_argument("--update-frac", type=float, default=0.02,
@@ -133,6 +185,8 @@ def main() -> None:
     mode = "sharded" if args.sharded else args.mode
     if args.update_batches and mode != "planner":
         ap.error("--update-batches requires --mode planner")
+    if args.paths and mode != "planner":
+        ap.error("--paths requires --mode planner")
 
     t0 = time.perf_counter()
     g = road_like(args.nodes, seed=args.seed)
@@ -143,7 +197,7 @@ def main() -> None:
     t0 = time.perf_counter()
     engine = None
     if mode == "planner":
-        engine = EpochedEngine(g, ix=ix)
+        engine = EpochedEngine(g, ix=ix, paths=args.paths)
         dix = engine.dix
     else:
         dix = build_device_index(ix)
@@ -216,6 +270,16 @@ def main() -> None:
                 bad += 1
         print(f"validation: {bad} mismatches of {args.validate}")
         assert bad == 0
+    if args.paths:
+        records = _paths_loop(engine, args)
+        if args.json:
+            prev = latest(args.json, section="serve_paths",
+                          graph=f"road{args.nodes}")
+            if prev:
+                print(f"previous paths record: "
+                      f"{prev['us_per_path']}us/path")
+            append_records(args.json, records)
+            print(f"paths record appended to {args.json}")
     if args.update_batches:
         records = _update_loop(engine, args, build_s)
         if args.json:

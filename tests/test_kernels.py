@@ -91,6 +91,82 @@ def test_minplus_twoside_all_inf():
         assert np.isinf(got).all() and not np.isnan(got).any()
 
 
+@pytest.mark.parametrize("q,k1,k2", [(5, 7, 3), (37, 130, 201),
+                                     (64, 128, 128)])
+@pytest.mark.parametrize("force", ["ref", "pallas"])
+def test_minplus_twoside_argmin_witness(q, k1, k2, force):
+    """Witness mode: identical minima to the distance-only kernel, and
+    every finite minimum's (wx, wy) pair actually achieves it."""
+    rng = np.random.default_rng(q * 131 + k1 + k2)
+    rows = _rand((q, k1), rng, inf_frac=0.4)
+    d = _rand((k1, k2), rng, inf_frac=0.4)
+    rowt = _rand((q, k2), rng, inf_frac=0.4)
+    want = np.asarray(ops.minplus_twoside(rows, d, rowt, force=force))
+    out, wx, wy = ops.minplus_twoside_argmin(rows, d, rowt, force=force)
+    out, wx, wy = map(np.asarray, (out, wx, wy))
+    np.testing.assert_array_equal(out, want)
+    rows_n, d_n, rowt_n = map(np.asarray, (rows, d, rowt))
+    for i in range(q):
+        if np.isinf(out[i]):
+            assert wx[i] == -1 and wy[i] == -1
+        else:
+            assert 0 <= wx[i] < k1 and 0 <= wy[i] < k2
+            assert (rows_n[i, wx[i]] + d_n[wx[i], wy[i]]
+                    + rowt_n[i, wy[i]]) == out[i]
+
+
+@pytest.mark.parametrize("b,n", [(2, 8), (3, 24), (2, 64)])
+@pytest.mark.parametrize("force", ["ref", "pallas"])
+def test_fw_batch_next_witness(b, n, force):
+    """Witness FW: bit-identical distances to fw_batch, and walking the
+    successor matrix reproduces every finite distance exactly."""
+    rng = np.random.default_rng(b * 100 + n)
+    # integer weights so the walk's left-to-right f32 accumulation is
+    # exact regardless of FW's summation order (the repo's graphs use
+    # integer weights for the same reason)
+    d = rng.integers(1, 60, (b, n, n)).astype(np.float32)
+    d[rng.random((b, n, n)) < 0.6] = np.inf
+    d = np.minimum(d, np.transpose(d, (0, 2, 1)))    # symmetric, like adj
+    want = np.asarray(ops.fw_batch(jnp.asarray(d), force=force))
+    dist, nxt = ops.fw_batch_next(jnp.asarray(d), force=force)
+    dist, nxt = np.asarray(dist), np.asarray(nxt)
+    np.testing.assert_array_equal(dist, want)
+    adj = d.copy()
+    for i in range(n):
+        adj[:, i, i] = 0.0
+    for bi in range(b):
+        for i in range(n):
+            for j in range(n):
+                if i == j:
+                    assert nxt[bi, i, j] == -1
+                    continue
+                if np.isinf(dist[bi, i, j]):
+                    assert nxt[bi, i, j] == -1
+                    continue
+                u, acc, hops = i, 0.0, 0
+                while u != j:
+                    h = int(nxt[bi, u, j])
+                    assert h >= 0, (bi, i, j, u)
+                    acc += adj[bi, u, h]
+                    u = h
+                    hops += 1
+                    assert hops <= n
+                assert acc == dist[bi, i, j], (bi, i, j)
+
+
+def test_fw_next_single_matches_batch():
+    rng = np.random.default_rng(7)
+    d = np.asarray(_rand((24, 24), rng, inf_frac=0.5))
+    for force in ("ref", "pallas"):
+        dist_b, nxt_b = ops.fw_batch_next(jnp.asarray(d[None]),
+                                          force=force)
+        dist, nxt = ops.fw_next(jnp.asarray(d), force=force)
+        np.testing.assert_array_equal(np.asarray(dist),
+                                      np.asarray(dist_b)[0])
+        np.testing.assert_array_equal(np.asarray(nxt),
+                                      np.asarray(nxt_b)[0])
+
+
 @pytest.mark.parametrize("b,n", [(1, 8), (3, 16), (2, 64)])
 def test_fw_batch_matches_ref(b, n):
     rng = np.random.default_rng(b * 100 + n)

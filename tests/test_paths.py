@@ -1,0 +1,200 @@
+"""Differential harness for exact path reconstruction (DESIGN.md §10).
+
+The contract under test, per planner case bucket and per index epoch:
+``unwind_path`` turns each served (distance, witness) into a node
+sequence that
+
+  1. starts at s, ends at t, and every consecutive pair is a real edge
+     of the live graph (path_weight raises otherwise),
+  2. has summed edge weight EXACTLY equal to the served distance
+     (planner witness programs AND monolithic serve_step_w) and to host
+     Dijkstra — integer weights make f32/f64 agreement bitwise, so the
+     comparisons are ==, not allclose,
+
+for >= 500 random queries per case bucket on road graphs, repeated on
+epochs published by the incremental refresh path.  The host engine's
+paper-faithful path oracle (DislandEngine.query_path) is held to the
+same standard on a subsample.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dijkstra
+from repro.core.device_engine import serve_step, serve_step_w
+from repro.core.dist_engine import EpochedEngine, QueryPlanner
+from repro.core.engine import DislandEngine
+from repro.core.graph import road_like, traffic_updates, tree_with_blobs
+from repro.core.paths import path_weight
+
+N_PER_BUCKET = 500
+
+
+def _bucket_pairs(dix, rng, n_per_bucket,
+                  buckets=QueryPlanner.CASES):
+    """>= n_per_bucket random query pairs for each requested planner
+    case (targeted sampling: uniform pairs alone would starve the
+    same-DRA / same-fragment buckets on road graphs)."""
+    agent_of = np.asarray(dix.agent_of)
+    frag_of = np.asarray(dix.frag_of)
+    fa = frag_of[agent_of]
+    n = agent_of.size
+    out = {}
+    if "same_dra" in buckets:
+        # random pairs inside randomly-drawn multi-member DRAs
+        agents, counts = np.unique(agent_of, return_counts=True)
+        multi = agents[counts >= 2]
+        assert multi.size, "graph has no multi-member DRA"
+        pairs = []
+        while len(pairs) < n_per_bucket:
+            a = int(multi[rng.integers(0, multi.size)])
+            members = np.nonzero(agent_of == a)[0]
+            s, t = rng.choice(members, 2)
+            pairs.append((int(s), int(t)))
+        out["same_dra"] = np.asarray(pairs)
+    if "same_frag" in buckets:
+        # same fragment, different DRAs
+        frags = np.unique(fa[fa >= 0])
+        pairs = []
+        tries = 0
+        while len(pairs) < n_per_bucket and tries < 200 * n_per_bucket:
+            tries += 1
+            f = int(frags[rng.integers(0, frags.size)])
+            members = np.nonzero(fa == f)[0]
+            s, t = rng.choice(members, 2)
+            if agent_of[s] != agent_of[t]:
+                pairs.append((int(s), int(t)))
+        assert len(pairs) >= n_per_bucket, \
+            "could not build same_frag pairs"
+        out["same_frag"] = np.asarray(pairs)
+    if "cross_frag" in buckets:
+        # rejection-sample uniform pairs
+        pairs = []
+        tries = 0
+        while len(pairs) < n_per_bucket and tries < 500 * n_per_bucket:
+            tries += 1
+            s, t = rng.integers(0, n, 2)
+            if agent_of[s] != agent_of[t] and fa[s] != fa[t] \
+                    and fa[s] >= 0 and fa[t] >= 0:
+                pairs.append((int(s), int(t)))
+        assert len(pairs) >= n_per_bucket, \
+            "could not build cross_frag pairs"
+        out["cross_frag"] = np.asarray(pairs)
+    return out
+
+
+def _assert_paths_exact(engine: EpochedEngine, pairs: np.ndarray,
+                        bucket: str) -> None:
+    """The acceptance contract for one bucket on the current epoch."""
+    g = engine.g
+    s, t = pairs[:, 0].astype(np.int32), pairs[:, 1].astype(np.int32)
+    dist, wit = engine.planner.query_witness(s, t)
+    # witness-mode distances == distance-only serve_step, array-exact
+    mono, wit_mono = serve_step_w(engine.dix, jnp.asarray(s),
+                                  jnp.asarray(t))
+    np.testing.assert_array_equal(
+        dist, np.asarray(serve_step(engine.dix, jnp.asarray(s),
+                                    jnp.asarray(t))),
+        err_msg=f"{bucket}: witness mode perturbed distances")
+    uw = engine.unwinder()
+    mono_d = np.asarray(mono)
+    mono_w = np.asarray(wit_mono)
+    for i in range(len(s)):
+        want = dijkstra.pair(g, int(s[i]), int(t[i]))
+        for d, w in ((dist[i], wit[i]), (mono_d[i], mono_w[i])):
+            path = uw.unwind(int(s[i]), int(t[i]), d, int(w))
+            if np.isinf(want):
+                assert path is None, (bucket, i, path)
+                continue
+            assert path[0] == s[i] and path[-1] == t[i], (bucket, i)
+            # path_weight raises on any hop that is not a real edge
+            assert path_weight(g, path) == float(d) == want, \
+                (bucket, engine.epoch, int(s[i]), int(t[i]), path)
+
+
+@pytest.mark.parametrize("seed", [0])
+def test_paths_differential_road(seed):
+    """>= 500 random queries per case bucket, exact against Dijkstra,
+    re-checked on two refresh epochs (the acceptance gate)."""
+    g = road_like(900, seed=seed)
+    engine = EpochedEngine(g, paths=True)
+    rng = np.random.default_rng(seed + 1)
+    buckets = _bucket_pairs(engine.dix, rng, N_PER_BUCKET)
+    for bucket, pairs in buckets.items():
+        _assert_paths_exact(engine, pairs, bucket)
+    for r in range(2):
+        u, v, w = traffic_updates(engine.g, frac=0.04, seed=seed + 10 + r,
+                                  localized=bool(r % 2))
+        engine.apply_updates(u, v, w)
+        for bucket, pairs in buckets.items():
+            _assert_paths_exact(engine, pairs, bucket)
+    assert engine.epoch == 2
+
+
+def test_paths_blob_graph_pieces():
+    """Piece-heavy graph: the same-DRA bucket exercises both WIT_PIECE
+    (same-piece table) and WIT_VIA_AGENT witnesses, plus piece_next
+    refresh through an update epoch."""
+    g = tree_with_blobs(25, 6, seed=9)
+    engine = EpochedEngine(g, paths=True)
+    rng = np.random.default_rng(5)
+    pairs = _bucket_pairs(engine.dix, rng, 200,
+                          buckets=("same_dra",))["same_dra"]
+    _assert_paths_exact(engine, pairs, "same_dra")
+    u, v, w = traffic_updates(engine.g, frac=0.06, seed=77,
+                              localized=False)
+    engine.apply_updates(u, v, w)
+    _assert_paths_exact(engine, pairs, "same_dra")
+
+
+def test_host_engine_path_oracle():
+    """DislandEngine.query_path: paper-faithful host oracle — its path
+    weight equals its own distance and Dijkstra, on every case."""
+    g = road_like(700, seed=3)
+    engine = EpochedEngine(g, paths=True)
+    host = DislandEngine(engine.ix)
+    rng = np.random.default_rng(4)
+    buckets = _bucket_pairs(engine.dix, rng, 40)
+    for bucket, pairs in buckets.items():
+        for s, t in pairs:
+            want = dijkstra.pair(g, int(s), int(t))
+            dist, path = host.query_path(int(s), int(t))
+            if np.isinf(want):
+                assert path is None
+                continue
+            assert path[0] == s and path[-1] == t
+            assert path_weight(g, path) == dist == want, (bucket, s, t)
+
+
+def test_unwind_trivial_and_unreachable():
+    g = road_like(400, seed=2)
+    engine = EpochedEngine(g, paths=True)
+    uw = engine.unwinder()
+    assert uw.unwind(5, 5, 0.0, -1) == [5]
+    assert uw.unwind(0, 1, float("inf"), -1) is None
+    # batched entry points agree
+    dist, paths = engine.query_path([7, 7], [7, 123])
+    assert paths[0] == [7]
+    assert dist[0] == 0.0
+    if np.isfinite(dist[1]):
+        assert path_weight(g, paths[1]) == float(dist[1])
+
+
+def test_unwinder_epoch_snapshot():
+    """An unwinder snapshot stays valid for its own epoch's witnesses
+    even after the engine publishes a new epoch."""
+    g = road_like(500, seed=6)
+    engine = EpochedEngine(g, paths=True)
+    s = np.arange(0, 40, dtype=np.int32)
+    t = np.arange(40, 80, dtype=np.int32)
+    dist0, wit0 = engine.planner.query_witness(s, t)
+    uw0 = engine.unwinder()
+    g0 = engine.g
+    u, v, w = traffic_updates(engine.g, frac=0.05, seed=8)
+    engine.apply_updates(u, v, w)
+    assert engine.unwinder() is not uw0      # cache rolled to new epoch
+    for i in range(len(s)):
+        if not np.isfinite(dist0[i]):
+            continue
+        p = uw0.unwind(int(s[i]), int(t[i]), dist0[i], int(wit0[i]))
+        assert path_weight(g0, p) == float(dist0[i])

@@ -1,0 +1,89 @@
+"""repro.perflog coverage (append/read/latest round-trip, corruption
+tolerance) and the serve driver's refresh-record shape — both were
+previously exercised only by the smoke scripts, so a regression could
+silently break the cross-PR perf trajectory the bench gate reads."""
+import argparse
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import perflog
+from repro.core.dist_engine import EpochedEngine
+from repro.core.graph import road_like
+from repro.launch.serve import REFRESHED_FIELDS, _update_loop
+
+
+def test_roundtrip_and_latest(tmp_path):
+    p = str(tmp_path / "bench.json")
+    assert perflog.read_records(p) == []
+    assert perflog.latest(p) is None
+    perflog.append_records(p, [{"section": "serve", "graph": "g1",
+                                "us_per_query": 10.0}])
+    perflog.append_records(p, [{"section": "serve", "graph": "g2",
+                                "us_per_query": 20.0},
+                               {"section": "refresh", "graph": "g1",
+                                "refresh_s": 0.5}])
+    recs = perflog.read_records(p)
+    assert len(recs) == 3
+    assert recs[0]["graph"] == "g1"
+    # latest() filters exactly and scans from the end
+    assert perflog.latest(p, section="serve")["graph"] == "g2"
+    assert perflog.latest(p, section="serve",
+                          graph="g1")["us_per_query"] == 10.0
+    assert perflog.latest(p, section="nope") is None
+    # appends preserve prior records verbatim
+    with open(p) as f:
+        assert json.load(f) == recs
+
+
+@pytest.mark.parametrize("content", [
+    "{not json at all",                       # corrupt
+    '{"a": 1}',                               # valid JSON, not a list
+    "",                                       # empty file
+])
+def test_corrupt_file_degrades_to_empty(tmp_path, content):
+    p = str(tmp_path / "bench.json")
+    with open(p, "w") as f:
+        f.write(content)
+    assert perflog.read_records(p) == []
+    assert perflog.latest(p, section="serve") is None
+    # appending to a corrupt file starts a fresh history, not a crash
+    perflog.append_records(p, [{"section": "serve"}])
+    assert perflog.read_records(p) == [{"section": "serve"}]
+
+
+def test_update_loop_record_shape():
+    """serve.py's live-traffic loop: one record per update batch, with
+    the schema the bench tooling and BENCH_serve.json history rely on —
+    and array-exact parity between refresh and scratch rebuild
+    (scratch_match covers every witness table via REFRESHED_FIELDS)."""
+    g = road_like(300, seed=21)
+    engine = EpochedEngine(g)
+    args = argparse.Namespace(nodes=300, seed=21, batch_size=32,
+                              validate=8, update_batches=1,
+                              update_frac=0.03)
+    records = _update_loop(engine, args, build_s=0.1)
+    assert len(records) == 1
+    rec = records[0]
+    want_keys = {
+        "section", "graph", "backend", "epoch", "update_frac",
+        "refresh_s", "scratch_pipeline_s", "scratch_reweight_s",
+        "refresh_over_scratch", "refresh_over_reweight",
+        "initial_build_s", "post_refresh_mismatches", "scratch_match",
+        "serve_batch_ms", "n_updates", "dirty_frags",
+        "dirty_frag_frac", "dirty_pieces", "decrease_only",
+    }
+    assert want_keys <= set(rec)
+    assert rec["section"] == "refresh"
+    assert rec["graph"] == "road300"
+    assert rec["epoch"] == 1
+    assert rec["post_refresh_mismatches"] == 0
+    assert rec["scratch_match"] is True
+    assert rec["refresh_s"] > 0
+    assert json.dumps(rec)                   # JSON-serializable
+    # the parity fields include the PR-3 witness tables
+    assert {"frag_next", "super_next", "piece_next"} <= set(
+        REFRESHED_FIELDS)
+    assert np.isfinite(rec["refresh_over_scratch"])

@@ -24,9 +24,9 @@ from repro.core.device_engine import (build_device_index, classify_updates,
 from repro.core.dist_engine import EpochedEngine
 from repro.core.graph import road_like, traffic_updates, tree_with_blobs
 from repro.core.supergraph import reweight_index
-
-REFRESHED_FIELDS = ("frag_apsp", "brow", "d_super", "piece_flat",
-                    "dist_to_agent")
+# the refreshed-field list lives with the serve driver so the parity
+# assertions here can never drift from what serving publishes
+from repro.launch.serve import REFRESHED_FIELDS
 
 
 def _assert_scratch_equal(engine: EpochedEngine) -> None:
