@@ -260,7 +260,57 @@ def exp8_path_reconstruction(out: List[str]) -> None:
                f"{np.mean(hops):.1f},1")
 
 
+def exp9_sustained_load(out: List[str]) -> None:
+    """Exp-9 (beyond the paper): the online serving runtime under
+    sustained open-loop load (DESIGN.md §11).
+
+    Arrival-rate sweep x result-cache on/off x concurrent-refresh
+    on/off over a Zipf-skewed mix: tail latency (p50/p99), achieved
+    qps, cache hit rate, and mean batch occupancy per cell, with a
+    per-epoch host-oracle check on a response sample (bad == 0 is the
+    epoch-consistency claim under load).  Each cell rebuilds the
+    device index from the same host index so cells stay comparable
+    (refresh cells mutate weights).
+    """
+    from repro.core.dist_engine import EpochedEngine
+    from repro.core.supergraph import build_index as _build_ix
+    from repro.serving import (ServingRuntime, run_load_with_refresh,
+                               validate_against_epochs,
+                               workload_pairs)
+
+    out.append("exp9,graph,rate_qps,cache,refresh,achieved_qps,"
+               "p50_ms,p99_ms,hit_rate,mean_occ,epochs,oracle_bad")
+    name, g = next(_graphs((2500,)))
+    ix = _build_ix(g)
+    for rate in (500.0, 2000.0):
+        for cache in (True, False):
+            for refresh in (True, False):
+                eng = EpochedEngine(g, ix=ix)
+                rt = ServingRuntime(eng, max_batch=256,
+                                    deadline_s=0.002,
+                                    cache_size=65536 if cache else 0)
+                rt.warmup()
+                pairs = workload_pairs(eng.g, "zipf",
+                                       max(1, int(rate * 2.5)), seed=9)
+                rep, graphs, _drv = run_load_with_refresh(
+                    rt, pairs, rate_qps=rate, seed=5,
+                    refresh_rounds=2 if refresh else 0,
+                    refresh_interval_s=0.2, refresh_seed=17)
+                rt.close()
+                _n, bad = validate_against_epochs(rep.requests,
+                                                  graphs, sample=32)
+                st = rep.runtime_stats
+                epochs = len({r.epoch for r in rep.requests})
+                out.append(
+                    f"exp9,{name},{rate:.0f},"
+                    f"{int(cache)},{int(refresh)},"
+                    f"{rep.achieved_qps:.0f},{rep.p50_ms},"
+                    f"{rep.p99_ms},"
+                    f"{st.get('cache_hit_rate', 0.0):.3f},"
+                    f"{st['mean_occupancy']:.3f},{epochs},{bad}")
+
+
 ALL = [table1_landmark_overhead, table3_agents, table4_partitions,
        table5_hybrid_covers, table6_super_graphs, exp4_preprocessing,
        exp5_query_latency, exp7_incremental_refresh,
-       exp8_path_reconstruction]
+       exp8_path_reconstruction, exp9_sustained_load]

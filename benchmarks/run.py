@@ -40,6 +40,21 @@ def _perf_records(rows: list[str]) -> list[dict]:
                 "mean_hops": float(parts[4]),
                 "exact": bool(int(parts[5])),
             })
+        elif parts[0] == "exp9" and parts[1] != "graph":
+            records.append({
+                "section": "exp9_live",
+                "graph": parts[1],
+                "rate_qps": float(parts[2]),
+                "cache": bool(int(parts[3])),
+                "refresh": bool(int(parts[4])),
+                "achieved_qps": float(parts[5]),
+                "p50_ms": float(parts[6]),
+                "p99_ms": float(parts[7]),
+                "cache_hit_rate": float(parts[8]),
+                "mean_occupancy": float(parts[9]),
+                "epochs_served": int(parts[10]),
+                "oracle_bad": int(parts[11]),
+            })
         elif parts[0] == "exp7" and parts[1] != "graph":
             records.append({
                 "section": "exp7_refresh",

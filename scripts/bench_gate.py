@@ -11,7 +11,16 @@ mistakes (an accidental [q, mb, mb] materialization, a recompile in the
 serving loop), not 10% drift.  The median-of-history baseline makes one
 slow committed record unable to poison the gate in either direction.
 
+``--live`` gates the *online* serving runtime instead: a short open-loop
+``serve.py --live`` run with concurrent refresh, compared on p99 latency
+against committed ``section: "serve_live"`` records of the same config
+(graph/backend/mix/rate/cache/refresh — a separate section key, so the
+offline-serve and live-serve histories never mix).  Same 2.5x median
+rule; the run also re-asserts the per-epoch oracle check, so the gate
+doubles as a consistency smoke.
+
     python scripts/bench_gate.py                         # CI invocation
+    python scripts/bench_gate.py --live                  # live-serve p99 gate
     python scripts/bench_gate.py --inject-slowdown 10    # self-test: the
         fresh measurement is multiplied by 10x, which MUST fail the gate
 
@@ -34,24 +43,49 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
 
-def run_serve(args) -> dict:
-    """Run the serve smoke as a subprocess, return its fresh record."""
+def _run_serve_cmd(args, extra: list, record_filter: dict) -> dict:
+    """Run the serve driver as a subprocess with ``extra`` flags and
+    return the fresh record matching ``record_filter`` (or die)."""
     from repro.perflog import latest
 
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     cmd = [sys.executable, "-m", "repro.launch.serve",
-           "--nodes", str(args.nodes), "--batches", str(args.batches),
-           "--batch-size", str(args.batch_size), "--mode", args.mode,
-           "--validate", str(args.validate), "--json", args.fresh]
+           "--nodes", str(args.nodes),
+           "--validate", str(args.validate),
+           "--json", args.fresh] + extra
     print("bench_gate: running", " ".join(cmd), flush=True)
     subprocess.run(cmd, check=True, cwd=REPO, env=env)
-    rec = latest(args.fresh, section="serve", graph=f"road{args.nodes}",
-                 mode=args.mode, batch_size=args.batch_size)
+    rec = latest(args.fresh, graph=f"road{args.nodes}",
+                 **record_filter)
     if rec is None:
-        raise SystemExit("bench_gate: serve run produced no record")
+        raise SystemExit(
+            f"bench_gate: serve run produced no "
+            f"{record_filter.get('section')} record")
     return rec
+
+
+def run_serve(args) -> dict:
+    """Run the serve smoke as a subprocess, return its fresh record."""
+    return _run_serve_cmd(
+        args,
+        ["--batches", str(args.batches),
+         "--batch-size", str(args.batch_size), "--mode", args.mode],
+        {"section": "serve", "mode": args.mode,
+         "batch_size": args.batch_size})
+
+
+def run_live(args) -> dict:
+    """Run the live-serving smoke as a subprocess, return its fresh
+    ``serve_live`` record."""
+    return _run_serve_cmd(
+        args,
+        ["--live", "--rate", str(args.rate),
+         "--live-seconds", str(args.live_seconds), "--mix", args.mix,
+         "--live-update-batches", str(args.live_update_batches)],
+        {"section": "serve_live", "mix": args.mix,
+         "rate_qps": args.rate})
 
 
 def main() -> int:
@@ -82,38 +116,65 @@ def main() -> int:
     ap.add_argument("--inject-slowdown", type=float, default=1.0,
                     help="multiply the fresh measurement (gate "
                          "self-test hook; >= factor must fail)")
+    live = ap.add_argument_group("live-serve gate (--live)")
+    live.add_argument("--live", action="store_true",
+                      help="gate the online serving runtime's p99 "
+                           "latency (section serve_live) instead of "
+                           "the offline us/query")
+    live.add_argument("--rate", type=float, default=500.0,
+                      help="offered qps for the live smoke")
+    live.add_argument("--live-seconds", type=float, default=3.0)
+    live.add_argument("--mix", default="zipf")
+    live.add_argument("--live-update-batches", type=int, default=1,
+                      help="concurrent refresh rounds during the "
+                           "live smoke")
     args = ap.parse_args()
 
     from repro.perflog import read_records
 
-    fresh = run_serve(args)
-    fresh_us = fresh["us_per_query"] * args.inject_slowdown
+    if args.live:
+        fresh = run_live(args)
+        metric, unit = "p99_ms", "ms p99"
+        # separate section + config key: live histories never mix with
+        # offline serve records or with differently-shaped live runs
+        match = {"section": "serve_live", "graph": f"road{args.nodes}",
+                 "backend": fresh.get("backend"), "mix": args.mix,
+                 "rate_qps": args.rate, "cache": fresh.get("cache"),
+                 "refresh": fresh.get("refresh")}
+        desc = (f"road{args.nodes}/live/{args.mix}@{args.rate:.0f}qps/"
+                f"cache={fresh.get('cache')}/"
+                f"refresh={fresh.get('refresh')}/"
+                f"{fresh.get('backend')}")
+    else:
+        fresh = run_serve(args)
+        metric, unit = "us_per_query", "us/query"
+        match = {"section": "serve", "graph": f"road{args.nodes}",
+                 "mode": args.mode, "backend": fresh.get("backend"),
+                 "batch_size": args.batch_size}
+        desc = (f"road{args.nodes}/{args.mode}/{fresh.get('backend')}/"
+                f"b{args.batch_size}")
+
+    fresh_val = fresh[metric] * args.inject_slowdown
     if args.inject_slowdown != 1.0:
         print(f"bench_gate: INJECTED {args.inject_slowdown}x slowdown "
-              f"({fresh['us_per_query']} -> {fresh_us:.3f}us/query)")
+              f"({fresh[metric]} -> {fresh_val:.3f}{unit})")
 
     hist = [r for r in read_records(args.history)
-            if r.get("section") == "serve"
-            and r.get("graph") == f"road{args.nodes}"
-            and r.get("mode") == args.mode
-            and r.get("backend") == fresh.get("backend")
-            and r.get("batch_size") == args.batch_size
-            and isinstance(r.get("us_per_query"), (int, float))]
+            if all(r.get(k) == v for k, v in match.items())
+            and isinstance(r.get(metric), (int, float))]
     if not hist:
-        print(f"bench_gate: PASS (no committed history for "
-              f"road{args.nodes}/{args.mode}/{fresh.get('backend')}/"
-              f"b{args.batch_size} in {args.history}; nothing to "
-              "regress against)")
+        print(f"bench_gate: PASS (no committed history for {desc} in "
+              f"{args.history}; nothing to regress against)")
         return 0
-    window = [r["us_per_query"] for r in hist[-args.last:]]
+    window = [r[metric] for r in hist[-args.last:]]
     baseline = statistics.median(window)
     limit = args.factor * baseline
-    print(f"bench_gate: fresh {fresh_us:.3f}us/query vs median of last "
-          f"{len(window)} committed records {baseline:.3f}us/query "
+    print(f"bench_gate: fresh {fresh_val:.3f}{unit} vs median of last "
+          f"{len(window)} committed records {baseline:.3f}{unit} "
           f"(limit {limit:.3f} = {args.factor}x)")
-    if fresh_us > limit:
-        print(f"bench_gate: FAIL — {fresh_us:.3f}us/query is "
-              f"{fresh_us / baseline:.2f}x the committed median "
+    if fresh_val > limit:
+        print(f"bench_gate: FAIL — {fresh_val:.3f}{unit} is "
+              f"{fresh_val / baseline:.2f}x the committed median "
               f"(allowed {args.factor}x)")
         return 1
     print("bench_gate: PASS")

@@ -56,6 +56,11 @@ run_stage "live-traffic refresh smoke" \
     --batch-size 256 --validate 32 --update-batches 1 \
     --update-frac 0.02 --json ""
 
+run_stage "live serving smoke (open-loop + concurrent refresh)" \
+    python -m repro.launch.serve --nodes 2000 --live --rate 400 \
+    --live-seconds 2 --mix zipf --live-update-batches 1 \
+    --validate 24 --json ""
+
 run_stage "quickstart" python examples/quickstart.py
 
 if [[ ${fail} -ne 0 ]]; then

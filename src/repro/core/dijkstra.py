@@ -72,6 +72,21 @@ def pair_with_path(g: Graph, s: int, t: int
     return float(dist[t]), path[::-1]
 
 
+def mismatches_oracle(want: float, got: float, *,
+                      rel_tol: float = 1e-4) -> bool:
+    """The one spelling of "served distance disagrees with the host
+    oracle": infinities must agree exactly (a finite answer for an
+    unreachable pair is as wrong as the reverse), finite values within
+    ``rel_tol`` relative tolerance.  Shared by the serve drivers, the
+    live-serving validators, and the tests so the correctness contract
+    cannot drift between spellings."""
+    if not (np.isfinite(want) and np.isfinite(got)):
+        # both +inf (unreachable) is the only non-finite agreement;
+        # NaN anywhere is always a mismatch
+        return not (np.isinf(want) and np.isinf(got))
+    return abs(got - want) > rel_tol * max(want, 1.0)
+
+
 def pair(g: Graph, s: int, t: int) -> float:
     """s->t distance with target early exit (unidirectional Dijkstra)."""
     if s == t:

@@ -47,6 +47,11 @@ def _pad_pow2(n: int, floor: int = 16) -> int:
     return m
 
 
+#: public alias — the serving scheduler buckets its occupancy
+#: histogram with the same padding rule the planner compiles for
+pad_pow2 = _pad_pow2
+
+
 class QueryPlanner:
     """Bucket a query batch by case and dispatch per-case programs.
 
@@ -90,18 +95,33 @@ class QueryPlanner:
         arrays alive (immutable); subsequent calls plan and serve
         against the new epoch with zero recompilation."""
         self.dix = dix
-        self._agent_of = np.asarray(dix.agent_of)
-        self._frag_of = np.asarray(dix.frag_of)
+        # partition maps cached as one tuple keyed by index identity,
+        # so an explicitly pinned dispatch (query(dix=...)) can always
+        # bucket with ITS epoch's maps even if this publish lands
+        # mid-flush (weight-only refreshes share these arrays across
+        # epochs, but the epoch-pin contract must not depend on that)
+        self._maps = (dix, np.asarray(dix.agent_of),
+                      np.asarray(dix.frag_of))
 
-    def warmup(self, batch_size: int) -> None:
-        """Compile every sub-program at every padded bucket size that a
-        batch of ``batch_size`` can produce, so no XLA compile lands in
-        the serving (timed) path."""
+    @staticmethod
+    def bucket_sizes(batch_size: int) -> list[int]:
+        """The padded (pow2) bucket sizes a batch of ``batch_size`` can
+        produce — exactly the shapes ``warmup`` compiles.  Introspection
+        hook for the serving runtime: a micro-batcher that caps its
+        flushes at ``bucket_sizes(b)[-1]`` never triggers a fresh XLA
+        compile, and the occupancy histogram buckets by these sizes."""
         m = _pad_pow2(1)
         sizes = []
         while m <= _pad_pow2(batch_size):
             sizes.append(m)
             m *= 2
+        return sizes
+
+    def warmup(self, batch_size: int) -> None:
+        """Compile every sub-program at every padded bucket size that a
+        batch of ``batch_size`` can produce, so no XLA compile lands in
+        the serving (timed) path."""
+        sizes = self.bucket_sizes(batch_size)
         z = np.zeros(max(sizes), np.int32)
         fns = list(self._fns.values())
         if self.paths:
@@ -111,10 +131,21 @@ class QueryPlanner:
                 jax.block_until_ready(fn(self.dix, jnp.asarray(z[:size]),
                                          jnp.asarray(z[:size])))
 
-    def plan(self, s: np.ndarray, t: np.ndarray) -> dict:
-        """-> {case: index array} partition of the batch."""
-        us, ut = self._agent_of[s], self._agent_of[t]
-        fs, ft = self._frag_of[us], self._frag_of[ut]
+    def plan(self, s: np.ndarray, t: np.ndarray,
+             dix: DeviceIndex | None = None) -> dict:
+        """-> {case: index array} partition of the batch, bucketed by
+        ``dix``'s own membership maps (default: current epoch)."""
+        cached = self._maps          # single atomic read of the tuple
+        if dix is None or cached[0] is dix:
+            agent_of, frag_of = cached[1], cached[2]
+        else:
+            # pinned to an epoch that is no longer current: derive the
+            # maps from that index (cold path — only reachable when a
+            # publish lands between the pin and this dispatch)
+            agent_of = np.asarray(dix.agent_of)
+            frag_of = np.asarray(dix.frag_of)
+        us, ut = agent_of[s], agent_of[t]
+        fs, ft = frag_of[us], frag_of[ut]
         case1 = us == ut
         case2 = ~case1 & (fs == ft)
         return {
@@ -133,7 +164,7 @@ class QueryPlanner:
         dispatches cannot split one batch across two epochs.
         """
         dix = self.dix if dix is None else dix
-        plan = self.plan(s, t)
+        plan = self.plan(s, t, dix)
         self.last_counts = {c: int(ix.size) for c, ix in plan.items()}
         for case, idx in plan.items():
             if idx.size == 0:
@@ -150,10 +181,18 @@ class QueryPlanner:
                 out[idx] = np.asarray(r)[:idx.size]
 
     def __call__(self, s, t) -> np.ndarray:
+        return self.query(s, t)
+
+    def query(self, s, t, *, dix=None) -> np.ndarray:
+        """Planner-bucketed batched distances.  Pass ``dix`` to serve
+        against an explicit epoch instead of the planner's current
+        pointer — the serving runtime pins one epoch per micro-batch
+        flush so a concurrent ``set_index`` cannot tear a flush across
+        epochs (its cache entries are keyed to the same pin)."""
         s = np.asarray(s, np.int32)
         t = np.asarray(t, np.int32)
         out = np.full(s.shape, np.inf, np.float32)
-        self._dispatch(self._fns, s, t, (out,))
+        self._dispatch(self._fns, s, t, (out,), dix=dix)
         return out
 
     def query_witness(self, s, t, *, dix=None
@@ -206,6 +245,10 @@ class EpochedEngine:
                                                            force=force)
         self.planner = QueryPlanner(self.dix, force=force, paths=paths)
         self.epoch = 0
+        # one-tuple publish (epoch, dix, graph): snapshot() readers get
+        # a mutually consistent triple with a single reference read,
+        # never a torn mix of old epoch number and new index
+        self._published = (0, self.dix, self.g)
         self.force = force
         self.last_stats: RefreshStats | None = None
         # (dix, PathUnwinder) pair, replaced atomically (unwinder())
@@ -251,6 +294,17 @@ class EpochedEngine:
     def query(self, s, t) -> np.ndarray:
         """Planner-bucketed batched queries on the current epoch."""
         return self.planner(s, t)
+
+    def snapshot(self) -> tuple:
+        """Atomic ``(epoch, dix, graph)`` read of the published state.
+
+        The triple is replaced as one tuple by ``apply_updates``, so a
+        reader can pin an epoch for a whole micro-batch flush — serve
+        against ``dix``, key cache entries by ``epoch``, validate
+        against ``graph`` — without holding any lock and without ever
+        observing epoch e's number next to epoch e+1's arrays.
+        """
+        return self._published
 
     def unwinder(self, dix: DeviceIndex | None = None) -> PathUnwinder:
         """A PathUnwinder paired with ``dix`` (default: the currently
@@ -309,6 +363,7 @@ class EpochedEngine:
             self.dix = new_dix
             self.planner.set_index(new_dix)
             self.epoch += 1
+            self._published = (self.epoch, new_dix, g_new)
             self.last_stats = stats
             return stats
 

@@ -14,9 +14,21 @@ the incremental refresh path and published as a new index epoch
 (DESIGN.md §9); refresh latency, the from-scratch rebuild baseline, and
 an exact-match check against that rebuild are all recorded.
 
+``--live`` replaces the offline batch loop with the online serving
+runtime (DESIGN.md §11): an open-loop Poisson arrival stream with a
+Zipf/geo/uniform query mix flows through the deadline-aware
+micro-batcher and the epoch-tagged result cache, optionally while a
+background thread absorbs ``--live-update-batches`` traffic rounds
+concurrently; p50/p95/p99 latency, achieved qps, cache hit rate, and
+the batch-occupancy histogram are recorded, and a response sample is
+validated against the host oracle *of the epoch that served it*.
+
     PYTHONPATH=src python -m repro.launch.serve --nodes 4000 \
         --batches 5 --batch-size 1024 --validate 64 \
         --update-batches 3 --update-frac 0.02
+    PYTHONPATH=src python -m repro.launch.serve --nodes 4000 --live \
+        --rate 2000 --live-seconds 5 --mix zipf \
+        --live-update-batches 3 --validate 64
 """
 from __future__ import annotations
 
@@ -42,6 +54,59 @@ REFRESHED_FIELDS = ("frag_apsp", "frag_next", "brow", "d_super",
                     "dist_to_agent")
 
 
+# ---------------------------------------------------------------------------
+# shared helpers (engine setup / validation / record emission)
+# ---------------------------------------------------------------------------
+def _build_engine(args) -> tuple[EpochedEngine, float]:
+    """Graph + host index + EpochedEngine with timing prints — the one
+    setup path shared by the planner serving loops (offline batches,
+    --paths, --update-batches, --live)."""
+    t0 = time.perf_counter()
+    g = road_like(args.nodes, seed=args.seed)
+    print(f"graph: n={g.n} m={g.m} ({time.perf_counter() - t0:.1f}s)")
+    t0 = time.perf_counter()
+    ix = build_index(g)
+    print(f"index: {ix.timings} ({time.perf_counter() - t0:.1f}s)")
+    t0 = time.perf_counter()
+    engine = EpochedEngine(g, ix=ix, paths=args.paths)
+    build_s = time.perf_counter() - t0
+    dix = engine.dix
+    print(f"device index: frag_apsp={dix.frag_apsp.shape} "
+          f"d_super={dix.d_super.shape} ({build_s:.1f}s)")
+    return engine, build_s
+
+
+def _validate_sample(g, s, t, got, n_check: int, *,
+                     label: str = "validation") -> int:
+    """Distance sample vs host Dijkstra on ``g``; returns (and prints)
+    the mismatch count.  Callers assert it is zero."""
+    bad = 0
+    n_check = min(n_check, len(s))
+    for i in range(n_check):
+        want = dijkstra.pair(g, int(s[i]), int(t[i]))
+        bad += dijkstra.mismatches_oracle(want, float(got[i]))
+    print(f"{label}: {bad} mismatches of {n_check}")
+    return bad
+
+
+def _emit(args, records: list, label: str, *, prev_filter=None,
+          prev_key: str | None = None) -> None:
+    """Append perf records to --json (when enabled), printing the most
+    recent committed record for the same config first so the cross-PR
+    delta is visible in the run log."""
+    if not args.json or not records:
+        return
+    if prev_filter:
+        prev = latest(args.json, **prev_filter)
+        if prev and prev_key:
+            print(f"previous {label} record: {prev[prev_key]}")
+    append_records(args.json, records)
+    print(f"{len(records)} {label} record(s) appended to {args.json}")
+
+
+# ---------------------------------------------------------------------------
+# serving loops
+# ---------------------------------------------------------------------------
 def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
     """Absorb --update-batches rounds of localized traffic, serving and
     validating on each new epoch; returns perf records."""
@@ -58,12 +123,8 @@ def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
         t0 = time.perf_counter()
         out = engine.query(s, t)
         serve_s = time.perf_counter() - t0
-        bad = 0
-        for i in range(min(args.validate, len(s))):
-            want = dijkstra.pair(engine.g, int(s[i]), int(t[i]))
-            if not (np.isinf(want) and np.isinf(out[i])) \
-                    and abs(out[i] - want) > 1e-4 * max(want, 1):
-                bad += 1
+        bad = _validate_sample(engine.g, s, t, out, args.validate,
+                               label=f"epoch {engine.epoch} validation")
         # Two from-scratch baselines on the updated graph, re-measured
         # each round so refresh and baseline share contention
         # conditions:
@@ -108,8 +169,7 @@ def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
               f"{refresh_s / pipeline_s:.1%} of full pipeline "
               f"({pipeline_s:.2f}s), "
               f"{refresh_s / reweight_s:.1%} of reweight rebuild "
-              f"({reweight_s:.2f}s), match={scratch_match}; "
-              f"validation {bad}/{args.validate} bad")
+              f"({reweight_s:.2f}s), match={scratch_match}")
         assert bad == 0
     return records
 
@@ -161,6 +221,74 @@ def _paths_loop(engine: EpochedEngine, args) -> list:
     }]
 
 
+def _live_loop(engine: EpochedEngine, args) -> list:
+    """Online serving runtime under open-loop load (DESIGN.md §11),
+    optionally with concurrent background refresh; returns one
+    ``section: "serve_live"`` perf record."""
+    from ..serving import (ServingRuntime, run_load_with_refresh,
+                           validate_against_epochs, workload_pairs)
+
+    runtime = ServingRuntime(engine, max_batch=args.live_batch,
+                             deadline_s=args.deadline_ms * 1e-3,
+                             cache_size=args.cache_size)
+    t0 = time.perf_counter()
+    runtime.warmup()
+    print(f"live: warmed {runtime.max_batch}-cap buckets in "
+          f"{time.perf_counter() - t0:.1f}s; deadline "
+          f"{args.deadline_ms}ms, cache "
+          f"{args.cache_size or 'off'}, mix {args.mix}")
+    n = max(1, int(round(args.rate * args.live_seconds)))
+    pairs = workload_pairs(engine.g, args.mix, n, seed=args.seed + 4,
+                           zipf_a=args.zipf_a)
+    report, graphs, driver = run_load_with_refresh(
+        runtime, pairs, rate_qps=args.rate, seed=args.seed + 5,
+        refresh_rounds=args.live_update_batches,
+        refresh_frac=args.update_frac,
+        refresh_interval_s=args.live_update_every,
+        refresh_seed=args.seed)
+    runtime.close()
+    epochs = sorted({r.epoch for r in report.requests})
+    stats = runtime.stats()
+    print(f"live: {report.n_requests} requests at "
+          f"{report.offered_qps:.0f} qps offered / "
+          f"{report.achieved_qps:.0f} achieved; latency p50 "
+          f"{report.p50_ms}ms p95 {report.p95_ms}ms p99 "
+          f"{report.p99_ms}ms; cache hit rate "
+          f"{stats.get('cache_hit_rate', 0.0):.1%} "
+          f"({stats.get('cache_stale', 0)} stale rejected); "
+          f"{stats['flushes']} flushes, mean occupancy "
+          f"{stats['mean_occupancy']:.1%} "
+          f"(full={stats['flush_full']} "
+          f"deadline={stats['flush_deadline']}); epochs served "
+          f"{epochs}")
+    checked, bad = validate_against_epochs(
+        report.requests, graphs, sample=args.validate, seed=args.seed)
+    print(f"live validation: {bad} mismatches of {checked} vs the "
+          "host oracle of each response's serving epoch")
+    assert bad == 0
+    rec = {
+        "section": "serve_live",
+        "graph": f"road{args.nodes}",
+        "backend": jax.default_backend(),
+        "mix": args.mix,
+        "rate_qps": args.rate,
+        "deadline_ms": args.deadline_ms,
+        "max_batch": runtime.max_batch,
+        "cache": "on" if args.cache_size else "off",
+        "refresh": "on" if args.live_update_batches else "off",
+        "epochs_served": len(epochs),
+        "oracle_checked": checked,
+        "oracle_bad": bad,
+        **report.as_record(),
+    }
+    if driver is not None:
+        rec.update(driver.as_record())
+    return [rec]
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=4000)
@@ -181,29 +309,76 @@ def main() -> None:
                     help="fraction of edges perturbed per round")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="perf-record file ('' disables)")
+    live = ap.add_argument_group("live serving (--live)")
+    live.add_argument("--live", action="store_true",
+                      help="replace the offline batch loop with the "
+                           "online serving runtime: open-loop arrivals "
+                           "through micro-batching + result cache "
+                           "(planner only)")
+    live.add_argument("--rate", type=float, default=1500.0,
+                      help="offered arrival rate, queries/sec")
+    live.add_argument("--live-seconds", type=float, default=4.0,
+                      help="load duration (requests = rate * seconds)")
+    live.add_argument("--mix", choices=("uniform", "zipf", "geo"),
+                      default="zipf", help="query mix")
+    live.add_argument("--zipf-a", type=float, default=1.2,
+                      help="Zipf exponent for --mix zipf")
+    live.add_argument("--deadline-ms", type=float, default=2.0,
+                      help="micro-batch flush deadline")
+    live.add_argument("--live-batch", type=int, default=256,
+                      help="micro-batch size cap (snapped to a planner "
+                           "bucket size)")
+    live.add_argument("--cache-size", type=int, default=65536,
+                      help="result-cache capacity (0 disables)")
+    live.add_argument("--live-update-batches", type=int, default=0,
+                      help="concurrent background refresh rounds "
+                           "during the load run")
+    live.add_argument("--live-update-every", type=float, default=0.25,
+                      help="seconds between background refresh rounds")
     args = ap.parse_args()
     mode = "sharded" if args.sharded else args.mode
     if args.update_batches and mode != "planner":
         ap.error("--update-batches requires --mode planner")
     if args.paths and mode != "planner":
         ap.error("--paths requires --mode planner")
+    if args.live and mode != "planner":
+        ap.error("--live requires --mode planner")
+    if args.live and args.paths:
+        ap.error("--paths is not supported with --live (the live "
+                 "runtime serves distances only)")
 
-    t0 = time.perf_counter()
-    g = road_like(args.nodes, seed=args.seed)
-    print(f"graph: n={g.n} m={g.m} ({time.perf_counter() - t0:.1f}s)")
-    t0 = time.perf_counter()
-    ix = build_index(g)
-    print(f"index: {ix.timings} ({time.perf_counter() - t0:.1f}s)")
-    t0 = time.perf_counter()
+    if args.live:
+        engine, _build_s = _build_engine(args)
+        _emit(args, _live_loop(engine, args), "live",
+              prev_filter={"section": "serve_live",
+                           "graph": f"road{args.nodes}",
+                           "mix": args.mix, "rate_qps": args.rate,
+                           "cache": "on" if args.cache_size else "off",
+                           "refresh": "on" if args.live_update_batches
+                           else "off"},
+              prev_key="p99_ms")
+        if args.update_batches:
+            _emit(args, _update_loop(engine, args, _build_s), "refresh")
+        return
+
     engine = None
     if mode == "planner":
-        engine = EpochedEngine(g, ix=ix, paths=args.paths)
+        engine, build_s = _build_engine(args)
         dix = engine.dix
     else:
+        t0 = time.perf_counter()
+        g = road_like(args.nodes, seed=args.seed)
+        print(f"graph: n={g.n} m={g.m} "
+              f"({time.perf_counter() - t0:.1f}s)")
+        t0 = time.perf_counter()
+        ix = build_index(g)
+        print(f"index: {ix.timings} ({time.perf_counter() - t0:.1f}s)")
+        t0 = time.perf_counter()
         dix = build_device_index(ix)
-    build_s = time.perf_counter() - t0
-    print(f"device index: frag_apsp={dix.frag_apsp.shape} "
-          f"d_super={dix.d_super.shape} ({build_s:.1f}s)")
+        build_s = time.perf_counter() - t0
+        print(f"device index: frag_apsp={dix.frag_apsp.shape} "
+              f"d_super={dix.d_super.shape} ({build_s:.1f}s)")
+    g = engine.g if engine is not None else g
 
     rng = np.random.default_rng(args.seed + 1)
     monitor = StragglerMonitor()
@@ -243,49 +418,29 @@ def main() -> None:
           f"-> {per_q*1e6:.2f}us/query ({qps:,.0f} qps)")
     if planner is not None:
         print(f"planner buckets (last batch): {planner.last_counts}")
-    if args.json:
-        prev = latest(args.json, section="serve",
-                      graph=f"road{args.nodes}", mode=mode)
-        if prev:
-            print(f"previous {mode} record: "
-                  f"{prev['us_per_query']}us/query")
-        append_records(args.json, [{
-            "section": "serve",
-            "graph": f"road{args.nodes}",
-            "mode": mode,
-            "backend": jax.default_backend(),
-            "batch_size": args.batch_size,
-            "median_batch_ms": round(summ["median_s"] * 1e3, 3),
-            "us_per_query": round(per_q * 1e6, 3),
-            "qps": round(qps, 1),
-        }])
-        print(f"perf record appended to {args.json}")
+    _emit(args, [{
+        "section": "serve",
+        "graph": f"road{args.nodes}",
+        "mode": mode,
+        "backend": jax.default_backend(),
+        "batch_size": args.batch_size,
+        "median_batch_ms": round(summ["median_s"] * 1e3, 3),
+        "us_per_query": round(per_q * 1e6, 3),
+        "qps": round(qps, 1),
+    }], mode, prev_filter={"section": "serve",
+                           "graph": f"road{args.nodes}", "mode": mode},
+        prev_key="us_per_query")
     if args.validate:
         s, t, got = last
-        bad = 0
-        for i in range(min(args.validate, len(s))):
-            want = dijkstra.pair(g, int(s[i]), int(t[i]))
-            if not (np.isinf(want) and np.isinf(got[i])) \
-                    and abs(got[i] - want) > 1e-4 * max(want, 1):
-                bad += 1
-        print(f"validation: {bad} mismatches of {args.validate}")
+        bad = _validate_sample(g, s, t, got, args.validate)
         assert bad == 0
     if args.paths:
-        records = _paths_loop(engine, args)
-        if args.json:
-            prev = latest(args.json, section="serve_paths",
-                          graph=f"road{args.nodes}")
-            if prev:
-                print(f"previous paths record: "
-                      f"{prev['us_per_path']}us/path")
-            append_records(args.json, records)
-            print(f"paths record appended to {args.json}")
+        _emit(args, _paths_loop(engine, args), "paths",
+              prev_filter={"section": "serve_paths",
+                           "graph": f"road{args.nodes}"},
+              prev_key="us_per_path")
     if args.update_batches:
-        records = _update_loop(engine, args, build_s)
-        if args.json:
-            append_records(args.json, records)
-            print(f"{len(records)} refresh records appended to "
-                  f"{args.json}")
+        _emit(args, _update_loop(engine, args, build_s), "refresh")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+"""Online serving runtime (DESIGN.md §11): deadline-aware
+micro-batching, an epoch-consistent result cache, concurrent index
+refresh, and an open-loop load harness over the EpochedEngine.
+Workload mixes come straight from ``repro.data.queries``
+(``workload_pairs``, re-exported here for the load-harness callers)."""
+from ..data.queries import workload_pairs
+from .cache import CacheStats, EpochCache
+from .loadgen import (LoadReport, run_load, run_load_with_refresh,
+                      validate_against_epochs)
+from .runtime import RefreshDriver, ServingRuntime
+from .scheduler import MicroBatcher, Request
+
+__all__ = [
+    "CacheStats", "EpochCache", "LoadReport", "MicroBatcher",
+    "RefreshDriver", "Request", "ServingRuntime", "run_load",
+    "run_load_with_refresh", "validate_against_epochs",
+    "workload_pairs",
+]

@@ -1,0 +1,110 @@
+"""Epoch-tagged LRU result cache for the online serving path.
+
+Skewed road-graph traffic makes the same hot ``(s, t)`` pairs recur
+constantly (the Zipf mixes in ``data/queries.py`` model this); an exact
+distance is a single float, so caching it skips the device entirely for
+the hot head of the distribution.
+
+Correctness under live updates is the whole design: every entry is
+tagged with the index **epoch** its value was computed on, and a lookup
+pinned to epoch ``e`` only ever returns an entry tagged ``e``.  An
+``apply_updates`` therefore needs no cache flush and no lock hand-off
+with readers — the epoch bump itself invalidates every older entry,
+which is counted (``stale``) and evicted lazily on first touch.  A
+stale value can be *detected*, never *served* (the differential test in
+``tests/test_serving.py`` asserts exactly this).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+
+
+@dataclass
+class CacheStats:
+    """Counter snapshot; ``stale`` counts lookups that found an entry
+    from an older epoch (rejected + evicted, never served)."""
+    hits: int = 0
+    misses: int = 0
+    stale: int = 0
+    evictions: int = 0
+    size: int = 0
+    capacity: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_record(self) -> dict:
+        return {
+            "cache_hits": self.hits,
+            "cache_misses": self.misses,
+            "cache_stale": self.stale,
+            "cache_evictions": self.evictions,
+            "cache_hit_rate": round(self.hit_rate, 4),
+        }
+
+
+class EpochCache:
+    """Thread-safe LRU over ``(s, t)`` keyed by index epoch.
+
+    ``get``/``put`` take the epoch explicitly (the serving runtime pins
+    one per micro-batch flush from ``EpochedEngine.snapshot``), so the
+    cache itself never races the epoch swap: an entry written for epoch
+    e is simply unreachable from a flush pinned at e+1.
+    """
+
+    def __init__(self, capacity: int = 65536):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive: {capacity}")
+        self.capacity = capacity
+        self._od: OrderedDict[tuple[int, int], tuple[int, float]] = \
+            OrderedDict()
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+        self._stale = 0
+        self._evictions = 0
+
+    def get(self, s: int, t: int, epoch: int) -> float | None:
+        """Value for ``(s, t)`` computed on ``epoch``, else None.  An
+        entry from any other epoch counts as stale and is evicted."""
+        key = (s, t)
+        with self._lock:
+            ent = self._od.get(key)
+            if ent is None:
+                self._misses += 1
+                return None
+            if ent[0] != epoch:
+                self._stale += 1
+                self._misses += 1
+                del self._od[key]
+                return None
+            self._hits += 1
+            self._od.move_to_end(key)
+            return ent[1]
+
+    def put(self, s: int, t: int, epoch: int, dist: float) -> None:
+        key = (s, t)
+        with self._lock:
+            self._od[key] = (epoch, dist)
+            self._od.move_to_end(key)
+            if len(self._od) > self.capacity:
+                self._od.popitem(last=False)
+                self._evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._od)
+
+    def stats(self) -> CacheStats:
+        with self._lock:
+            return CacheStats(hits=self._hits, misses=self._misses,
+                              stale=self._stale,
+                              evictions=self._evictions,
+                              size=len(self._od),
+                              capacity=self.capacity)

@@ -1,0 +1,167 @@
+"""Open-loop load harness for the serving runtime (DESIGN.md §11).
+
+Open-loop means arrivals follow their own clock (Poisson process at
+``rate_qps``), *not* the server's: when the runtime falls behind, the
+generator keeps submitting and queueing delay lands in the measured
+latency — the standard way to see tail behavior that closed-loop
+(wait-for-response) drivers structurally hide.
+
+Query mixes come from ``data/queries.py`` (``workload_pairs``):
+``uniform`` endpoints, ``zipf`` hot-pair skew (exercises the result
+cache), ``geo`` spatially-local pairs (exercises same-fragment planner
+buckets).  The run report carries p50/p95/p99 latency, offered vs
+achieved qps, cache hit rate, and the batch-occupancy histogram,
+shaped for ``repro.perflog``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .runtime import ServingRuntime
+from .scheduler import Request
+
+
+@dataclass
+class LoadReport:
+    """One load phase's results; ``as_record()`` is perflog-shaped."""
+    n_requests: int
+    offered_qps: float
+    achieved_qps: float
+    wall_s: float
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    mean_ms: float
+    max_ms: float
+    runtime_stats: dict = field(default_factory=dict)
+    requests: list = field(default_factory=list, repr=False)
+
+    def as_record(self) -> dict:
+        return {
+            "n_requests": self.n_requests,
+            "offered_qps": round(self.offered_qps, 1),
+            "achieved_qps": round(self.achieved_qps, 1),
+            "p50_ms": self.p50_ms,
+            "p95_ms": self.p95_ms,
+            "p99_ms": self.p99_ms,
+            "mean_ms": self.mean_ms,
+            "max_ms": self.max_ms,
+            **self.runtime_stats,
+        }
+
+
+def _percentiles(lat_ms: np.ndarray) -> dict:
+    return {
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+        "p95_ms": round(float(np.percentile(lat_ms, 95)), 3),
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        "mean_ms": round(float(lat_ms.mean()), 3),
+        "max_ms": round(float(lat_ms.max()), 3),
+    }
+
+
+def run_load(runtime: ServingRuntime, pairs: np.ndarray, *,
+             rate_qps: float, seed: int = 0,
+             wait_timeout_s: float = 60.0) -> LoadReport:
+    """Drive ``pairs`` ([n, 2]) through the runtime as an open-loop
+    Poisson stream at ``rate_qps``; blocks until every response lands.
+
+    Arrival times are pre-drawn (exponential inter-arrivals); a
+    generator running behind schedule submits immediately rather than
+    shedding, so the offered load is honored and overload shows up as
+    queueing latency, not as a silently lower rate.
+    """
+    rng = np.random.default_rng(seed)
+    n = len(pairs)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+    reqs: list[Request] = []
+    t0 = time.perf_counter()
+    for i in range(n):
+        delay = arrivals[i] - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        reqs.append(runtime.submit(int(pairs[i, 0]), int(pairs[i, 1])))
+    deadline = time.perf_counter() + wait_timeout_s
+    for req in reqs:
+        if not req.wait(max(0.0, deadline - time.perf_counter())):
+            raise TimeoutError(
+                f"load run: ({req.s},{req.t}) unserved after "
+                f"{wait_timeout_s}s (runtime stalled?)")
+        if req.error is not None:
+            raise RuntimeError(
+                f"load run: flush failed for ({req.s},{req.t})"
+            ) from req.error
+    wall = time.perf_counter() - t0
+    # latency from the *scheduled* arrival, not the actual submit —
+    # otherwise a generator starved by the server (GIL, overload)
+    # under-reports exactly the queueing delay an open-loop client
+    # would see (coordinated omission)
+    lat_ms = np.array([r.t_done - (t0 + arrivals[i])
+                       for i, r in enumerate(reqs)]) * 1e3
+    return LoadReport(n_requests=n, offered_qps=rate_qps,
+                      achieved_qps=n / wall, wall_s=wall,
+                      runtime_stats=runtime.stats(), requests=reqs,
+                      **_percentiles(lat_ms))
+
+
+def run_load_with_refresh(runtime: ServingRuntime, pairs: np.ndarray,
+                          *, rate_qps: float, seed: int = 0,
+                          refresh_rounds: int = 0,
+                          refresh_frac: float = 0.02,
+                          refresh_interval_s: float = 0.0,
+                          refresh_seed: int = 0,
+                          join_timeout_s: float = 120.0):
+    """``run_load`` with an optional concurrent RefreshDriver — the one
+    spelling of the load-phase teardown shared by ``serve.py --live``,
+    benchmarks exp9, and the example.
+
+    Returns ``(report, graphs_by_epoch, driver)``; ``driver`` is None
+    when ``refresh_rounds == 0``, and ``graphs_by_epoch`` always maps
+    every epoch a response can carry to its validation-oracle graph.
+    """
+    from .runtime import RefreshDriver
+
+    driver = None
+    if refresh_rounds:
+        driver = RefreshDriver(runtime.engine, rounds=refresh_rounds,
+                               frac=refresh_frac,
+                               interval_s=refresh_interval_s,
+                               seed=refresh_seed).start()
+    report = run_load(runtime, pairs, rate_qps=rate_qps, seed=seed)
+    if driver is not None:
+        driver.join(timeout=join_timeout_s)
+        graphs = driver.graphs_by_epoch
+    else:
+        epoch, _dix, g = runtime.engine.snapshot()
+        graphs = {epoch: g}
+    return report, graphs, driver
+
+
+def validate_against_epochs(requests, graphs_by_epoch, *,
+                            sample: int = 64,
+                            seed: int = 0) -> tuple[int, int]:
+    """Differential check: a sampled response must equal the host
+    Dijkstra oracle on the graph of the epoch that served it.
+
+    Returns ``(n_checked, n_bad)``; a response tagged with an epoch
+    missing from ``graphs_by_epoch`` counts as bad (it was served
+    against an index no one published).
+    """
+    from ..core import dijkstra
+
+    rng = np.random.default_rng(seed)
+    reqs = list(requests)
+    idx = rng.permutation(len(reqs))[:sample]
+    bad = 0
+    for i in idx:
+        req = reqs[i]
+        g = graphs_by_epoch.get(req.epoch)
+        if g is None:
+            bad += 1
+            continue
+        want = dijkstra.pair(g, req.s, req.t)
+        bad += dijkstra.mismatches_oracle(want, req.dist)
+    return len(idx), bad

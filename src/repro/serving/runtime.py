@@ -1,0 +1,185 @@
+"""Online serving runtime: scheduler + cache over an EpochedEngine.
+
+``ServingRuntime`` is the single-request front door to the batched
+serving stack (DESIGN.md §11).  A request flows
+
+    submit(s, t) -> MicroBatcher buffer -> flush
+        -> pin (epoch, dix, graph) via EpochedEngine.snapshot()
+        -> EpochCache lookups keyed by that epoch
+        -> one QueryPlanner.query(..., dix=pinned) for the misses
+        -> cache fill + resolve, every response tagged with the epoch
+
+The epoch pin is the consistency argument in one line: everything a
+flush does — cache reads, device serve, cache writes, the tag on each
+response — binds to one atomically-read published epoch, so no
+response can mix epoch e's cache with epoch e+1's index no matter how
+``apply_updates`` interleaves with the flush.  (The deterministic
+interleaving tests and the threaded soak in ``tests/test_serving.py``
+check this against per-epoch host oracles.)
+
+``RefreshDriver`` is the concurrent-refresh half of the tentpole: a
+background thread absorbing synthetic traffic batches through the
+existing staged delta path while the foreground keeps serving; it
+keeps the per-epoch graph snapshots the differential validation needs.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from ..core.dist_engine import EpochedEngine
+from ..core.graph import traffic_updates
+from .cache import EpochCache
+from .scheduler import MicroBatcher, Request
+
+
+class ServingRuntime:
+    """Deadline-batched, epoch-cached serving over an EpochedEngine.
+
+    ``cache_size=0`` disables the cache (every request hits the
+    device); ``auto=False`` disables the flusher thread so tests can
+    drive ``flush()`` deterministically.  ``max_batch`` is snapped up
+    to a planner bucket size so every flush runs a warmup-compiled
+    executable — call ``engine.warmup(max_batch)`` (or let
+    ``warmup()`` here do it) before timing anything.
+    """
+
+    def __init__(self, engine: EpochedEngine, *, max_batch: int = 256,
+                 deadline_s: float = 0.002, cache_size: int = 65536,
+                 auto: bool = True):
+        if max_batch <= 0:
+            # bucket_sizes would silently floor this to 16; reject it
+            # instead (cache_size=0 is the disable idiom, not this)
+            raise ValueError(f"max_batch must be positive: {max_batch}")
+        self.engine = engine
+        self.max_batch = engine.planner.bucket_sizes(max_batch)[-1]
+        self.cache = EpochCache(cache_size) if cache_size else None
+        self.batcher = MicroBatcher(self._serve_batch,
+                                    max_batch=self.max_batch,
+                                    deadline_s=deadline_s, auto=auto)
+
+    def warmup(self) -> None:
+        self.engine.warmup(self.max_batch)
+
+    def submit(self, s: int, t: int) -> Request:
+        """Enqueue one query; returns its in-flight Request."""
+        return self.batcher.submit(s, t)
+
+    def query(self, s: int, t: int,
+              timeout: float | None = 30.0) -> float:
+        """Blocking single-query convenience: submit + wait, raising
+        on timeout or a failed flush."""
+        return self.submit(s, t).result(timeout)
+
+    # -- the flush body (runs on the flusher thread in auto mode) ------
+    def _serve_batch(self, batch) -> None:
+        epoch, dix, _g = self.engine.snapshot()
+        misses = []
+        for req in batch:
+            hit = None if self.cache is None else \
+                self.cache.get(req.s, req.t, epoch)
+            if hit is not None:
+                req.dist = hit
+                req.epoch = epoch
+                req.cached = True
+            else:
+                misses.append(req)
+        if misses:
+            s = np.fromiter((r.s for r in misses), np.int32,
+                            len(misses))
+            t = np.fromiter((r.t for r in misses), np.int32,
+                            len(misses))
+            out = self.engine.planner.query(s, t, dix=dix)
+            for req, d in zip(misses, out):
+                req.dist = float(d)
+                req.epoch = epoch
+                if self.cache is not None:
+                    self.cache.put(req.s, req.t, epoch, req.dist)
+
+    def flush(self) -> int:
+        return self.batcher.flush()
+
+    def close(self) -> None:
+        self.batcher.close()
+
+    def stats(self) -> dict:
+        out = self.batcher.occupancy()
+        if self.cache is not None:
+            out.update(self.cache.stats().as_record())
+        return out
+
+
+class RefreshDriver:
+    """Background index refresher: ``rounds`` traffic batches through
+    ``EpochedEngine.apply_updates`` while the foreground serves.
+
+    Retains ``graphs_by_epoch`` — the exact host graph published with
+    each epoch — so responses tagged epoch e can be validated against
+    the Dijkstra oracle *for e* even after later epochs land, and
+    records per-round refresh wall time.  ``interval_s`` spaces the
+    rounds out (0 = back-to-back).  Start with ``start()``; ``join()``
+    waits for completion.
+    """
+
+    def __init__(self, engine: EpochedEngine, *, rounds: int = 3,
+                 frac: float = 0.02, interval_s: float = 0.0,
+                 seed: int = 0):
+        self.engine = engine
+        self.rounds = rounds
+        self.frac = frac
+        self.interval_s = interval_s
+        self.seed = seed
+        e0, _dix, g0 = engine.snapshot()
+        self.graphs_by_epoch = {e0: g0}
+        self.refresh_s: list[float] = []
+        self.error: BaseException | None = None
+        self._thread = threading.Thread(target=self._run,
+                                        name="refresh-driver",
+                                        daemon=True)
+
+    def start(self) -> "RefreshDriver":
+        self._thread.start()
+        return self
+
+    def join(self, timeout: float | None = None) -> None:
+        """Wait for the driver; raises TimeoutError if it is still
+        running when ``timeout`` expires (callers must not proceed as
+        if the refresh schedule completed) and re-raises any exception
+        the refresh thread died with."""
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"RefreshDriver still running after {timeout}s "
+                f"({len(self.refresh_s)}/{self.rounds} rounds done)")
+        if self.error is not None:
+            raise self.error
+
+    @property
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def _run(self) -> None:
+        try:
+            for r in range(self.rounds):
+                u, v, w = traffic_updates(self.engine.g, self.frac,
+                                          seed=self.seed + 101 + r)
+                t0 = time.perf_counter()
+                self.engine.apply_updates(u, v, w)
+                self.refresh_s.append(time.perf_counter() - t0)
+                epoch, _dix, g = self.engine.snapshot()
+                self.graphs_by_epoch[epoch] = g
+                if self.interval_s:
+                    time.sleep(self.interval_s)
+        except BaseException as exc:   # surfaced by join()
+            self.error = exc
+
+    def as_record(self) -> dict:
+        return {
+            "refresh_rounds": len(self.refresh_s),
+            "refresh_mean_s": round(float(np.mean(self.refresh_s)), 4)
+            if self.refresh_s else 0.0,
+            "refresh_max_s": round(max(self.refresh_s), 4)
+            if self.refresh_s else 0.0,
+        }

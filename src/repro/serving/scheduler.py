@@ -1,0 +1,260 @@
+"""Deadline-aware micro-batching scheduler (DESIGN.md §11).
+
+Single ``(s, t)`` requests arrive one at a time (live traffic); the
+device serves fixed pow2 batch shapes (``QueryPlanner.bucket_sizes``).
+The ``MicroBatcher`` bridges the two: requests accumulate in a pending
+buffer and the whole buffer flushes as one planner batch when either
+
+  * the buffer reaches ``max_batch`` (a warmup-compiled bucket size —
+    throughput bound, "full" flush), or
+  * ``deadline_s`` has elapsed since the *oldest* pending request
+    arrived (tail-latency bound, "deadline" flush).
+
+So a request waits at most one deadline before its batch launches, and
+under load the batch fills long before the deadline — latency degrades
+into throughput exactly at the arrival rate where batching starts
+paying.  Flush sizes are recorded per flush (occupancy histogram) so
+the load harness can report how full the buckets actually ran.
+
+Two drive modes: ``auto=True`` spawns a daemon flusher thread (the
+production arrangement, used by the load harness and the threaded soak
+test); ``auto=False`` leaves flushing to explicit ``flush()`` calls so
+tests can interleave submits, flushes, and index refreshes
+deterministically on one thread.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Sequence
+
+from ..core.dist_engine import pad_pow2
+
+
+class Request:
+    """One in-flight query; resolved in place by the serving flush.
+    ``error`` is set instead of ``dist`` when the flush failed —
+    ``result()`` is the raising accessor."""
+
+    __slots__ = ("s", "t", "t_submit", "t_done", "dist", "epoch",
+                 "cached", "error", "_done")
+
+    def __init__(self, s: int, t: int):
+        self.s = int(s)
+        self.t = int(t)
+        self.t_submit = time.perf_counter()
+        self.t_done: float | None = None
+        self.dist: float | None = None
+        self.epoch: int | None = None
+        self.cached = False
+        self.error: BaseException | None = None
+        self._done = threading.Event()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        return self._done.wait(timeout)
+
+    def result(self, timeout: float | None = None) -> float:
+        """Distance, or raise: TimeoutError if unserved, the flush's
+        exception if its batch failed."""
+        if not self.wait(timeout):
+            raise TimeoutError(f"query ({self.s},{self.t}) not served "
+                               f"within {timeout}s")
+        if self.error is not None:
+            raise RuntimeError(
+                f"serving flush failed for ({self.s},{self.t})"
+            ) from self.error
+        return self.dist
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def latency_s(self) -> float:
+        if self.t_done is None:
+            raise RuntimeError("request not resolved yet")
+        return self.t_done - self.t_submit
+
+
+class MicroBatcher:
+    """Accumulate requests; flush by deadline or full bucket.
+
+    ``serve_batch`` is called with the list of pending requests and
+    must set ``dist``/``epoch``/``cached`` on each; the batcher stamps
+    completion times and wakes waiters.  Flush metadata accumulates
+    incrementally (bucket histogram + counters, O(1) per flush — a
+    long-lived runtime flushes hundreds of times a second) and is
+    reported by ``occupancy()`` / ``flush_reasons``.
+    """
+
+    def __init__(self, serve_batch: Callable[[Sequence[Request]], None],
+                 *, max_batch: int = 256, deadline_s: float = 0.002,
+                 auto: bool = True):
+        if max_batch <= 0:
+            raise ValueError(f"max_batch must be positive: {max_batch}")
+        self._serve_batch = serve_batch
+        self.max_batch = max_batch
+        self.deadline_s = deadline_s
+        self._pending: list[Request] = []
+        self._cond = threading.Condition()
+        self._closed = False
+        self.error: BaseException | None = None
+        # per-flush accounting, O(1) space: pow2-bucket histogram of
+        # flush sizes plus running count/total
+        self._occ_hist: dict[int, int] = {}
+        self.n_flushes = 0
+        self.flushed_requests = 0
+        self.flush_reasons = {"full": 0, "deadline": 0, "manual": 0}
+        self._thread: threading.Thread | None = None
+        if auto:
+            self._thread = threading.Thread(target=self._run,
+                                            name="microbatcher",
+                                            daemon=True)
+            self._thread.start()
+
+    # -- submission ----------------------------------------------------
+    def submit(self, s: int, t: int) -> Request:
+        req = Request(s, t)
+        with self._cond:
+            if self._closed:
+                raise RuntimeError(
+                    "MicroBatcher is closed"
+                    + (f" (flusher died: {self.error!r})"
+                       if self.error else ""))
+            self._pending.append(req)
+            # wake the flusher: either this is the first request (its
+            # deadline clock starts now) or the bucket just filled
+            self._cond.notify_all()
+        return req
+
+    @property
+    def pending(self) -> int:
+        with self._cond:
+            return len(self._pending)
+
+    # -- flushing ------------------------------------------------------
+    def _take(self, reason: str) -> list[Request]:
+        """Caller must hold the lock.  Detach at most ``max_batch``
+        pending requests (oldest first) and account the flush."""
+        batch = self._pending[:self.max_batch]
+        self._pending = self._pending[self.max_batch:]
+        if batch:
+            b = pad_pow2(len(batch))
+            self._occ_hist[b] = self._occ_hist.get(b, 0) + 1
+            self.n_flushes += 1
+            self.flushed_requests += len(batch)
+            self.flush_reasons[reason] += 1
+        return batch
+
+    def _fail(self, batch: list[Request], exc: BaseException) -> None:
+        """Resolve ``batch`` (and anything still pending) with ``exc``
+        so no waiter hangs on a dead flush path."""
+        with self._cond:
+            batch = batch + self._pending
+            self._pending = []
+        now = time.perf_counter()
+        for req in batch:
+            if not req.done:
+                req.error = exc
+                req.t_done = now
+                req._done.set()
+
+    def _resolve(self, batch: list[Request]) -> None:
+        """Serve and complete one flush.  A failure resolves every
+        affected request with the exception (never a silent hang) and
+        re-raises for the caller — flush() propagates it; the auto
+        thread records it and closes the batcher."""
+        if not batch:
+            return
+        try:
+            self._serve_batch(batch)
+            for req in batch:
+                if req.dist is None or req.epoch is None:
+                    raise RuntimeError(
+                        f"serve_batch left ({req.s},{req.t}) "
+                        "unresolved")
+        except BaseException as exc:
+            self.error = exc
+            self._fail(batch, exc)
+            raise
+        now = time.perf_counter()
+        for req in batch:
+            req.t_done = now
+            req._done.set()
+
+    def flush(self) -> int:
+        """Synchronously flush one batch of whatever is pending (the
+        deterministic-test drive mode); returns its size."""
+        with self._cond:
+            batch = self._take("manual")
+        self._resolve(batch)
+        return len(batch)
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._pending and not self._closed:
+                    self._cond.wait()
+                if self._closed and not self._pending:
+                    return
+                # deadline runs from the oldest pending arrival, so a
+                # request never waits more than deadline_s to launch
+                first = self._pending[0].t_submit
+                while len(self._pending) < self.max_batch:
+                    remaining = self.deadline_s \
+                        - (time.perf_counter() - first)
+                    if remaining <= 0 or self._closed:
+                        break
+                    self._cond.wait(timeout=remaining)
+                reason = ("full" if len(self._pending) >= self.max_batch
+                          else "deadline")
+                batch = self._take(reason)
+            try:
+                self._resolve(batch)
+            except BaseException as exc:
+                # fail fast and loud: stop accepting work (submit now
+                # raises, carrying self.error), then fail stragglers
+                # that slipped in between the batch failure and the
+                # close — nothing ever hangs
+                with self._cond:
+                    self._closed = True
+                    self._cond.notify_all()
+                self._fail([], exc)
+                return
+
+    def close(self, *, drain: bool = True) -> None:
+        """Stop the flusher; by default drain pending requests first.
+        Raises if the flusher will not stop (e.g. stuck in a cold
+        compile) rather than draining concurrently with it — two
+        threads must never drive serve_batch at once."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=60.0)
+            if self._thread.is_alive():
+                raise RuntimeError(
+                    "MicroBatcher flusher did not stop within 60s; "
+                    "refusing to drain concurrently with it")
+            self._thread = None
+        if drain:
+            while self.flush():
+                pass
+
+    # -- introspection -------------------------------------------------
+    def occupancy(self) -> dict:
+        """Flush-size histogram + mean occupancy vs ``max_batch``.
+
+        Bucketed by the planner's pow2 padding rule (floor 16) applied
+        to the *whole* flush — an upper bound on executable shape,
+        since the planner additionally splits each flush into per-case
+        buckets that may each pad smaller."""
+        mean = (self.flushed_requests / self.n_flushes
+                / self.max_batch) if self.n_flushes else 0.0
+        return {
+            "flushes": self.n_flushes,
+            "mean_occupancy": round(mean, 4),
+            "occupancy_hist": {str(k): self._occ_hist[k]
+                               for k in sorted(self._occ_hist)},
+            **{f"flush_{k}": v for k, v in self.flush_reasons.items()},
+        }

@@ -1,0 +1,82 @@
+"""Distribution sanity for the serving workload generators
+(data/queries.py): the Zipf mix concentrates the configured mass on
+its hot head, the geo mix honors its radius, and both produce valid,
+reproducible (s, t) pairs."""
+import numpy as np
+import pytest
+
+from repro.core.graph import road_like
+from repro.data.queries import (geo_local_pairs, top_pair_mass,
+                                workload_pairs, zipf_pairs)
+
+
+def _pair_counts(pairs: np.ndarray) -> np.ndarray:
+    """Descending query counts per distinct (s, t) pair."""
+    key = pairs[:, 0].astype(np.int64) * 10_000_000 + pairs[:, 1]
+    _, counts = np.unique(key, return_counts=True)
+    return np.sort(counts)[::-1]
+
+
+def test_zipf_top1pct_mass():
+    """The top-1% of pool pairs must carry the analytically configured
+    query mass (the skew the result cache exists for) — and far more
+    than a uniform mix would give them."""
+    g = road_like(900, seed=2)
+    pool, a, n = 2048, 1.2, 40_000
+    pairs = zipf_pairs(g, n, a=a, pool=pool, seed=3)
+    counts = _pair_counts(pairs)
+    k = max(1, int(0.01 * pool))
+    emp = counts[:k].sum() / n
+    want = top_pair_mass(0.01, a=a, pool=pool)
+    assert abs(emp - want) < 0.05, (emp, want)
+    assert emp > 10 * 0.01          # >=10x the uniform share
+    # flatter exponent -> flatter head
+    flat = _pair_counts(zipf_pairs(g, n, a=0.6, pool=pool, seed=3))
+    assert flat[:k].sum() / n < emp
+
+
+def test_zipf_pairs_valid_and_reproducible():
+    g = road_like(400, seed=1)
+    p1 = zipf_pairs(g, 500, seed=9)
+    p2 = zipf_pairs(g, 500, seed=9)
+    np.testing.assert_array_equal(p1, p2)
+    assert p1.shape == (500, 2)
+    assert (p1 >= 0).all() and (p1 < g.n).all()
+    assert (p1[:, 0] != p1[:, 1]).all()
+
+
+@pytest.mark.parametrize("radius", [1, 4, 9])
+@pytest.mark.parametrize("n", [700, 170])
+def test_geo_local_radius_bound(radius, n):
+    """Every generated pair sits within the Chebyshev ball on the
+    road_like lattice, including around the partial last row."""
+    g = road_like(n, seed=4)
+    side = int(np.ceil(np.sqrt(g.n)))
+    pairs = geo_local_pairs(g, 2500, radius=radius, seed=6)
+    assert (pairs >= 0).all() and (pairs < g.n).all()
+    assert (pairs[:, 0] != pairs[:, 1]).all()
+    cheb = np.maximum(
+        np.abs(pairs[:, 0] // side - pairs[:, 1] // side),
+        np.abs(pairs[:, 0] % side - pairs[:, 1] % side))
+    assert cheb.max() <= radius
+
+
+def test_geo_local_explicit_coords():
+    g = road_like(300, seed=5)
+    coords = np.random.default_rng(0).random((g.n, 2)) * 256
+    pairs = geo_local_pairs(g, 64, radius=64, coords=coords, seed=7)
+    assert (pairs[:, 0] != pairs[:, 1]).all()
+    assert (pairs >= 0).all() and (pairs < g.n).all()
+
+
+def test_workload_dispatcher():
+    g = road_like(300, seed=5)
+    for mix in ("uniform", "zipf", "geo"):
+        p = workload_pairs(g, mix, 128, seed=1)
+        assert p.shape == (128, 2)
+        assert (p[:, 0] != p[:, 1]).all()
+        assert (p >= 0).all() and (p < g.n).all()
+    with pytest.raises(ValueError):
+        workload_pairs(g, "bogus", 8)
+    with pytest.raises(ValueError):
+        zipf_pairs(g, 0)

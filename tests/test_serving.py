@@ -1,0 +1,387 @@
+"""Online serving runtime tests (DESIGN.md §11).
+
+The contract: every response carries the epoch it was served on, its
+distance equals the host Dijkstra oracle **for that epoch's graph**,
+and a cache entry written under one epoch is never served under
+another (stale entries are detected and dropped, not returned) — no
+matter how queries, flushes, and index refreshes interleave.
+
+Interleavings are exercised twice: deterministically on one thread
+(scripted submit/update/flush orders, so a CI failure replays
+exactly), and as a threaded soak with a background RefreshDriver
+racing an open-loop submission stream across >= 3 published epochs.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import dijkstra
+from repro.core.dist_engine import EpochedEngine
+from repro.core.graph import road_like, traffic_updates
+from repro.data.queries import zipf_pairs
+from repro.serving import (EpochCache, MicroBatcher, RefreshDriver,
+                           ServingRuntime, validate_against_epochs)
+
+
+# ---------------------------------------------------------------------------
+# cache unit tests (no engine)
+# ---------------------------------------------------------------------------
+def test_mismatches_oracle_contract():
+    """The shared oracle comparator: infs agree only with infs, NaN is
+    always a mismatch, finites compare with relative tolerance."""
+    m = dijkstra.mismatches_oracle
+    inf, nan = np.inf, np.nan
+    assert not m(inf, inf)
+    assert m(inf, 5.0) and m(5.0, inf)           # inf vs finite: wrong
+    assert m(5.0, nan) and m(inf, nan) and m(nan, nan)
+    assert not m(100.0, 100.0 + 1e-4)
+    assert m(100.0, 101.0)
+    assert not m(0.0, 0.0)
+
+
+def test_cache_epoch_tagging():
+    c = EpochCache(capacity=8)
+    assert c.get(1, 2, epoch=0) is None           # cold miss
+    c.put(1, 2, epoch=0, dist=5.0)
+    assert c.get(1, 2, epoch=0) == 5.0            # hit
+    assert c.get(1, 2, epoch=1) is None           # stale: epoch moved
+    st = c.stats()
+    assert (st.hits, st.misses, st.stale) == (1, 2, 1)
+    assert c.get(1, 2, epoch=1) is None           # evicted, plain miss
+    assert c.stats().stale == 1
+    c.put(1, 2, epoch=1, dist=7.0)
+    assert c.get(1, 2, epoch=1) == 7.0
+    assert 0.0 < c.stats().hit_rate < 1.0
+    rec = c.stats().as_record()
+    assert rec["cache_stale"] == 1 and rec["cache_hits"] == 2
+
+
+def test_cache_lru_eviction():
+    c = EpochCache(capacity=2)
+    c.put(0, 1, 0, 1.0)
+    c.put(0, 2, 0, 2.0)
+    assert c.get(0, 1, 0) == 1.0                  # refresh (0,1)
+    c.put(0, 3, 0, 3.0)                           # evicts LRU (0,2)
+    assert c.get(0, 2, 0) is None
+    assert c.get(0, 1, 0) == 1.0 and c.get(0, 3, 0) == 3.0
+    assert c.stats().evictions == 1 and len(c) == 2
+    with pytest.raises(ValueError):
+        EpochCache(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher unit tests (stub serving, no engine)
+# ---------------------------------------------------------------------------
+def _stub_serve(batch):
+    for r in batch:
+        r.dist = float(r.s + r.t)
+        r.epoch = 0
+
+
+def test_batcher_manual_flush():
+    mb = MicroBatcher(_stub_serve, max_batch=8, auto=False)
+    reqs = [mb.submit(i, i + 1) for i in range(3)]
+    assert mb.pending == 3 and not reqs[0].done
+    assert mb.flush() == 3
+    assert all(r.done and r.dist == r.s + r.t for r in reqs)
+    assert reqs[0].latency_s >= 0
+    assert mb.flush() == 0                        # empty flush is a no-op
+    assert mb.flush_reasons["manual"] == 1
+    assert mb.occupancy()["flushes"] == 1
+
+
+def test_batcher_deadline_flush():
+    mb = MicroBatcher(_stub_serve, max_batch=64, deadline_s=0.03,
+                      auto=True)
+    reqs = [mb.submit(i, i) for i in range(3)]
+    for r in reqs:
+        assert r.wait(timeout=5.0), "deadline flush never fired"
+    assert mb.flush_reasons["deadline"] >= 1
+    assert mb.flush_reasons["full"] == 0
+    assert mb.flushed_requests == 3
+    mb.close()
+
+
+def test_batcher_full_flush_before_deadline():
+    """A full bucket flushes immediately even with a huge deadline."""
+    mb = MicroBatcher(_stub_serve, max_batch=16, deadline_s=30.0,
+                      auto=True)
+    t0 = time.perf_counter()
+    reqs = [mb.submit(i, i) for i in range(16)]
+    for r in reqs:
+        assert r.wait(timeout=5.0), "full-bucket flush never fired"
+    assert time.perf_counter() - t0 < 5.0
+    assert mb.flush_reasons["full"] == 1
+    occ = mb.occupancy()
+    assert occ["flushes"] == 1 and occ["occupancy_hist"] == {"16": 1}
+    assert occ["mean_occupancy"] == 1.0
+    mb.close()
+
+
+def test_batcher_unresolved_request_raises():
+    mb = MicroBatcher(lambda batch: None, max_batch=8, auto=False)
+    mb.submit(1, 2)
+    with pytest.raises(RuntimeError):
+        mb.flush()
+    with pytest.raises(ValueError):
+        MicroBatcher(_stub_serve, max_batch=0, auto=False)
+
+
+def test_batcher_flusher_death_fails_requests_and_closes():
+    """A serve_batch exception in auto mode must resolve the batch's
+    requests with the error, close the batcher, and surface the cause
+    on the next submit — never a silent hang."""
+    def boom(batch):
+        raise ValueError("device exploded")
+
+    mb = MicroBatcher(boom, max_batch=8, deadline_s=0.005, auto=True)
+    r = mb.submit(1, 2)
+    assert r.wait(timeout=5.0), "failed request never resolved"
+    assert isinstance(r.error, ValueError)
+    with pytest.raises(RuntimeError, match="flush failed"):
+        r.result(timeout=0)
+    # the batcher closes itself; any submit that raced the close was
+    # failed as a straggler, and later submits raise with the cause
+    deadline = time.monotonic() + 5.0
+    while True:
+        assert time.monotonic() < deadline, "batcher never closed"
+        try:
+            r2 = mb.submit(3, 4)
+        except RuntimeError as exc:
+            assert "flusher died" in str(exc)
+            break
+        assert r2.wait(timeout=5.0) and r2.error is not None
+        time.sleep(0.01)
+    assert isinstance(mb.error, ValueError)
+
+
+def test_batcher_manual_flush_error_propagates():
+    def boom(batch):
+        raise ValueError("boom")
+
+    mb = MicroBatcher(boom, max_batch=8, auto=False)
+    r = mb.submit(1, 2)
+    with pytest.raises(ValueError):
+        mb.flush()
+    assert r.done and isinstance(r.error, ValueError)
+
+
+def test_occupancy_buckets_are_planner_shapes():
+    """The occupancy histogram reports the padded (pow2, floor-16)
+    executable shapes that ran, not raw flush sizes."""
+    mb = MicroBatcher(_stub_serve, max_batch=64, auto=False)
+    for n in (3, 17, 64):
+        for i in range(n):
+            mb.submit(i, i)
+        mb.flush()
+    occ = mb.occupancy()
+    assert occ["occupancy_hist"] == {"16": 1, "32": 1, "64": 1}
+    assert occ["flushes"] == 3
+
+
+def test_batcher_close_drains_pending():
+    mb = MicroBatcher(_stub_serve, max_batch=64, deadline_s=30.0,
+                      auto=True)
+    reqs = [mb.submit(i, i) for i in range(5)]
+    mb.close()                                    # drain=True default
+    assert all(r.done for r in reqs)
+    with pytest.raises(RuntimeError):
+        mb.submit(1, 1)
+
+
+# ---------------------------------------------------------------------------
+# runtime + engine: correctness, cache, interleavings
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine():
+    g = road_like(380, seed=11)
+    eng = EpochedEngine(g)
+    eng.warmup(64)
+    return eng
+
+
+def _check_vs_epoch_oracle(req, graphs_by_epoch):
+    g = graphs_by_epoch[req.epoch]
+    want = dijkstra.pair(g, req.s, req.t)
+    assert not dijkstra.mismatches_oracle(want, req.dist), \
+        (req.s, req.t, req.epoch, req.dist, want)
+
+
+def _apply_round(eng, seed):
+    u, v, w = traffic_updates(eng.g, frac=0.05, seed=seed)
+    eng.apply_updates(u, v, w)
+    epoch, _dix, g = eng.snapshot()
+    return epoch, g
+
+
+def test_runtime_serves_exact_and_caches(engine):
+    rt = ServingRuntime(engine, max_batch=64, cache_size=256,
+                        auto=False)
+    epoch, _dix, g = engine.snapshot()
+    rng = np.random.default_rng(0)
+    pairs = rng.integers(0, g.n, (20, 2))
+    reqs = [rt.submit(int(a), int(b)) for a, b in pairs]
+    assert rt.flush() == 20
+    for r in reqs:
+        assert r.epoch == epoch and not r.cached
+        _check_vs_epoch_oracle(r, {epoch: g})
+    # resubmit: all hits, identical values, same epoch tag
+    again = [rt.submit(int(a), int(b)) for a, b in pairs]
+    rt.flush()
+    for r0, r1 in zip(reqs, again):
+        assert r1.cached and r1.dist == r0.dist and r1.epoch == epoch
+    st = rt.stats()
+    assert st["cache_hits"] >= 20 and st["cache_stale"] == 0
+
+
+def test_runtime_snaps_max_batch_to_planner_bucket(engine):
+    rt = ServingRuntime(engine, max_batch=100, auto=False)
+    assert rt.max_batch == engine.planner.bucket_sizes(100)[-1] == 128
+    assert rt.max_batch >= 100
+    with pytest.raises(ValueError):
+        ServingRuntime(engine, max_batch=0, auto=False)
+
+
+def test_cache_disabled(engine):
+    rt = ServingRuntime(engine, max_batch=64, cache_size=0, auto=False)
+    assert rt.cache is None
+    r1 = rt.submit(3, 200)
+    rt.flush()
+    r2 = rt.submit(3, 200)
+    rt.flush()
+    assert not r1.cached and not r2.cached and r1.dist == r2.dist
+    assert "cache_hits" not in rt.stats()
+
+
+def test_planner_pinned_epoch_query(engine):
+    """QueryPlanner.query(dix=...) serves an explicit older epoch even
+    after set_index published a newer one."""
+    e0, dix0, g0 = engine.snapshot()
+    rng = np.random.default_rng(1)
+    s = rng.integers(0, g0.n, 16)
+    t = rng.integers(0, g0.n, 16)
+    before = engine.planner.query(s, t)
+    _apply_round(engine, seed=77)
+    pinned = engine.planner.query(s, t, dix=dix0)
+    np.testing.assert_array_equal(pinned, before)
+    for i in range(8):
+        want = dijkstra.pair(g0, int(s[i]), int(t[i]))
+        if np.isinf(want):
+            assert np.isinf(pinned[i])
+        else:
+            assert abs(pinned[i] - want) <= 1e-4 * max(want, 1.0)
+
+
+def test_stale_cache_entry_detected_never_served(engine):
+    """The hot-pair lifecycle across an epoch swap: cached at e, the
+    first post-swap lookup must reject (stale counter) and recompute
+    against e+1's index, then cache-hit at e+1."""
+    rt = ServingRuntime(engine, max_batch=64, cache_size=256,
+                        auto=False)
+    e0, _dix, g0 = engine.snapshot()
+    s, t = 5, g0.n - 7
+    r0 = rt.submit(s, t)
+    rt.flush()
+    r1 = rt.submit(s, t)
+    rt.flush()
+    assert r1.cached and r1.epoch == e0
+    e1, g1 = _apply_round(engine, seed=91)
+    assert e1 == e0 + 1
+    stale_before = rt.cache.stats().stale
+    r2 = rt.submit(s, t)
+    rt.flush()
+    assert not r2.cached                    # stale entry NOT served
+    assert r2.epoch == e1
+    assert rt.cache.stats().stale == stale_before + 1
+    _check_vs_epoch_oracle(r2, {e1: g1})
+    r3 = rt.submit(s, t)
+    rt.flush()
+    assert r3.cached and r3.epoch == e1 and r3.dist == r2.dist
+
+
+@pytest.mark.parametrize("order", [
+    ("submit", "flush", "update", "submit", "flush"),
+    ("submit", "update", "flush", "submit", "flush"),
+    ("submit", "submit", "update", "flush", "update", "submit",
+     "flush"),
+    ("update", "submit", "flush", "submit", "update", "flush"),
+])
+def test_deterministic_interleavings(engine, order):
+    """Scripted single-thread submit/update/flush interleavings: every
+    resolved response must be consistent with the single epoch it is
+    tagged with (requests pending across a swap are served wholly on
+    the post-swap epoch, never torn)."""
+    rt = ServingRuntime(engine, max_batch=64, cache_size=256,
+                        auto=False)
+    e, _dix, g = engine.snapshot()
+    graphs = {e: g}
+    # hash() is per-process salted; derive a stable per-order seed
+    rng = np.random.default_rng(
+        sum((i + 7) * len(op) for i, op in enumerate(order)))
+    reqs = []
+    seed = int(rng.integers(0, 10_000))
+    for op in order:
+        if op == "submit":
+            a, b = rng.integers(0, g.n, 2)
+            reqs.append(rt.submit(int(a), int(b)))
+        elif op == "update":
+            e, g = _apply_round(engine, seed=seed)
+            graphs[e] = g
+            seed += 1
+        else:
+            rt.flush()
+    rt.flush()                                   # resolve stragglers
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert r.epoch in graphs
+        _check_vs_epoch_oracle(r, graphs)
+
+
+# ---------------------------------------------------------------------------
+# threaded soak: concurrent refresh vs open-loop submission
+# ---------------------------------------------------------------------------
+def test_soak_concurrent_refresh(engine):
+    """Background RefreshDriver publishes 3 epochs while a foreground
+    stream submits hot zipf pairs through the auto-flushing runtime;
+    every response must match the oracle of the epoch that served it
+    and the stream must span the refresh rounds (requests keep flowing
+    until after the final publish)."""
+    rt = ServingRuntime(engine, max_batch=64, deadline_s=0.002,
+                        cache_size=4096, auto=True)
+    e_start = engine.snapshot()[0]
+    drv = RefreshDriver(engine, rounds=3, frac=0.05, interval_s=0.05,
+                        seed=23).start()
+    pool = zipf_pairs(engine.g, 4000, pool=128, seed=3)
+    reqs = []
+    i = 0
+    t_end = time.monotonic() + 60.0
+    while not drv.done and time.monotonic() < t_end:
+        a, b = pool[i % len(pool)]
+        reqs.append(rt.submit(int(a), int(b)))
+        i += 1
+        time.sleep(0.001)
+    drv.join(timeout=60.0)
+    assert drv.done and drv.error is None
+    e_end = engine.snapshot()[0]
+    assert e_end == e_start + 3
+    # a tail served strictly after the final publish
+    tail = [rt.submit(int(a), int(b)) for a, b in pool[:24]]
+    deadline = time.monotonic() + 60.0
+    for r in reqs + tail:
+        assert r.wait(max(0.0, deadline - time.monotonic())), \
+            "runtime stalled under concurrent refresh"
+        assert r.error is None, f"flush failed mid-soak: {r.error!r}"
+    rt.close()
+    assert all(r.epoch == e_end for r in tail)
+    epochs_seen = {r.epoch for r in reqs + tail}
+    assert epochs_seen <= set(drv.graphs_by_epoch)
+    checked, bad = validate_against_epochs(
+        reqs + tail, drv.graphs_by_epoch, sample=80, seed=1)
+    assert checked >= 24 and bad == 0
+    st = rt.stats()
+    assert st["flushes"] > 0 and st["cache_hits"] > 0
+    # sanity on the record shapes the load harness publishes
+    assert set(drv.as_record()) == {"refresh_rounds", "refresh_mean_s",
+                                    "refresh_max_s"}
+    assert drv.as_record()["refresh_rounds"] == 3
