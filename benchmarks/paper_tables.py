@@ -310,7 +310,80 @@ def exp9_sustained_load(out: List[str]) -> None:
                     f"{st['mean_occupancy']:.3f},{epochs},{bad}")
 
 
+def exp10_scale(out: List[str]) -> None:
+    """Exp-10 (beyond the paper): the hierarchy scale sweep
+    (DESIGN.md §12).
+
+    Builds each preset end to end — host index, device index with the
+    preset's overlay closure (dense at road4000, two-level hierarchy
+    at road64k) — then measures planner serve latency at batch 1024,
+    a refresh round, the overlay memory actually resident (closure +
+    witness + row tables) against the dense (S+1)^2 baseline, and a
+    sampled host-Dijkstra parity check.  The overlay_bytes column is
+    the sub-quadratic-in-S claim, recorded per graph so the scale
+    trajectory lives in BENCH_serve.json next to the latency history.
+
+    Graph set via EXP10_GRAPHS (comma-separated preset names); the CI
+    artifact run keeps the default, road250k is opt-in (host
+    preprocessing dominates at that size).
+    """
+    import os
+
+    from repro.core.dist_engine import EpochedEngine
+    from repro.core.graph import traffic_updates
+    from repro.data.roads import road_preset
+
+    names = os.environ.get("EXP10_GRAPHS", "road4000,road64k")
+    out.append("exp10,graph,n,S,levels,nsf,S2,overlay_bytes,"
+               "overlay_dense_bytes,build_s,device_s,refresh_s,"
+               "us_per_query,oracle_bad")
+    for name in names.split(","):
+        preset = road_preset(name.strip())
+        g = preset.make()
+        t0 = time.perf_counter()
+        ix = build_index(g)
+        build_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        eng = EpochedEngine(g, ix=ix,
+                            hierarchy_levels=preset.hierarchy)
+        device_s = time.perf_counter() - t0
+        plan = eng.plan
+        if plan.hierarchy_levels == 2:
+            from repro.core.hierarchy import hier_overlay_stats
+
+            st = hier_overlay_stats(plan.hier, plan.S)
+            nsf, s2 = st["nsf"], st["S2"]
+            ov_bytes = st["overlay_bytes"]
+            dense_bytes = st["overlay_dense_bytes"]
+        else:
+            nsf, s2 = 0, 0
+            dense_bytes = ov_bytes = 2 * (plan.S + 1) ** 2 * 4
+        eng.warmup(1024)
+        rng = np.random.default_rng(7)
+        s = rng.integers(0, g.n, 1024).astype(np.int32)
+        t = rng.integers(0, g.n, 1024).astype(np.int32)
+        t0 = time.perf_counter()
+        got = eng.query(s, t)
+        serve_s = time.perf_counter() - t0
+        u, v, w = traffic_updates(eng.g, frac=0.01, seed=11)
+        t0 = time.perf_counter()
+        eng.apply_updates(u, v, w)
+        refresh_s = time.perf_counter() - t0
+        got2 = eng.query(s, t)
+        bad = 0
+        for i in range(16):
+            want = dijkstra.pair(g, int(s[i]), int(t[i]))
+            bad += dijkstra.mismatches_oracle(want, float(got[i]))
+            want2 = dijkstra.pair(eng.g, int(s[i]), int(t[i]))
+            bad += dijkstra.mismatches_oracle(want2, float(got2[i]))
+        out.append(
+            f"exp10,{name},{g.n},{plan.S},{plan.hierarchy_levels},"
+            f"{nsf},{s2},{ov_bytes},{dense_bytes},{build_s:.1f},"
+            f"{device_s:.1f},{refresh_s:.2f},"
+            f"{serve_s / 1024 * 1e6:.2f},{bad}")
+
+
 ALL = [table1_landmark_overhead, table3_agents, table4_partitions,
        table5_hybrid_covers, table6_super_graphs, exp4_preprocessing,
        exp5_query_latency, exp7_incremental_refresh,
-       exp8_path_reconstruction, exp9_sustained_load]
+       exp8_path_reconstruction, exp9_sustained_load, exp10_scale]

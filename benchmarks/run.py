@@ -55,6 +55,29 @@ def _perf_records(rows: list[str]) -> list[dict]:
                 "epochs_served": int(parts[10]),
                 "oracle_bad": int(parts[11]),
             })
+        elif parts[0] == "exp10" and parts[1] != "graph":
+            ov = int(parts[7])
+            s = int(parts[3])
+            records.append({
+                "section": "exp10_scale",
+                "graph": parts[1],
+                "n": int(parts[2]),
+                "S": s,
+                "hierarchy_levels": int(parts[4]),
+                "nsf": int(parts[5]),
+                "S2": int(parts[6]),
+                "overlay_bytes": ov,
+                "overlay_dense_bytes": int(parts[8]),
+                # the tentpole claim, made checkable per record: the
+                # resident overlay tables are smaller than the dense
+                # closure pair measured in the same row
+                "sub_quadratic": ov < int(parts[8]),
+                "build_s": float(parts[9]),
+                "device_s": float(parts[10]),
+                "refresh_s": float(parts[11]),
+                "us_per_query": float(parts[12]),
+                "oracle_bad": int(parts[13]),
+            })
         elif parts[0] == "exp7" and parts[1] != "graph":
             records.append({
                 "section": "exp7_refresh",

@@ -43,6 +43,50 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
 
+def ensure_distinct_files(fresh: str, history: str) -> None:
+    """The fresh run's records file and the committed history must be
+    different files: if they alias, the fresh record would land in the
+    history *before* the median is taken and be included in its own
+    baseline — a gate that can never fail.  Checked up front, loudly.
+    """
+    if os.path.realpath(fresh) == os.path.realpath(history):
+        raise SystemExit(
+            f"bench_gate: --fresh and --history resolve to the same "
+            f"file ({os.path.realpath(fresh)}); the fresh record would "
+            "be included in its own median baseline")
+
+
+def history_window(records: list, match: dict, metric: str,
+                   last: int) -> list:
+    """The metric values of the last ``last`` committed records
+    matching ``match`` — with malformed records failing LOUDLY.
+
+    Two malformation classes would otherwise silently shrink (or
+    worse, mix) the window: a record with no ``section`` field cannot
+    be classified into the offline-serve vs serve_live histories at
+    all (their metrics have different units — µs/query vs ms p99 — so
+    a misclassified record poisons the median), and a record that
+    matches every identity key but lacks a numeric ``metric`` is a
+    half-written entry that used to just vanish from the window.
+    """
+    window = []
+    for i, rec in enumerate(records):
+        if not isinstance(rec, dict) or "section" not in rec:
+            raise SystemExit(
+                f"bench_gate: malformed history record #{i}: no "
+                f"'section' field (cannot classify offline vs live, "
+                f"units would mix): {rec!r}")
+        if not all(rec.get(k) == v for k, v in match.items()):
+            continue
+        val = rec.get(metric)
+        if isinstance(val, bool) or not isinstance(val, (int, float)):
+            raise SystemExit(
+                f"bench_gate: history record #{i} matches "
+                f"{match} but has no numeric {metric!r}: {val!r}")
+        window.append(val)
+    return window[-last:]
+
+
 def _run_serve_cmd(args, extra: list, record_filter: dict) -> dict:
     """Run the serve driver as a subprocess with ``extra`` flags and
     return the fresh record matching ``record_filter`` (or die)."""
@@ -132,6 +176,7 @@ def main() -> int:
 
     from repro.perflog import read_records
 
+    ensure_distinct_files(args.fresh, args.history)
     if args.live:
         fresh = run_live(args)
         metric, unit = "p99_ms", "ms p99"
@@ -159,14 +204,12 @@ def main() -> int:
         print(f"bench_gate: INJECTED {args.inject_slowdown}x slowdown "
               f"({fresh[metric]} -> {fresh_val:.3f}{unit})")
 
-    hist = [r for r in read_records(args.history)
-            if all(r.get(k) == v for k, v in match.items())
-            and isinstance(r.get(metric), (int, float))]
-    if not hist:
+    window = history_window(read_records(args.history), match, metric,
+                            args.last)
+    if not window:
         print(f"bench_gate: PASS (no committed history for {desc} in "
               f"{args.history}; nothing to regress against)")
         return 0
-    window = [r[metric] for r in hist[-args.last:]]
     baseline = statistics.median(window)
     limit = args.factor * baseline
     print(f"bench_gate: fresh {fresh_val:.3f}{unit} vs median of last "

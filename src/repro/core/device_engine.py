@@ -34,10 +34,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from . import hierarchy, padding
 from .supergraph import DislandIndex
 
 INF = np.float32(np.inf)
 PIECE_BUCKETS = (8, 32, 128, 512, 2048)
+
+
+def _dummy(shape, fill, dtype):
+    return lambda: jnp.full(shape, fill, dtype)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -59,12 +64,39 @@ class DeviceIndex:
     bpos: jax.Array              # int32 [k, mb] boundary position in frag
     bvalid: jax.Array            # bool [k, mb]
     bnd_super: jax.Array         # int32 [k, mb] super id (S = sentinel)
-    # super graph
+    # super graph (dense overlay; authoritative at hierarchy_levels=1)
     d_super: jax.Array           # f32 [S+1, S+1] (+inf sentinel row/col)
     super_next: jax.Array        # int32 [S+1, S+1] overlay first hop (-1)
     # pieces: every bucketed APSP tensor, flattened end to end
     piece_flat: jax.Array        # f32 [sum_b P_b * mp_b * mp_b]
     piece_next: jax.Array        # int32, same layout as piece_flat (-1)
+    # hierarchical overlay (hierarchy_levels=2, DESIGN.md §12).  The
+    # dense pair above shrinks to a [1, 1] dummy and these per-level
+    # tables take over; at levels=1 THESE are the 1-sized dummies.
+    # Serve/unwind code dispatches on sf_of.shape[0] > 1 — a static
+    # trace-time fact, so no flags thread through jit.
+    sf_of: jax.Array = dataclasses.field(          # int32 [S+1] (nsf = sentinel)
+        default_factory=_dummy((1,), 0, jnp.int32))
+    pos_in_sf: jax.Array = dataclasses.field(      # int32 [S+1]
+        default_factory=_dummy((1,), 0, jnp.int32))
+    sf_members: jax.Array = dataclasses.field(     # int32 [nsf+1, m2] (S = pad)
+        default_factory=_dummy((1, 1), 0, jnp.int32))
+    sf_closure: jax.Array = dataclasses.field(     # f32 [nsf+1, m2, m2]
+        default_factory=_dummy((1, 1, 1), INF, jnp.float32))
+    sf_next: jax.Array = dataclasses.field(        # int32 [nsf+1, m2, m2]
+        default_factory=_dummy((1, 1, 1), -1, jnp.int32))
+    l2row: jax.Array = dataclasses.field(          # f32 [nsf+1, m2, mb2]
+        default_factory=_dummy((1, 1, 1), INF, jnp.float32))
+    bnd2_sid: jax.Array = dataclasses.field(       # int32 [nsf+1, mb2] (S2 = pad)
+        default_factory=_dummy((1, 1), 0, jnp.int32))
+    d2: jax.Array = dataclasses.field(             # f32 [S2+1, S2+1]
+        default_factory=_dummy((1, 1), INF, jnp.float32))
+    d2_next: jax.Array = dataclasses.field(        # int32 [S2+1, S2+1]
+        default_factory=_dummy((1, 1), -1, jnp.int32))
+
+    @property
+    def hierarchy_levels(self) -> int:
+        return 2 if self.sf_of.shape[0] > 1 else 1
 
     def tree_flatten(self):
         fields = dataclasses.fields(self)
@@ -86,15 +118,10 @@ class DeviceIndex:
 # per-item tensor programs, which is what makes "incremental rebuild ==
 # from-scratch rebuild" hold array-for-array (tests/test_refresh.py).
 # ---------------------------------------------------------------------------
-def _pad_to(x: int, mult: int = 8) -> int:
-    return max(mult, -(-x // mult) * mult)
-
-
-def _pow2(x: int, floor: int = 1) -> int:
-    m = floor
-    while m < x:
-        m *= 2
-    return m
+# canonical padding rules live in padding.py (shared with the planner
+# and the serving scheduler); the old private names stay as aliases
+_pad_to = padding.pad_to
+_pow2 = padding.pow2
 
 
 @dataclasses.dataclass
@@ -140,6 +167,10 @@ class BuildPlan:
     piece_agent_pos: np.ndarray       # int32 [P]
     piece_cap: np.ndarray             # int32 [P] padded size
     piece_base: np.ndarray            # int64 [P] offset into piece_flat
+    # overlay hierarchy (DESIGN.md §12): 1 = dense d_super closure,
+    # 2 = per-super-fragment closures + dense level-2 boundary closure
+    hierarchy_levels: int = 1
+    hier: "hierarchy.HierPlan | None" = None
 
     @property
     def n_pieces(self) -> int:
@@ -417,7 +448,17 @@ def _fw_bucket(adjs: List[np.ndarray], *, force=None,
         full[:len(adjs)] = batch
         batch = full
     out, nxt = ops.fw_batch_next(jnp.asarray(batch), force=force)
-    return (np.asarray(out)[:len(adjs)], np.asarray(nxt)[:len(adjs)])
+    out = np.asarray(out)[:len(adjs)]
+    # Padding blocks are all-+inf: the FW recurrence only ever ADDS
+    # (inf+inf = inf, no inf-inf), so no NaN can arise — audited and
+    # pinned by the all-INF kernel tests in tests/test_kernels.py.
+    # Guard it anyway: mismatches_oracle treats NaN as always-wrong,
+    # so a kernel regression here must fail the build loudly, not
+    # surface as serving mismatches three layers up.
+    if np.isnan(out).any():
+        raise FloatingPointError(
+            "piece FW produced NaN (inf-padding arithmetic regressed?)")
+    return (out, np.asarray(nxt)[:len(adjs)])
 
 
 def piece_stage(plan: BuildPlan, g, *, force=None) -> tuple[np.ndarray,
@@ -442,6 +483,65 @@ def piece_stage(plan: BuildPlan, g, *, force=None) -> tuple[np.ndarray,
     return flat, nflat
 
 
+def hier_super_stage(plan: BuildPlan, *, force=None) -> dict:
+    """Stage 2, hierarchical (DESIGN.md §12): close the overlay as a
+    two-level partition hierarchy instead of one dense FW.
+
+    Runs the existing batched witness FW once per super-fragment batch
+    at the pow2 tile shape [nsf, m2, m2] (``hierarchy.sf_stage``),
+    gathers the level-2 clique weights from those closures (derived
+    state, exactly like the level-1 Upsilon weights), and closes only
+    the small level-2 boundary set densely (``hierarchy.l2_stage``).
+    Returns the DeviceIndex field dict for the per-level tables plus
+    the host-side provenance sidecars.
+    """
+    hier = plan.hier
+    hierarchy.sf_adj_fill(hier, plan)
+    sf_closure, sf_next, l2row = hierarchy.sf_stage(hier, force=force)
+    hierarchy.hier_weights(hier, plan,
+                           np.asarray(sf_closure)[:hier.nsf])
+    d2, d2_next = hierarchy.l2_stage(hier, force=force)
+    S = plan.S
+    sf_of = np.concatenate([hier.sf_of,
+                            [hier.nsf]]).astype(np.int32)       # [S+1]
+    pos_in_sf = np.concatenate([hier.pos_in_sf, [0]]).astype(np.int32)
+    members = np.where(hier.sf_members < 0, S,
+                       hier.sf_members).astype(np.int32)
+    members = np.concatenate(
+        [members, np.full((1, hier.m2), S, np.int32)])          # [nsf+1]
+    bnd2_sid = np.concatenate(
+        [hier.bnd2_sid, np.full((1, hier.mb2), hier.S2, np.int32)])
+    return {
+        "fields": {
+            "sf_of": jnp.asarray(sf_of),
+            "pos_in_sf": jnp.asarray(pos_in_sf),
+            "sf_members": jnp.asarray(members),
+            "sf_closure": sf_closure,
+            "sf_next": sf_next,
+            "l2row": l2row,
+            "bnd2_sid": jnp.asarray(bnd2_sid),
+            "d2": d2,
+            "d2_next": d2_next,
+        },
+        "ov_slot": hierarchy.ov_slot_map(plan),
+        "l2_slot": hierarchy.l2_slot_map(hier),
+    }
+
+
+def resolve_hierarchy_levels(S: int, hierarchy_levels) -> int:
+    """Normalize the ``hierarchy_levels`` build knob: "auto" switches
+    to the two-level overlay once S crosses hierarchy.AUTO_THRESHOLD;
+    explicit 1/2 is honored (2 degrades to 1 on an empty overlay)."""
+    if hierarchy_levels == "auto":
+        hierarchy_levels = 2 if S > hierarchy.AUTO_THRESHOLD else 1
+    if hierarchy_levels not in (1, 2):
+        raise ValueError(
+            f"hierarchy_levels must be 1, 2 or 'auto': {hierarchy_levels}")
+    if hierarchy_levels == 2 and S == 0:
+        return 1
+    return int(hierarchy_levels)
+
+
 def _node_piece_addressing(plan: BuildPlan) -> tuple[np.ndarray,
                                                      np.ndarray]:
     """Per-node (piece_base, piece_stride) vectors from the registry."""
@@ -455,16 +555,37 @@ def _node_piece_addressing(plan: BuildPlan) -> tuple[np.ndarray,
 
 
 def build_device_index_with_plan(
-        ix: DislandIndex, *, force=None) -> tuple[DeviceIndex, BuildPlan]:
+        ix: DislandIndex, *, force=None,
+        hierarchy_levels: int | str = "auto"
+        ) -> tuple[DeviceIndex, BuildPlan]:
     """Full from-scratch build: compose every stage, keep the plan
-    around so refresh_index can run incrementally afterwards."""
+    around so refresh_index can run incrementally afterwards.
+
+    ``hierarchy_levels`` picks the overlay closure: 1 = the dense
+    [S+1, S+1] FW (unchanged, bit-identical to the pre-hierarchy
+    index), 2 = the two-level partition hierarchy (DESIGN.md §12),
+    "auto" = 2 once S crosses ``hierarchy.AUTO_THRESHOLD``.
+    """
     plan = make_build_plan(ix)
+    plan.hierarchy_levels = resolve_hierarchy_levels(plan.S,
+                                                     hierarchy_levels)
+    if plan.hierarchy_levels == 2:
+        plan.hier = hierarchy.plan_hierarchy(plan)
     frag_apsp, brow, frag_next = frag_stage(plan, force=force)
     super_weights(plan, np.asarray(frag_apsp))
-    d_super, super_next = super_stage(plan, force=force)
+    if plan.hierarchy_levels == 2:
+        hres = hier_super_stage(plan, force=force)
+        hier_fields = hres["fields"]
+        d_super = jnp.full((1, 1), INF, jnp.float32)
+        super_next = jnp.full((1, 1), -1, jnp.int32)
+    else:
+        hres = None
+        hier_fields = {}
+        d_super, super_next = super_stage(plan, force=force)
     piece_flat, piece_next = piece_stage(plan, ix.g, force=force)
     base, stride = _node_piece_addressing(plan)
     dix = DeviceIndex(
+        **hier_fields,
         agent_of=jnp.asarray(plan.agent_of),
         dist_to_agent=jnp.asarray(
             ix.dras.dist_to_agent.astype(np.float32)),
@@ -485,15 +606,25 @@ def build_device_index_with_plan(
         piece_flat=jnp.asarray(piece_flat),
         piece_next=jnp.asarray(piece_next),
     )
-    # host-side sidecar (not a pytree field): slot provenance for the
-    # overlay closure this index was built with (overlay_slot_table)
-    dix.host_ov_slot = overlay_slot_table(plan)
+    # host-side sidecars (not pytree fields): slot provenance for the
+    # overlay closure this index was built with.  Dense epochs carry
+    # the [S, S] overlay_slot_table; hierarchical epochs carry the
+    # sparse OvSlotMap (the dense table is exactly the quadratic host
+    # object the hierarchy avoids) plus the small level-2 slot table.
+    if hres is not None:
+        dix.host_ov_slot = hres["ov_slot"]
+        dix.host_l2_slot = hres["l2_slot"]
+    else:
+        dix.host_ov_slot = overlay_slot_table(plan)
     return dix, plan
 
 
-def build_device_index(ix: DislandIndex, *, force=None) -> DeviceIndex:
+def build_device_index(ix: DislandIndex, *, force=None,
+                       hierarchy_levels: int | str = "auto"
+                       ) -> DeviceIndex:
     """Assemble padded tensors on host, run device APSP preprocessing."""
-    return build_device_index_with_plan(ix, force=force)[0]
+    return build_device_index_with_plan(
+        ix, force=force, hierarchy_levels=hierarchy_levels)[0]
 
 
 def warmup_refresh(plan: BuildPlan, *, force=None) -> None:
@@ -505,6 +636,10 @@ def warmup_refresh(plan: BuildPlan, *, force=None) -> None:
     shapes = [(min(p, plan.k), plan.maxf, plan.maxf) for p in (4, 8)]
     shapes += [(8, int(cap), int(cap))
                for cap in np.unique(plan.piece_cap)]
+    if plan.hier is not None:
+        # dirty super-fragment batches refresh at these pow2 shapes
+        shapes += [(min(p, plan.hier.nsf), plan.hier.m2, plan.hier.m2)
+                   for p in (4, 8)]
     for shp in set(shapes):
         jax.block_until_ready(
             ops.fw_batch_next(jnp.full(shp, INF, jnp.float32),
@@ -652,6 +787,61 @@ def refresh_frag_stage(plan: BuildPlan, frag_apsp: jax.Array,
             np.asarray(jblocks[:d]))
 
 
+def refresh_hier_stage(plan: BuildPlan, dix: DeviceIndex,
+                       changed_slots: np.ndarray, undo: dict, *,
+                       force=None) -> dict:
+    """Hierarchical twin of the dense overlay re-close (DESIGN.md §12):
+    re-run the super-fragment FW on the dirty super-fragments only.
+
+    A changed level-1 slot dirties either one super-fragment's
+    adjacency block (both endpoints inside it) or a level-2 cross edge
+    (endpoints in different super-fragments) — nothing else, the same
+    block-diagonal structure the fragment refresh exploits one level
+    down.  The dirty batch pads to a power of two with repeats (same
+    idempotent-scatter trick as refresh_frag_stage), so the refreshed
+    rows are bit-identical to a from-scratch hier_super_stage; the
+    small dense level-2 closure is then re-run whole.  ``undo`` is
+    filled with rollback snapshots of the weight caches BEFORE any
+    mutation, so a failure later in the refresh can restore them.
+    """
+    hier = plan.hier
+    sl = hier.slot_sf[changed_slots]
+    sfs = np.unique(sl[sl >= 0]).astype(np.int64)
+    undo["sfs"] = sfs
+    undo["sf_adj"] = hier.sf_adj[sfs].copy()
+    undo["l2_w"] = hier.l2_w.copy()
+    sf_closure, sf_next, l2row = dix.sf_closure, dix.sf_next, dix.l2row
+    if sfs.size:
+        hierarchy.sf_adj_fill(hier, plan, sfs=sfs)
+        d = int(sfs.size)
+        p = min(_pow2(d, floor=4), hier.nsf)
+        pad = np.concatenate([sfs, np.full(p - d, sfs[0], np.int64)]) \
+            if p > d else sfs
+        jpad = jnp.asarray(pad)
+        blocks, nexts = ops.fw_batch_next(jnp.asarray(hier.sf_adj[pad]),
+                                          force=force)
+        sf_closure = sf_closure.at[jpad].set(blocks)
+        sf_next = sf_next.at[jpad].set(nexts)
+        rows = hierarchy.l2row_from(blocks, hier.bnd2_pos[pad],
+                                    hier.bnd2_valid[pad])
+        l2row = l2row.at[jpad].set(rows)
+        hierarchy.hier_weights(hier, plan, np.asarray(blocks[:d]),
+                               sfs=sfs)
+    else:
+        # only cross-super-fragment slots changed: no FW, just the
+        # O(cross) level-2 weight rewrite inside hier_weights
+        hierarchy.hier_weights(
+            hier, plan, np.empty((0, hier.m2, hier.m2), np.float32),
+            sfs=sfs)
+    d2, d2_next = hierarchy.l2_stage(hier, force=force)
+    return {
+        "fields": {"sf_closure": sf_closure, "sf_next": sf_next,
+                   "l2row": l2row, "d2": d2, "d2_next": d2_next},
+        "ov_slot": hierarchy.ov_slot_map(plan),
+        "l2_slot": hierarchy.l2_slot_map(hier),
+    }
+
+
 def refresh_piece_stage(plan: BuildPlan, g_new, dirty_gids: np.ndarray,
                         piece_flat: np.ndarray, piece_next: np.ndarray,
                         dist_to_agent: np.ndarray, *,
@@ -730,6 +920,7 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
     frag_w_before = plan.frag_adj[upd.frag_fi, upd.frag_pu,
                                   upd.frag_pv].copy()
     sup_w_before = plan.sup_w.copy()
+    hier_undo: dict = {}
     try:
         t0 = time.perf_counter()
         frag_apsp, brow, frag_next, blocks = refresh_frag_stage(
@@ -747,12 +938,25 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
             super_weights(plan, blocks, frags=upd.dirty_frags)
         plan.sup_w[upd.eb_slots] = upd.eb_w
         slot_w_new = plan.sup_w[touched_slots]
-        if (slot_w_old != slot_w_new).any():
-            d_super, super_next = super_stage(plan, force=force)
-            ov_slot = overlay_slot_table(plan)
+        changed = slot_w_old != slot_w_new
+        hier_fields: dict = {}
+        l2_slot = getattr(dix, "host_l2_slot", None)
+        if changed.any():
+            if plan.hierarchy_levels == 2:
+                hres = refresh_hier_stage(plan, dix,
+                                          touched_slots[changed],
+                                          hier_undo, force=force)
+                hier_fields = hres["fields"]
+                ov_slot = hres["ov_slot"]
+                l2_slot = hres["l2_slot"]
+                d_super, super_next = dix.d_super, dix.super_next
+            else:
+                d_super, super_next = super_stage(plan, force=force)
+                ov_slot = overlay_slot_table(plan)
         else:
             # no overlay weight changed: closure AND witnesses are
             # still exact, so the path tables carry over too
+            # (hier_fields stays empty — per-level tables carry too)
             d_super, super_next = dix.d_super, dix.super_next
             ov_slot = getattr(dix, "host_ov_slot", None)
         timings["super_fw"] = time.perf_counter() - t0
@@ -781,6 +985,9 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
         plan.frag_adj[upd.frag_fi, upd.frag_pv,
                       upd.frag_pu] = frag_w_before
         plan.sup_w[:] = sup_w_before
+        if hier_undo:
+            plan.hier.sf_adj[hier_undo["sfs"]] = hier_undo["sf_adj"]
+            plan.hier.l2_w[:] = hier_undo["l2_w"]
         raise
 
     # batch direction: against the edges' previous weights when the
@@ -799,9 +1006,11 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
         dix, frag_apsp=frag_apsp, frag_next=frag_next, brow=brow,
         d_super=d_super, super_next=super_next,
         piece_flat=piece_flat_j, piece_next=piece_next_j,
-        dist_to_agent=dist_j)
+        dist_to_agent=dist_j, **hier_fields)
     if ov_slot is not None:
         new_dix.host_ov_slot = ov_slot
+    if l2_slot is not None:
+        new_dix.host_l2_slot = l2_slot
     stats = RefreshStats(
         n_updates=int(np.asarray(u).size),
         n_dirty_frags=int(upd.dirty_frags.size), n_frags=plan.k,
@@ -844,15 +1053,184 @@ def _same_dra_dist(dix: DeviceIndex, s, t, ds, dt):
                      d_via_agent)
 
 
+def _overlay_size(dix: DeviceIndex) -> int:
+    """S + 1: the witness packing stride and the sentinel super id + 1.
+    Hierarchical indices carry it as sf_of's length (their d_super is a
+    [1, 1] dummy); dense indices as d_super's side."""
+    return (dix.sf_of.shape[0] if dix.sf_of.shape[0] > 1
+            else dix.d_super.shape[0])
+
+
+def _lift_l2(dix: DeviceIndex, row, sf, p2):
+    """Lift a fragment-boundary row to the level-2 boundary set:
+    r2[q, c] = min over slots (i, j) with bnd2_sid == c of
+    row[q, i] + l2row[sf_i, p2_i, j] — the hierarchical analog of the
+    dense path's scatter into SUPER coordinates.  Chunked over the
+    boundary axis so the gathered block stays [q, 8, mb2] (mb2 can be
+    hundreds at road64k scale; the full [q, mb, mb2] cube would be
+    hundreds of MB per batch)."""
+    q, mb = row.shape
+    c = min(8, mb)                       # mb is padded to a multiple of 8
+    s2p1 = dix.d2.shape[0]
+    qi = jnp.arange(q, dtype=jnp.int32)[:, None, None]
+
+    def body(i, r2):
+        row_c = jax.lax.dynamic_slice_in_dim(row, i * c, c, axis=1)
+        sf_c = jax.lax.dynamic_slice_in_dim(sf, i * c, c, axis=1)
+        p_c = jax.lax.dynamic_slice_in_dim(p2, i * c, c, axis=1)
+        l2_c = dix.l2row[sf_c, p_c]              # [q, c, mb2]
+        sid_c = dix.bnd2_sid[sf_c]
+        return r2.at[qi, sid_c].min(row_c[:, :, None] + l2_c)
+
+    return jax.lax.fori_loop(0, mb // c, body,
+                             jnp.full((q, s2p1), INF, row.dtype))
+
+
+def _l2_src_of(dix: DeviceIndex, row, b, sf, p2, wc):
+    """Witness recovery for the level-2 leg: the level-1 super id whose
+    lifted contribution achieved r2[q, wc[q]] (same chunked schedule
+    as _lift_l2, carrying a running argmin; exact f32 re-comparison)."""
+    q, mb = row.shape
+    c = min(8, mb)
+
+    def body(i, carry):
+        best, besti = carry
+        row_c = jax.lax.dynamic_slice_in_dim(row, i * c, c, axis=1)
+        sf_c = jax.lax.dynamic_slice_in_dim(sf, i * c, c, axis=1)
+        p_c = jax.lax.dynamic_slice_in_dim(p2, i * c, c, axis=1)
+        l2_c = dix.l2row[sf_c, p_c]
+        sid_c = dix.bnd2_sid[sf_c]
+        m = sid_c == wc[:, None, None]
+        contrib = jnp.min(jnp.where(m, row_c[:, :, None] + l2_c, INF),
+                          axis=2)                # [q, c]
+        cmin = jnp.min(contrib, axis=1)
+        loc = jnp.argmin(contrib, axis=1).astype(jnp.int32)
+        better = cmin < best
+        return (jnp.where(better, cmin, best),
+                jnp.where(better, i * c + loc, besti))
+
+    _best, besti = jax.lax.fori_loop(
+        0, mb // c, body,
+        (jnp.full((q,), INF, row.dtype), jnp.zeros((q,), jnp.int32)))
+    return jnp.take_along_axis(b, besti[:, None], axis=1)[:, 0]
+
+
+def _combine_mid_h(dix: DeviceIndex, row_s, bs, row_t, bt, *,
+                   force=None):
+    """Hierarchical combine (hierarchy_levels=2, DESIGN.md §12):
+
+      mid = min_{x,y} row_s[x] + OD(x, y) + row_t[y],
+      OD(x, y) = min( sf_closure[sf, x, y]  if sf(x) == sf(y),
+                      min_{a,b} l2row[x,a] + D2[a,b] + l2row[y,b] )
+
+    computed as (a) a b1-chunked same-super-fragment gather (peak
+    intermediate [q, 8, mb], same schedule as the dense CPU path) plus
+    (b) a level-2 lift of both rows contracted by the SAME fused
+    minplus_twoside kernel the dense path uses — just against the
+    small [S2+1, S2+1] closure instead of [S+1, S+1].
+    """
+    sfs, p2s = dix.sf_of[bs], dix.pos_in_sf[bs]
+    sft, p2t = dix.sf_of[bt], dix.pos_in_sf[bt]
+    q, mb = row_s.shape
+    c = min(8, mb)                       # mb is padded to a multiple of 8
+
+    def body(i, acc):
+        r_c = jax.lax.dynamic_slice_in_dim(row_s, i * c, c, axis=1)
+        sf_c = jax.lax.dynamic_slice_in_dim(sfs, i * c, c, axis=1)
+        p_c = jax.lax.dynamic_slice_in_dim(p2s, i * c, c, axis=1)
+        blk = dix.sf_closure[sf_c[:, :, None], p_c[:, :, None],
+                             p2t[:, None, :]]            # [q, c, mb]
+        same = sf_c[:, :, None] == sft[:, None, :]
+        cand = jnp.min(jnp.where(same, r_c[:, :, None] + blk, INF),
+                       axis=1)
+        return jnp.minimum(acc, cand)
+
+    tmp = jax.lax.fori_loop(0, mb // c, body,
+                            jnp.full((q, mb), INF, row_s.dtype))
+    va = jnp.min(tmp + row_t, axis=1)
+    rs2 = _lift_l2(dix, row_s, sfs, p2s)
+    rt2 = _lift_l2(dix, row_t, sft, p2t)
+    vb = ops.minplus_twoside(rs2, dix.d2, rt2, force=force)
+    return jnp.minimum(va, vb)
+
+
+def _combine_mid_h_w(dix: DeviceIndex, row_s, bs, row_t, bt, *,
+                     force=None):
+    """Witness variant of _combine_mid_h -> (mid, wx, wy): the winning
+    level-1 SUPER pair under the hierarchical overlay metric.  The
+    same-super-fragment leg carries its argmin like the dense CPU
+    schedule; the level-2 leg gets the winning boundary pair (c, d)
+    from the fused argmin kernel and resolves it back to level-1 ids
+    by re-finding, per side, the row entry whose lift achieved
+    rs2[c] / rt2[d] (an O(q * mb) masked argmin — exact because the
+    lift is a min of f32 sums re-comparable bit-for-bit).
+    """
+    sfs, p2s = dix.sf_of[bs], dix.pos_in_sf[bs]
+    sft, p2t = dix.sf_of[bt], dix.pos_in_sf[bt]
+    q, mb = row_s.shape
+    c = min(8, mb)
+
+    def body(i, carry):
+        acc, accb = carry
+        r_c = jax.lax.dynamic_slice_in_dim(row_s, i * c, c, axis=1)
+        sf_c = jax.lax.dynamic_slice_in_dim(sfs, i * c, c, axis=1)
+        p_c = jax.lax.dynamic_slice_in_dim(p2s, i * c, c, axis=1)
+        blk = dix.sf_closure[sf_c[:, :, None], p_c[:, :, None],
+                             p2t[:, None, :]]
+        same = sf_c[:, :, None] == sft[:, None, :]
+        cube = jnp.where(same, r_c[:, :, None] + blk, INF)
+        cand = jnp.min(cube, axis=1)
+        hit = cube == cand[:, None, :]
+        loc = jnp.min(jnp.where(
+            hit, jax.lax.broadcasted_iota(jnp.int32, cube.shape, 1),
+            jnp.int32(mb)), axis=1)
+        better = cand < acc
+        return (jnp.where(better, cand, acc),
+                jnp.where(better, i * c + loc, accb))
+
+    acc0 = jnp.full((q, mb), INF, row_s.dtype)
+    accb0 = jnp.full((q, mb), -1, jnp.int32)
+    acc, accb = jax.lax.fori_loop(0, mb // c, body, (acc0, accb0))
+    tmp = acc + row_t
+    va = jnp.min(tmp, axis=1)
+    hit = tmp == va[:, None]
+    pos_t = jnp.min(jnp.where(
+        hit, jnp.arange(mb, dtype=jnp.int32)[None, :], jnp.int32(mb)),
+        axis=1)
+    pos_t_c = jnp.clip(pos_t, 0, mb - 1)
+    pos_s = jnp.take_along_axis(accb, pos_t_c[:, None], axis=1)[:, 0]
+    xa = jnp.take_along_axis(
+        bs, jnp.clip(pos_s, 0, mb - 1)[:, None], axis=1)[:, 0]
+    ya = jnp.take_along_axis(bt, pos_t_c[:, None], axis=1)[:, 0]
+
+    rs2 = _lift_l2(dix, row_s, sfs, p2s)
+    rt2 = _lift_l2(dix, row_t, sft, p2t)
+    vb, wc, wd = ops.minplus_twoside_argmin(rs2, dix.d2, rt2,
+                                            force=force)
+    xb = _l2_src_of(dix, row_s, bs, sfs, p2s, wc)
+    yb = _l2_src_of(dix, row_t, bt, sft, p2t, wd)
+
+    use_a = va <= vb
+    mid = jnp.minimum(va, vb)
+    fin = jnp.isfinite(mid)
+    wx = jnp.where(fin, jnp.where(use_a, xa, xb), -1)
+    wy = jnp.where(fin, jnp.where(use_a, ya, yb), -1)
+    return mid, wx, wy
+
+
 def _combine_mid(dix: DeviceIndex, row_s, bs, row_t, bt, *, force=None):
     """combine = min_{b1,b2} row_s[b1] + D_super[bs[b1], bt[b2]]
     + row_t[b2] without a [q, mb, mb] intermediate.
 
+    Hierarchical indices (sf_of longer than the [1] dummy — a static
+    trace-time shape fact) route to _combine_mid_h.  Dense indices:
     TPU: scatter-min the boundary rows into SUPER coordinates (one
     O(q*mb) scatter each) and run the fused two-sided tropical kernel
     against the resident D_super.  CPU/ref: chunk the b1 axis so the
     gathered block never exceeds [q, 8, mb].
     """
+    if dix.sf_of.shape[0] > 1:
+        return _combine_mid_h(dix, row_s, bs, row_t, bt, force=force)
     if ops.use_pallas(force):
         s1 = dix.d_super.shape[0]
         q = row_s.shape[0]
@@ -880,7 +1258,10 @@ def _combine_mid_w(dix: DeviceIndex, row_s, bs, row_t, bt, *,
     """Witness variant of _combine_mid -> (mid, wx, wy) where (wx, wy)
     is the winning SUPER boundary pair in super ids (-1 when mid is
     +inf).  Same two layouts as the distance path: fused argmin kernel
-    against the scattered rows on TPU, b1-chunked gather on CPU."""
+    against the scattered rows on TPU, b1-chunked gather on CPU;
+    hierarchical indices route to _combine_mid_h_w."""
+    if dix.sf_of.shape[0] > 1:
+        return _combine_mid_h_w(dix, row_s, bs, row_t, bt, force=force)
     if ops.use_pallas(force):
         s1 = dix.d_super.shape[0]
         q = row_s.shape[0]
@@ -990,7 +1371,7 @@ def serve_cross_w(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
     row_t = dix.brow[ft, pt]
     mid, wx, wy = _combine_mid_w(dix, row_s, dix.bnd_super[fs], row_t,
                                  dix.bnd_super[ft], force=force)
-    s1 = dix.d_super.shape[0]
+    s1 = _overlay_size(dix)
     wit = wx * s1 + wy
     if with_local:
         local = jnp.where(fs == ft, dix.frag_apsp[fs, ps, pt], INF)
@@ -1034,6 +1415,25 @@ def serve_step_w(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
     return jnp.where(s == t, 0.0, out), wit
 
 
+def _overlay_row_h(dix: DeviceIndex, rs: jax.Array, *,
+                   force=None) -> jax.Array:
+    """Exact overlay distances from a scattered source row rs [S+1] to
+    EVERY overlay node, through the hierarchy: per-super-fragment
+    (min,+) against the resident closures for the within-sf leg, one
+    small vector (x) matrix product against D2 for the cross leg."""
+    members = dix.sf_members                     # [nsf+1, m2] (S = pad)
+    r = rs[members]                              # [nsf+1, m2]
+    within = jnp.min(r[:, :, None] + dix.sf_closure, axis=1)
+    lift = jnp.min(r[:, :, None] + dix.l2row, axis=1)   # [nsf+1, mb2]
+    s2p1 = dix.d2.shape[0]
+    rs2 = jnp.full((s2p1,), INF, rs.dtype).at[dix.bnd2_sid].min(lift)
+    z2 = ops.minplus(rs2[None, :], dix.d2, force=force)[0]  # [S2+1]
+    back = z2[dix.bnd2_sid]                      # [nsf+1, mb2]
+    via = jnp.min(dix.l2row + back[:, None, :], axis=2)
+    out = jnp.minimum(within, via)               # [nsf+1, m2]
+    return jnp.full(rs.shape, INF, rs.dtype).at[members].min(out)
+
+
 def serve_one_to_all(dix: DeviceIndex, s: int | jax.Array, *,
                      force=None) -> jax.Array:
     """Exact distances from one source to EVERY node: [n].
@@ -1051,10 +1451,14 @@ def serve_one_to_all(dix: DeviceIndex, s: int | jax.Array, *,
     ps = dix.pos_in_frag[us]
     row_s = dix.brow[fs, ps]                             # [mb]
     bs = dix.bnd_super[fs]                               # [mb]
-    s1 = dix.d_super.shape[0]
+    s1 = _overlay_size(dix)
     rs = jnp.full((s1,), INF, row_s.dtype).at[bs].min(row_s)
-    # u_s -> every super node (vector (x) matrix min-plus)
-    x = ops.minplus(rs[None, :], dix.d_super, force=force)[0]   # [S+1]
+    # u_s -> every super node (vector (x) matrix min-plus; the
+    # hierarchical overlay runs it per level)
+    if dix.sf_of.shape[0] > 1:
+        x = _overlay_row_h(dix, rs, force=force)                # [S+1]
+    else:
+        x = ops.minplus(rs[None, :], dix.d_super, force=force)[0]
     # per-target combine (sentinel slots hit the +inf row of d_super)
     tt = jnp.arange(n, dtype=jnp.int32)
     ut = dix.agent_of[tt]

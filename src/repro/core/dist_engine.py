@@ -28,7 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..kernels import ops
-from . import sssp
+from . import padding, sssp
 from .device_engine import (DeviceIndex, RefreshStats,
                             build_device_index_with_plan, refresh_index,
                             serve_cross, serve_cross_w, serve_same_dra,
@@ -40,16 +40,11 @@ from .supergraph import DislandIndex, build_index
 # ---------------------------------------------------------------------------
 # query planner
 # ---------------------------------------------------------------------------
-def _pad_pow2(n: int, floor: int = 16) -> int:
-    m = floor
-    while m < n:
-        m *= 2
-    return m
-
-
-#: public alias — the serving scheduler buckets its occupancy
-#: histogram with the same padding rule the planner compiles for
-pad_pow2 = _pad_pow2
+# canonical padding rules live in core/padding.py; the planner's
+# bucket rule and the serving scheduler's occupancy histogram share
+# this exact spelling (scheduler imports pad_pow2 from here)
+_pad_pow2 = padding.pad_pow2
+pad_pow2 = padding.pad_pow2
 
 
 class QueryPlanner:
@@ -238,11 +233,12 @@ class EpochedEngine:
 
     def __init__(self, g, *, c: int = 2, seed: int = 0, force=None,
                  ix: DislandIndex | None = None,
-                 warm_refresh: bool = True, paths: bool = False):
+                 warm_refresh: bool = True, paths: bool = False,
+                 hierarchy_levels: int | str = "auto"):
         self.g = g
         self.ix = ix if ix is not None else build_index(g, c=c, seed=seed)
-        self.dix, self.plan = build_device_index_with_plan(self.ix,
-                                                           force=force)
+        self.dix, self.plan = build_device_index_with_plan(
+            self.ix, force=force, hierarchy_levels=hierarchy_levels)
         self.planner = QueryPlanner(self.dix, force=force, paths=paths)
         self.epoch = 0
         # one-tuple publish (epoch, dix, graph): snapshot() readers get

@@ -1,0 +1,488 @@
+"""Two-level SUPER overlay hierarchy (DESIGN.md §12).
+
+The dense overlay closure (`device_engine.super_stage`) is O(S^2)
+memory and O(S^3) work in the boundary count S — fine at road4000
+(S ~ 600), a wall at road64k (S ~ 7000+).  Hierarchical Cut Labelling
+(arXiv:2311.11063) and Pruned Landmark Labeling (arXiv:1304.4661) both
+reach large road networks the same way: keep every per-level closure
+small.  This module applies that recursively to our own overlay:
+
+  1. group the level-1 *fragments* into super-fragments (greedy BFS
+     over the fragment quotient graph, budgeted by overlay-node count
+     — topology only, so the grouping is weight-invariant and survives
+     every refresh, exactly like the level-1 partition);
+  2. close each super-fragment's induced overlay subgraph with the
+     existing batched witness FW kernel (`ops.fw_batch_next`) at one
+     pow2-padded tile shape [nsf, m2, m2];
+  3. close only the level-2 boundary set (overlay nodes incident to a
+     super-fragment-crossing slot) densely: a level-2 overlay graph of
+     cross slots + per-super-fragment boundary cliques whose weights
+     are *gathered from the super-fragment closures* — the same
+     derived-weight discipline as the level-1 Upsilon weights
+     (`device_engine.super_weights`), so scratch build and incremental
+     refresh obtain every level-2 weight by the same gather.
+
+Exactness mirrors the level-1 argument one level up: any overlay path
+between x and y either stays inside x's super-fragment (covered by its
+closure) or crosses the level-2 boundary, where it decomposes into
+within-super-fragment segments (>= the clique weights) and cross slots
+(= the cross edges); the dense level-2 closure is therefore the exact
+overlay metric on the boundary set, and
+
+  OD(x, y) = min( sf_closure[sf, x, y]           if sf(x) == sf(y),
+                  min_{a, b} l2row[x, a] + D2[a, b] + l2row[y, b] ).
+
+Memory drops from (S+1)^2 to nsf*m2^2 + nsf*m2*mb2 + (S2+1)^2 —
+sub-quadratic in S for the sqrt-ish budget chosen below (measured and
+recorded by benchmarks exp10).
+
+Everything here is host-side numpy structure plus thin device stages;
+`device_engine` owns the DeviceIndex fields, the serve-path combine,
+and the refresh orchestration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import padding
+
+INF = np.float32(np.inf)
+
+#: S above which build_device_index's ``hierarchy_levels="auto"``
+#: switches from the dense closure to the two-level hierarchy.  Road
+#: graphs near the threshold are fine either way; road4000 (S ~ 600)
+#: stays dense (bit-identical to the pre-hierarchy index), road64k
+#: (S ~ 7000) must not be closed densely.
+AUTO_THRESHOLD = 1024
+
+
+@dataclasses.dataclass
+class HierPlan:
+    """Host-side level-2 structure, carried on BuildPlan as ``.hier``.
+
+    Like the rest of the plan, everything except the weight caches
+    (``sf_adj``, ``l2_w``) is weight-invariant structure; a refresh
+    mutates only those caches and regathers everything else.
+    """
+
+    nsf: int                 # super-fragment count
+    m2: int                  # pow2-padded max overlay nodes per sf
+    mb2: int                 # padded max level-2 boundary slots per sf
+    S2: int                  # level-2 boundary node count
+    sf_of_frag: np.ndarray   # int32 [k] fragment -> super-fragment
+    sf_of: np.ndarray        # int32 [S] overlay node -> super-fragment
+    pos_in_sf: np.ndarray    # int32 [S] position inside its sf
+    sf_members: np.ndarray   # int64 [nsf, m2] sf slot -> overlay id (-1)
+    # intra-sf slot addressing (level-1 overlay slots)
+    slot_sf: np.ndarray      # int32 [Es] owning sf (-1: crosses sfs)
+    slot_p2u: np.ndarray     # int32 [Es] sf-local endpoints (-1: cross)
+    slot_p2v: np.ndarray
+    sf_adj: np.ndarray       # f32 [nsf, m2, m2] weight cache
+    # level-2 boundary registry
+    bnd2_ids: np.ndarray     # int64 [S2] overlay ids, sorted
+    sid2_of: np.ndarray      # int64 [S] overlay id -> level-2 id (-1)
+    bnd2_pos: np.ndarray     # int32 [nsf, mb2] sf-local positions
+    bnd2_valid: np.ndarray   # bool [nsf, mb2]
+    bnd2_sid: np.ndarray     # int32 [nsf, mb2] level-2 id (S2 sentinel)
+    # level-2 slots (fixed structure, derived weights)
+    l2_src: np.ndarray       # int32 [E2] level-2 ids
+    l2_dst: np.ndarray
+    l2_w: np.ndarray         # f32 [E2] weight cache
+    l2_sf: np.ndarray        # int32 [E2] owning sf for cliques (-1: cross)
+    l2_pu: np.ndarray        # int32 [E2] sf-local gather coords (cliques)
+    l2_pv: np.ndarray
+    l2_ov_slot: np.ndarray   # int64 [E2] level-1 slot id (cross; -1 else)
+
+    def overlay_bytes(self) -> int:
+        """Device bytes of the hierarchical overlay tables (closure +
+        witness + rows + level-2 closure), the quantity exp10 reports
+        against the dense (S+1)^2 baseline."""
+        nsf1 = self.nsf + 1
+        return (2 * nsf1 * self.m2 * self.m2 * 4      # sf_closure + next
+                + nsf1 * self.m2 * self.mb2 * 4       # l2row
+                + 2 * (self.S2 + 1) ** 2 * 4)         # d2 + d2_next
+
+
+# ---------------------------------------------------------------------------
+# structure assembly (weight-invariant)
+# ---------------------------------------------------------------------------
+def _frag_of_sid(plan) -> np.ndarray:
+    """Home fragment of every overlay node (each boundary node belongs
+    to exactly one fragment of the level-1 partition)."""
+    out = -np.ones(plan.S, dtype=np.int64)
+    fi_idx, b_idx = np.nonzero(plan.bvalid)
+    out[plan.bnd_super[fi_idx, b_idx]] = fi_idx
+    return out
+
+
+def _group_fragments(plan, frag_of_sid: np.ndarray,
+                     gamma2: int) -> np.ndarray:
+    """Group fragments into super-fragments: greedy BFS seeding over
+    the fragment quotient graph, budgeted by total overlay-node
+    (boundary) count <= gamma2 per group, then FM-style refinement
+    that moves fragments toward the neighbouring group holding most of
+    their E_B adjacency.
+
+    The refinement objective IS the quantity that makes the hierarchy
+    pay: every E_B slot whose endpoints land in different groups makes
+    both endpoints level-2 boundary nodes, and the level-2 closure is
+    dense O(S2^2)/O(S2^3) — so minimizing cross-group slots minimizes
+    S2 directly (a road graph's boundary set shrinks like the group
+    perimeter, ~1/sqrt(fragments per group)).
+
+    Deterministic and purely topological (quotient edges = which
+    fragments share a cross E_B slot, weights = how many): a weight
+    update can never move a fragment between super-fragments, which is
+    what keeps the level-2 structure refresh-stable — the same
+    invariance the level-1 partition provides one level down.
+    """
+    k = plan.k
+    bcount = plan.bvalid.sum(axis=1).astype(np.int64)
+    # fragment quotient multigraph from cross-fragment (E_B) slots:
+    # nbrs[f][g] = number of E_B slots between fragments f and g
+    cross = plan.sup_fi < 0
+    fu = frag_of_sid[plan.sup_src[cross]]
+    fv = frag_of_sid[plan.sup_dst[cross]]
+    nbrs: List[dict] = [{} for _ in range(k)]
+    for a, b in zip(fu, fv):
+        a, b = int(a), int(b)
+        nbrs[a][b] = nbrs[a].get(b, 0) + 1
+        nbrs[b][a] = nbrs[b].get(a, 0) + 1
+    labels = -np.ones(k, dtype=np.int64)
+    sf = 0
+    for seed in range(k):
+        if labels[seed] >= 0:
+            continue
+        size = 0
+        queue = [seed]
+        qi = 0
+        while qi < len(queue):
+            f = queue[qi]
+            qi += 1
+            if labels[f] >= 0:
+                continue
+            if size and size + bcount[f] > gamma2:
+                continue
+            labels[f] = sf
+            size += int(bcount[f])
+            # grow toward the heaviest-adjacency neighbours first:
+            # compactness now is less rework for the refiner below
+            queue.extend(sorted((x for x in nbrs[f] if labels[x] < 0),
+                                key=lambda x: (-nbrs[f][x], x)))
+        sf += 1
+    # FM-style refinement: move a fragment to the neighbouring group
+    # with the best cross-slot gain, under the budget
+    sizes = np.zeros(sf, dtype=np.int64)
+    np.add.at(sizes, labels, bcount)
+    for _ in range(8):
+        moved = 0
+        for f in range(k):
+            lf = int(labels[f])
+            gains: dict = {}
+            for g, w in nbrs[f].items():
+                gains[int(labels[g])] = gains.get(int(labels[g]), 0) + w
+            internal = gains.get(lf, 0)
+            best_l, best_gain = lf, 0
+            for lg in sorted(gains):
+                if lg == lf or sizes[lg] + bcount[f] > gamma2:
+                    continue
+                gain = gains[lg] - internal
+                if gain > best_gain:
+                    best_l, best_gain = lg, gain
+            if best_l != lf:
+                sizes[lf] -= bcount[f]
+                sizes[best_l] += bcount[f]
+                labels[f] = best_l
+                moved += 1
+        if moved == 0:
+            break
+    # compact away groups the refiner emptied
+    uniq, inv = np.unique(labels, return_inverse=True)
+    return inv.astype(np.int64)
+
+
+def plan_hierarchy(plan, *, gamma2: Optional[int] = None) -> HierPlan:
+    """Assemble the level-2 structure for ``plan`` (no device work).
+
+    ``gamma2`` bounds overlay nodes per super-fragment.  The default
+    balances the two per-level closures: the level-2 boundary shrinks
+    like the group perimeter (S2 ~ S/sqrt(f) for f fragments per
+    group), so groups must be LARGE enough that the dense S2 closure
+    stays small, while the batched per-group FW (nsf * m2^3) stays
+    tractable — ~S^(2/3) is where those costs meet.  The budget is
+    then snapped to ~94% of the pow2 tile size it implies, so the
+    padded [nsf, m2, m2] batch runs nearly full instead of wasting up
+    to half its closure memory on padding.
+    """
+    S = plan.S
+    if gamma2 is None:
+        m2_target = padding.pow2(
+            max(48, int(round(2.0 * max(S, 1) ** (2.0 / 3.0)))), floor=8)
+        gamma2 = max(48, int(0.94 * m2_target))
+    frag_sid = _frag_of_sid(plan)
+    sf_of_frag = _group_fragments(plan, frag_sid, gamma2)
+    nsf = int(sf_of_frag.max()) + 1 if sf_of_frag.size else 0
+    sf_of = sf_of_frag[frag_sid].astype(np.int32)
+
+    # members (overlay-id order within each sf) + positions
+    pos_in_sf = np.zeros(S, dtype=np.int32)
+    sf_sizes = np.bincount(sf_of, minlength=nsf)
+    m2 = padding.pow2(int(sf_sizes.max()) if nsf else 1, floor=8)
+    sf_members = np.full((nsf, m2), -1, dtype=np.int64)
+    for s in range(nsf):
+        ids = np.nonzero(sf_of == s)[0]
+        sf_members[s, :ids.size] = ids
+        pos_in_sf[ids] = np.arange(ids.size, dtype=np.int32)
+
+    # slot addressing: intra-sf slots scatter into sf_adj, the rest
+    # cross super-fragments and become level-2 edges
+    su, sv = plan.sup_src, plan.sup_dst
+    sfu, sfv = sf_of[su], sf_of[sv]
+    intra = sfu == sfv
+    slot_sf = np.where(intra, sfu, -1).astype(np.int32)
+    slot_p2u = np.where(intra, pos_in_sf[su], -1).astype(np.int32)
+    slot_p2v = np.where(intra, pos_in_sf[sv], -1).astype(np.int32)
+    sf_adj = np.full((nsf, m2, m2), INF, dtype=np.float32)
+
+    # level-2 boundary: overlay nodes incident to a cross-sf slot
+    is_b2 = np.zeros(S, dtype=bool)
+    is_b2[su[~intra]] = True
+    is_b2[sv[~intra]] = True
+    bnd2_ids = np.nonzero(is_b2)[0].astype(np.int64)
+    S2 = bnd2_ids.size
+    sid2_of = -np.ones(S, dtype=np.int64)
+    sid2_of[bnd2_ids] = np.arange(S2)
+    b2_per_sf = [bnd2_ids[sf_of[bnd2_ids] == s] for s in range(nsf)]
+    mb2 = padding.pad_to(max((b.size for b in b2_per_sf), default=1))
+    bnd2_pos = np.zeros((nsf, mb2), dtype=np.int32)
+    bnd2_valid = np.zeros((nsf, mb2), dtype=bool)
+    bnd2_sid = np.full((nsf, mb2), S2, dtype=np.int32)
+    for s, ids in enumerate(b2_per_sf):
+        nb = ids.size
+        bnd2_pos[s, :nb] = pos_in_sf[ids]
+        bnd2_valid[s, :nb] = True
+        bnd2_sid[s, :nb] = sid2_of[ids]
+
+    # level-2 slot list: cross slots keep their level-1 provenance,
+    # per-sf boundary cliques get derived weights (hier_weights)
+    l2_src = [sid2_of[su[~intra]].astype(np.int32)]
+    l2_dst = [sid2_of[sv[~intra]].astype(np.int32)]
+    n_cross = int((~intra).sum())
+    l2_sf = [np.full(n_cross, -1, np.int32)]
+    l2_pu = [np.full(n_cross, -1, np.int32)]
+    l2_pv = [np.full(n_cross, -1, np.int32)]
+    l2_ov = [np.nonzero(~intra)[0].astype(np.int64)]
+    for s, ids in enumerate(b2_per_sf):
+        if ids.size < 2:
+            continue
+        ii, jj = np.triu_indices(ids.size, k=1)
+        l2_src.append(sid2_of[ids[ii]].astype(np.int32))
+        l2_dst.append(sid2_of[ids[jj]].astype(np.int32))
+        l2_sf.append(np.full(ii.size, s, np.int32))
+        l2_pu.append(pos_in_sf[ids[ii]].astype(np.int32))
+        l2_pv.append(pos_in_sf[ids[jj]].astype(np.int32))
+        l2_ov.append(np.full(ii.size, -1, np.int64))
+
+    def cat(parts, dtype):
+        return (np.concatenate(parts).astype(dtype) if parts
+                else np.empty(0, dtype))
+
+    l2_src = cat(l2_src, np.int32)
+    return HierPlan(
+        nsf=nsf, m2=m2, mb2=mb2, S2=S2,
+        sf_of_frag=sf_of_frag.astype(np.int32), sf_of=sf_of,
+        pos_in_sf=pos_in_sf, sf_members=sf_members,
+        slot_sf=slot_sf, slot_p2u=slot_p2u, slot_p2v=slot_p2v,
+        sf_adj=sf_adj,
+        bnd2_ids=bnd2_ids, sid2_of=sid2_of, bnd2_pos=bnd2_pos,
+        bnd2_valid=bnd2_valid, bnd2_sid=bnd2_sid,
+        l2_src=l2_src, l2_dst=cat(l2_dst, np.int32),
+        l2_w=np.full(l2_src.size, INF, np.float32),
+        l2_sf=cat(l2_sf, np.int32),
+        l2_pu=cat(l2_pu, np.int32), l2_pv=cat(l2_pv, np.int32),
+        l2_ov_slot=cat(l2_ov, np.int64),
+    )
+
+
+# ---------------------------------------------------------------------------
+# weight caches (derived; the refresh path re-runs these on dirt)
+# ---------------------------------------------------------------------------
+def sf_adj_fill(hier: HierPlan, plan, sfs: Optional[np.ndarray] = None
+                ) -> None:
+    """(Re)build the intra-super-fragment adjacency blocks from the
+    current level-1 slot weights (``plan.sup_w``), min-merging parallel
+    slots.  ``sfs=None``: every block; otherwise only the listed ones
+    (their blocks are reset first, so a slot that stopped being the
+    min is forgotten)."""
+    intra = hier.slot_sf >= 0
+    if sfs is None:
+        hier.sf_adj[:] = INF
+        sel = intra
+    else:
+        hier.sf_adj[sfs] = INF
+        sel = intra & np.isin(hier.slot_sf, sfs)
+    s = hier.slot_sf[sel]
+    pu = hier.slot_p2u[sel]
+    pv = hier.slot_p2v[sel]
+    w = plan.sup_w[sel].astype(np.float32)
+    np.minimum.at(hier.sf_adj, (s, pu, pv), w)
+    np.minimum.at(hier.sf_adj, (s, pv, pu), w)
+
+
+def hier_weights(hier: HierPlan, plan, blocks: np.ndarray,
+                 sfs: Optional[np.ndarray] = None) -> None:
+    """Fill the level-2 slot weights: clique slots gather from the
+    super-fragment closure ``blocks`` (never stored authoritatively —
+    the same derived-state rule as ``device_engine.super_weights``),
+    cross slots copy their level-1 slot's current weight.
+
+    ``sfs=None``: blocks is the full [nsf, m2, m2] closure, every slot
+    is rewritten.  Otherwise blocks holds only the listed sfs' rows and
+    only their clique slots are rewritten (cross slots are always
+    rewritten — they are O(cross) cheap and depend only on sup_w).
+    """
+    if sfs is None:
+        mask = hier.l2_sf >= 0
+        local = hier.l2_sf[mask]
+    else:
+        mask = np.isin(hier.l2_sf, sfs)
+        sf_to_row = -np.ones(hier.nsf, dtype=np.int64)
+        sf_to_row[sfs] = np.arange(len(sfs))
+        local = sf_to_row[hier.l2_sf[mask]]
+    hier.l2_w[mask] = blocks[local, hier.l2_pu[mask], hier.l2_pv[mask]]
+    cross = hier.l2_ov_slot >= 0
+    hier.l2_w[cross] = plan.sup_w[hier.l2_ov_slot[cross]]
+
+
+# ---------------------------------------------------------------------------
+# device stages (mirror frag_stage / super_stage)
+# ---------------------------------------------------------------------------
+def _pad_sentinel(dist: jax.Array, nxt: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Append the all-INF / all--1 sentinel block (index nsf) so padded
+    gathers through ``sf_of`` need no masking."""
+    d_s = jnp.full((1,) + dist.shape[1:], INF, dist.dtype)
+    n_s = jnp.full((1,) + nxt.shape[1:], -1, nxt.dtype)
+    return (jnp.concatenate([dist, d_s]), jnp.concatenate([nxt, n_s]))
+
+
+def l2row_from(closure: jax.Array, bnd2_pos: np.ndarray,
+               bnd2_valid: np.ndarray) -> jax.Array:
+    """Per-member level-2 boundary rows, the hierarchy analog of the
+    fragment ``brow`` table: l2row[sf, p, b] = closure distance from
+    the member at position p to the sf's b-th level-2 boundary slot."""
+    rows = jnp.take_along_axis(closure,
+                               jnp.asarray(bnd2_pos)[:, None, :], axis=2)
+    return jnp.where(jnp.asarray(bnd2_valid)[:, None, :], rows, INF)
+
+
+def sf_stage(hier: HierPlan, *, force=None) -> tuple[jax.Array,
+                                                     jax.Array,
+                                                     jax.Array]:
+    """Stage 2a: batched witness FW over every super-fragment's induced
+    overlay subgraph at the one pow2 tile shape [nsf, m2, m2] ->
+    (sf_closure, sf_next, l2row), sentinel block appended."""
+    closure, nxt = ops.fw_batch_next(jnp.asarray(hier.sf_adj),
+                                     force=force)
+    rows = l2row_from(closure, hier.bnd2_pos, hier.bnd2_valid)
+    closure, nxt = _pad_sentinel(closure, nxt)
+    r_s = jnp.full((1,) + rows.shape[1:], INF, rows.dtype)
+    return closure, nxt, jnp.concatenate([rows, r_s])
+
+
+def l2_overlay(hier: HierPlan) -> jax.Array:
+    """Dense [S2, S2] level-2 adjacency from the slot list (parallel
+    slots min-merged, diag 0) — the level-2 twin of super_overlay."""
+    S2 = hier.S2
+    m = np.full((S2, S2), INF, np.float32)
+    np.minimum.at(m, (hier.l2_src, hier.l2_dst), hier.l2_w)
+    np.minimum.at(m, (hier.l2_dst, hier.l2_src), hier.l2_w)
+    np.fill_diagonal(m, 0.0)
+    return jnp.asarray(m)
+
+
+def l2_stage(hier: HierPlan, *, force=None) -> tuple[jax.Array,
+                                                     jax.Array]:
+    """Stage 2b: dense witness FW closure of the level-2 boundary set
+    -> (d2, d2_next) with the +inf sentinel row/col appended."""
+    S2 = hier.S2
+    d2 = jnp.full((S2 + 1, S2 + 1), INF, jnp.float32)
+    d2_next = jnp.full((S2 + 1, S2 + 1), -1, jnp.int32)
+    if S2 == 0 or hier.l2_src.size == 0:
+        return d2, d2_next
+    d_s, n_s = ops.fw_next(l2_overlay(hier), force=force)
+    return (d2.at[:S2, :S2].set(d_s), d2_next.at[:S2, :S2].set(n_s))
+
+
+# ---------------------------------------------------------------------------
+# slot provenance for path unwinding (per-epoch host sidecars)
+# ---------------------------------------------------------------------------
+class SlotMap:
+    """Sparse winning-slot lookup for an overlay slot list.
+
+    A dense [n, n] slot table is exactly the quadratic host object the
+    hierarchy exists to avoid, so hierarchical epochs carry this
+    sorted-key map instead: O(slots) memory, O(log slots) lookup.
+    Parallel slots resolve to the lightest (the same rule as the
+    overlay adjacency min-merge and the dense ``overlay_slot_table``).
+    """
+
+    def __init__(self, src: np.ndarray, dst: np.ndarray,
+                 w: np.ndarray, stride: int):
+        a = np.concatenate([src, dst]).astype(np.int64)
+        b = np.concatenate([dst, src]).astype(np.int64)
+        ww = np.concatenate([w, w])
+        slot = np.concatenate(
+            [np.arange(src.size, dtype=np.int64)] * 2)
+        key = a * stride + b
+        order = np.lexsort((ww, key))
+        key, slot = key[order], slot[order]
+        first = np.ones(key.size, dtype=bool)
+        first[1:] = key[1:] != key[:-1]
+        self.stride = stride
+        self.keys = key[first]
+        self.slots = slot[first]
+
+    def lookup(self, a: int, b: int) -> int:
+        """Winning slot id for the adjacency (a, b), -1 if the pair is
+        not adjacent."""
+        key = a * self.stride + b
+        i = int(np.searchsorted(self.keys, key))
+        if i < self.keys.size and self.keys[i] == key:
+            return int(self.slots[i])
+        return -1
+
+
+def ov_slot_map(plan) -> SlotMap:
+    """Level-1 slot provenance (the sparse overlay_slot_table)."""
+    return SlotMap(plan.sup_src, plan.sup_dst, plan.sup_w, plan.S + 1)
+
+
+def l2_slot_map(hier: HierPlan) -> SlotMap:
+    """Level-2 slot provenance (cross + clique slots, min-merged)."""
+    return SlotMap(hier.l2_src, hier.l2_dst, hier.l2_w, hier.S2 + 1)
+
+
+#: historical alias — hierarchical epochs' host_ov_slot sidecars are
+#: SlotMap instances (the unwinder dispatches on this type)
+OvSlotMap = SlotMap
+
+
+def hier_overlay_stats(hier: HierPlan, S: int) -> dict:
+    """Shape/memory summary for perf records and the serve driver."""
+    dense = 2 * (S + 1) * (S + 1) * 4            # d_super + super_next
+    return {
+        "hierarchy_levels": 2,
+        "S": S,
+        "nsf": hier.nsf,
+        "m2": hier.m2,
+        "S2": hier.S2,
+        "overlay_bytes": hier.overlay_bytes(),
+        "overlay_dense_bytes": dense,
+    }

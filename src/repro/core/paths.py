@@ -35,8 +35,10 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from . import hierarchy
 from .device_engine import (WIT_LOCAL, WIT_NONE, WIT_PIECE, BuildPlan,
-                            DeviceIndex, overlay_slot_table)
+                            DeviceIndex, _overlay_size,
+                            overlay_slot_table)
 
 
 class PathUnwinder:
@@ -49,11 +51,20 @@ class PathUnwinder:
     travels WITH the index epoch (``dix.host_ov_slot``, written by the
     build/refresh stages); the plan-derived fallback below is for
     standalone indices that never saw a refresh.
+
+    Hierarchical epochs (DESIGN.md §12) have no dense ``super_next``;
+    the overlay walk x -> y is instead *derived* here from the
+    per-level snapshots (super-fragment closures + the level-2
+    closure): the winning route is recomputed host-side over the small
+    per-pair candidate sets — O(mb2^2) numpy, exact because every
+    table entry is the same f32 the device served — and then expanded
+    level by level until every hop is overlay-adjacent, at which point
+    the ordinary slot expansion below takes over.
     """
 
     def __init__(self, dix: DeviceIndex, plan: BuildPlan):
         self.plan = plan
-        self.s1 = int(dix.d_super.shape[0])          # S + 1
+        self.s1 = _overlay_size(dix)                 # S + 1
         # device tables, snapshotted to host numpy
         self.agent_of = np.asarray(dix.agent_of)
         self.piece_gid = np.asarray(dix.piece_gid)
@@ -61,6 +72,16 @@ class PathUnwinder:
         self.frag_next = np.asarray(dix.frag_next)
         self.piece_next = np.asarray(dix.piece_next)
         self.super_next = np.asarray(dix.super_next)
+        self.hier = plan.hier if dix.sf_of.shape[0] > 1 else None
+        if self.hier is not None:
+            self.sf_closure = np.asarray(dix.sf_closure)
+            self.sf_next = np.asarray(dix.sf_next)
+            self.l2row_t = np.asarray(dix.l2row)
+            self.d2 = np.asarray(dix.d2)
+            self.d2_next = np.asarray(dix.d2_next)
+            l2s = getattr(dix, "host_l2_slot", None)
+            self.l2_slot = (l2s if l2s is not None
+                            else hierarchy.l2_slot_map(self.hier))
         # position -> original id, per fragment (inverse of the plan's
         # frag_of/pos_in_frag lookups)
         k, maxf = plan.k, plan.maxf
@@ -79,9 +100,22 @@ class PathUnwinder:
             self.super_frag >= 0,
             self.frag_nodes[self.super_frag, self.super_pos], -1)
         # winning slot per overlay adjacency pair, paired with this
-        # dix's d_super/super_next epoch (see class docstring)
+        # dix's overlay-closure epoch (see class docstring); dense
+        # epochs carry the [S, S] table, hierarchical epochs the
+        # sparse OvSlotMap (sub-quadratic host memory)
         ov = getattr(dix, "host_ov_slot", None)
-        self.ov_slot = ov if ov is not None else overlay_slot_table(plan)
+        if ov is None:
+            ov = (hierarchy.ov_slot_map(plan) if self.hier is not None
+                  else overlay_slot_table(plan))
+        self.ov_slot = ov
+
+    def _slot_of(self, a: int, b: int) -> int:
+        """Winning level-1 slot for overlay adjacency (a, b), -1 if
+        none — dense-table or sparse-map lookup, whichever this epoch
+        carries."""
+        if isinstance(self.ov_slot, hierarchy.SlotMap):
+            return self.ov_slot.lookup(a, b)
+        return int(self.ov_slot[a, b])
 
     # ---- table walks ---------------------------------------------------
     def _frag_walk(self, fi: int, pa: int, pb: int) -> List[int]:
@@ -126,7 +160,11 @@ class PathUnwinder:
                                 int(self.plan.piece_agent_pos[gid]))
 
     def _super_walk(self, x: int, y: int) -> List[int]:
-        """Overlay-adjacent super-id sequence x -> y from super_next."""
+        """Overlay-adjacent super-id sequence x -> y: a super_next
+        chase on dense epochs, the derived hierarchical route on
+        two-level epochs."""
+        if self.hier is not None:
+            return self._overlay_route(x, y)
         seq = [x]
         u = x
         while u != y:
@@ -137,12 +175,96 @@ class PathUnwinder:
             seq.append(u)
         return seq
 
+    # ---- hierarchical overlay walks (DESIGN.md §12) --------------------
+    def _sf_walk(self, sf: int, pa: int, pb: int) -> List[int]:
+        """Super-id sequence of the within-super-fragment overlay
+        shortest path from sf-local position pa to pb (inclusive ends);
+        every hop is overlay-adjacent by the successor-matrix
+        invariant, one level up from _frag_walk."""
+        h = self.hier
+        nxt = self.sf_next[sf]
+        seq = [pa]
+        u = pa
+        while u != pb:
+            u = int(nxt[u, pb])
+            if u < 0 or len(seq) > nxt.shape[0]:
+                raise RuntimeError(
+                    f"inconsistent sf_next walk (sf {sf}, {pa}->{pb})")
+            seq.append(u)
+        return [int(h.sf_members[sf, p]) for p in seq]
+
+    def _l2_walk(self, c: int, d: int) -> List[int]:
+        """Level-2-adjacent id sequence c -> d from d2_next."""
+        seq = [c]
+        u = c
+        while u != d:
+            u = int(self.d2_next[u, d])
+            if u < 0 or len(seq) > self.d2_next.shape[0]:
+                raise RuntimeError(
+                    f"inconsistent d2_next walk ({c}->{d})")
+            seq.append(u)
+        return seq
+
+    def _expand_l2_hop(self, a2: int, b2: int) -> List[int]:
+        """One level-2 adjacency hop -> overlay-adjacent super ids
+        AFTER a2's node (cross slot: its level-1 slot's far endpoint;
+        clique slot: the within-super-fragment walk)."""
+        h = self.hier
+        slot = self.l2_slot.lookup(a2, b2)
+        if slot < 0:
+            raise RuntimeError(f"no level-2 slot for hop {a2}->{b2}")
+        ov = int(h.l2_ov_slot[slot])
+        if ov >= 0:                      # cross slot: one overlay hop
+            su = int(self.plan.sup_src[ov])
+            sv = int(self.plan.sup_dst[ov])
+            return [sv] if int(h.sid2_of[su]) == a2 else [su]
+        sf = int(h.l2_sf[slot])
+        if int(h.l2_src[slot]) == a2:
+            pa, pb = int(h.l2_pu[slot]), int(h.l2_pv[slot])
+        else:
+            pa, pb = int(h.l2_pv[slot]), int(h.l2_pu[slot])
+        return self._sf_walk(sf, pa, pb)[1:]
+
+    def _overlay_route(self, x: int, y: int) -> List[int]:
+        """Overlay-adjacent super-id sequence x -> y through the
+        hierarchy: re-derive the winning route (same-super-fragment
+        closure vs level-1 rows + level-2 closure) from the epoch
+        snapshots, then expand the level-2 leg hop by hop."""
+        h = self.hier
+        sfx, sfy = int(h.sf_of[x]), int(h.sf_of[y])
+        px, py = int(h.pos_in_sf[x]), int(h.pos_in_sf[y])
+        va = (self.sf_closure[sfx, px, py] if sfx == sfy
+              else np.float32(np.inf))
+        vx = np.nonzero(h.bnd2_valid[sfx])[0]
+        vy = np.nonzero(h.bnd2_valid[sfy])[0]
+        vb = np.float32(np.inf)
+        if vx.size and vy.size:
+            a_row = self.l2row_t[sfx, px, vx]
+            b_row = self.l2row_t[sfy, py, vy]
+            d_blk = self.d2[np.ix_(h.bnd2_sid[sfx, vx],
+                                   h.bnd2_sid[sfy, vy])]
+            tot = a_row[:, None] + d_blk + b_row[None, :]
+            ai, bi = np.unravel_index(int(np.argmin(tot)), tot.shape)
+            vb = tot[ai, bi]
+        if not (np.isfinite(va) or np.isfinite(vb)):
+            raise RuntimeError(f"unreachable overlay route {x}->{y}")
+        if va <= vb:
+            return self._sf_walk(sfx, px, py)
+        a_slot, b_slot = int(vx[ai]), int(vy[bi])
+        seq = self._sf_walk(sfx, px, int(h.bnd2_pos[sfx, a_slot]))
+        l2seq = self._l2_walk(int(h.bnd2_sid[sfx, a_slot]),
+                              int(h.bnd2_sid[sfy, b_slot]))
+        for u2, v2 in zip(l2seq, l2seq[1:]):
+            seq += self._expand_l2_hop(u2, v2)
+        seq += self._sf_walk(sfy, int(h.bnd2_pos[sfy, b_slot]), py)[1:]
+        return seq
+
     def _expand_super_hop(self, a: int, b: int) -> List[int]:
         """One overlay adjacency hop -> original node ids AFTER a's
         node (E_B slot: the neighbour; clique slot: the intra-fragment
         path)."""
         plan = self.plan
-        slot = int(self.ov_slot[a, b])
+        slot = self._slot_of(a, b)
         if slot < 0:
             raise RuntimeError(f"no overlay slot for super hop {a}->{b}")
         fi = int(plan.sup_fi[slot])

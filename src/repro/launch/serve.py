@@ -51,12 +51,34 @@ from .mesh import make_host_mesh
 
 REFRESHED_FIELDS = ("frag_apsp", "frag_next", "brow", "d_super",
                     "super_next", "piece_flat", "piece_next",
-                    "dist_to_agent")
+                    "dist_to_agent",
+                    # hierarchical overlay tables (1-sized dummies at
+                    # hierarchy_levels=1, so the parity check is free)
+                    "sf_closure", "sf_next", "l2row", "d2", "d2_next")
 
 
 # ---------------------------------------------------------------------------
 # shared helpers (engine setup / validation / record emission)
 # ---------------------------------------------------------------------------
+def _label(args) -> str:
+    """Graph label for perf records; tolerant of hand-built arg
+    namespaces (tests drive the loops without the CLI preamble)."""
+    return getattr(args, "graph_label", None) or f"road{args.nodes}"
+
+
+def _overlay_record(engine: EpochedEngine) -> dict:
+    """Overlay-closure shape + memory fields for perf records: the
+    measurement behind the exp10 sub-quadratic claim (DESIGN.md §12)."""
+    plan = engine.plan
+    if plan.hierarchy_levels == 2:
+        from ..core.hierarchy import hier_overlay_stats
+
+        return hier_overlay_stats(plan.hier, plan.S)
+    dense = 2 * (plan.S + 1) * (plan.S + 1) * 4
+    return {"hierarchy_levels": 1, "S": plan.S,
+            "overlay_bytes": dense, "overlay_dense_bytes": dense}
+
+
 def _build_engine(args) -> tuple[EpochedEngine, float]:
     """Graph + host index + EpochedEngine with timing prints — the one
     setup path shared by the planner serving loops (offline batches,
@@ -68,11 +90,28 @@ def _build_engine(args) -> tuple[EpochedEngine, float]:
     ix = build_index(g)
     print(f"index: {ix.timings} ({time.perf_counter() - t0:.1f}s)")
     t0 = time.perf_counter()
-    engine = EpochedEngine(g, ix=ix, paths=args.paths)
+    # refresh-path warmup compiles the delta-FW programs — minutes of
+    # wasted work at road64k scale when the run applies no updates
+    warm = bool(args.update_batches
+                or (args.live and args.live_update_batches))
+    engine = EpochedEngine(g, ix=ix, paths=args.paths,
+                           hierarchy_levels=args.hierarchy_levels,
+                           warm_refresh=warm)
     build_s = time.perf_counter() - t0
     dix = engine.dix
+    ov = _overlay_record(engine)
     print(f"device index: frag_apsp={dix.frag_apsp.shape} "
           f"d_super={dix.d_super.shape} ({build_s:.1f}s)")
+    if ov["hierarchy_levels"] == 2:
+        print(f"overlay hierarchy: nsf={ov['nsf']} m2={ov['m2']} "
+              f"S2={ov['S2']} of S={ov['S']}; "
+              f"{ov['overlay_bytes'] / 1e6:.1f}MB vs dense "
+              f"{ov['overlay_dense_bytes'] / 1e6:.1f}MB")
+    if args.expect_hierarchy and \
+            ov["hierarchy_levels"] != args.expect_hierarchy:
+        raise SystemExit(
+            f"expected hierarchy_levels={args.expect_hierarchy}, "
+            f"built {ov['hierarchy_levels']} (S={ov['S']})")
     return engine, build_s
 
 
@@ -135,10 +174,13 @@ def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
         #    possible because overlay weights are derived; also the
         #    array-parity exactness reference (checked on round 0).
         t0 = time.perf_counter()
-        build_device_index(build_index(engine.g))
+        build_device_index(build_index(engine.g),
+                           hierarchy_levels=engine.plan.hierarchy_levels)
         pipeline_s = time.perf_counter() - t0
         t0 = time.perf_counter()
-        sdix = build_device_index(reweight_index(engine.ix, engine.g))
+        sdix = build_device_index(
+            reweight_index(engine.ix, engine.g),
+            hierarchy_levels=engine.plan.hierarchy_levels)
         reweight_s = time.perf_counter() - t0
         scratch_match = all(
             np.array_equal(np.asarray(getattr(engine.dix, f)),
@@ -146,7 +188,7 @@ def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
             for f in REFRESHED_FIELDS)
         rec = {
             "section": "refresh",
-            "graph": f"road{args.nodes}",
+            "graph": _label(args),
             "backend": jax.default_backend(),
             "epoch": engine.epoch,
             "update_frac": args.update_frac,
@@ -211,7 +253,7 @@ def _paths_loop(engine: EpochedEngine, args) -> list:
     assert bad == 0
     return [{
         "section": "serve_paths",
-        "graph": f"road{args.nodes}",
+        "graph": _label(args),
         "backend": jax.default_backend(),
         "batch_size": args.batch_size,
         "median_batch_ms": round(summ["median_s"] * 1e3, 3),
@@ -245,7 +287,9 @@ def _live_loop(engine: EpochedEngine, args) -> list:
         refresh_rounds=args.live_update_batches,
         refresh_frac=args.update_frac,
         refresh_interval_s=args.live_update_every,
-        refresh_seed=args.seed)
+        refresh_seed=args.seed,
+        wait_timeout_s=args.live_wait_timeout,
+        join_timeout_s=args.live_join_timeout)
     runtime.close()
     epochs = sorted({r.epoch for r in report.requests})
     stats = runtime.stats()
@@ -268,7 +312,7 @@ def _live_loop(engine: EpochedEngine, args) -> list:
     assert bad == 0
     rec = {
         "section": "serve_live",
-        "graph": f"road{args.nodes}",
+        "graph": _label(args),
         "backend": jax.default_backend(),
         "mix": args.mix,
         "rate_qps": args.rate,
@@ -292,6 +336,17 @@ def _live_loop(engine: EpochedEngine, args) -> list:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=4000)
+    ap.add_argument("--graph", default=None,
+                    help="named road preset (data/roads.py, e.g. "
+                         "road64k); overrides --nodes and labels the "
+                         "perf records")
+    ap.add_argument("--hierarchy-levels", default=None,
+                    help="overlay closure: 1 (dense), 2 (two-level "
+                         "hierarchy) or auto; default: the preset's "
+                         "setting, else auto")
+    ap.add_argument("--expect-hierarchy", type=int, default=0,
+                    help="fail unless the built index uses exactly "
+                         "this many overlay levels (CI smoke sanity)")
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--batch-size", type=int, default=1024)
     ap.add_argument("--validate", type=int, default=64)
@@ -333,10 +388,35 @@ def main() -> None:
     live.add_argument("--live-update-batches", type=int, default=0,
                       help="concurrent background refresh rounds "
                            "during the load run")
+    live.add_argument("--live-wait-timeout", type=float, default=60.0,
+                      help="seconds to wait for every response after "
+                           "the load phase (raise at road64k scale: "
+                           "flushes contend with concurrent refresh "
+                           "FW on CPU)")
+    live.add_argument("--live-join-timeout", type=float, default=900.0,
+                      help="seconds to wait for background refresh "
+                           "rounds to finish after the load phase (a "
+                           "road64k hierarchical re-close is minutes "
+                           "on CPU)")
     live.add_argument("--live-update-every", type=float, default=0.25,
                       help="seconds between background refresh rounds")
     args = ap.parse_args()
+    preset = None
+    if args.graph:
+        from ..data.roads import road_preset
+
+        preset = road_preset(args.graph)
+        args.nodes = preset.nodes
+    args.graph_label = preset.name if preset else f"road{args.nodes}"
+    if args.hierarchy_levels is None:
+        args.hierarchy_levels = preset.hierarchy if preset else "auto"
+    elif args.hierarchy_levels != "auto":
+        args.hierarchy_levels = int(args.hierarchy_levels)
     mode = "sharded" if args.sharded else args.mode
+    if args.expect_hierarchy and mode != "planner":
+        # the guard lives in _build_engine (planner setup); accepting
+        # it elsewhere would silently skip the check it exists for
+        ap.error("--expect-hierarchy requires --mode planner")
     if args.update_batches and mode != "planner":
         ap.error("--update-batches requires --mode planner")
     if args.paths and mode != "planner":
@@ -351,7 +431,7 @@ def main() -> None:
         engine, _build_s = _build_engine(args)
         _emit(args, _live_loop(engine, args), "live",
               prev_filter={"section": "serve_live",
-                           "graph": f"road{args.nodes}",
+                           "graph": _label(args),
                            "mix": args.mix, "rate_qps": args.rate,
                            "cache": "on" if args.cache_size else "off",
                            "refresh": "on" if args.live_update_batches
@@ -374,7 +454,8 @@ def main() -> None:
         ix = build_index(g)
         print(f"index: {ix.timings} ({time.perf_counter() - t0:.1f}s)")
         t0 = time.perf_counter()
-        dix = build_device_index(ix)
+        dix = build_device_index(
+            ix, hierarchy_levels=args.hierarchy_levels)
         build_s = time.perf_counter() - t0
         print(f"device index: frag_apsp={dix.frag_apsp.shape} "
               f"d_super={dix.d_super.shape} ({build_s:.1f}s)")
@@ -420,15 +501,16 @@ def main() -> None:
         print(f"planner buckets (last batch): {planner.last_counts}")
     _emit(args, [{
         "section": "serve",
-        "graph": f"road{args.nodes}",
+        "graph": _label(args),
         "mode": mode,
         "backend": jax.default_backend(),
         "batch_size": args.batch_size,
         "median_batch_ms": round(summ["median_s"] * 1e3, 3),
         "us_per_query": round(per_q * 1e6, 3),
         "qps": round(qps, 1),
+        **({} if engine is None else _overlay_record(engine)),
     }], mode, prev_filter={"section": "serve",
-                           "graph": f"road{args.nodes}", "mode": mode},
+                           "graph": _label(args), "mode": mode},
         prev_key="us_per_query")
     if args.validate:
         s, t, got = last
@@ -437,7 +519,7 @@ def main() -> None:
     if args.paths:
         _emit(args, _paths_loop(engine, args), "paths",
               prev_filter={"section": "serve_paths",
-                           "graph": f"road{args.nodes}"},
+                           "graph": _label(args)},
               prev_key="us_per_path")
     if args.update_batches:
         _emit(args, _update_loop(engine, args, build_s), "refresh")

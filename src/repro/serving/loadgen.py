@@ -83,7 +83,11 @@ def run_load(runtime: ServingRuntime, pairs: np.ndarray, *,
         delay = arrivals[i] - (time.perf_counter() - t0)
         if delay > 0:
             time.sleep(delay)
-        reqs.append(runtime.submit(int(pairs[i, 0]), int(pairs[i, 1])))
+        # the scheduled arrival rides on the request itself, so every
+        # consumer of its latency — cache hit or device miss — shares
+        # the open-loop basis (scheduler.Request.latency_s)
+        reqs.append(runtime.submit(int(pairs[i, 0]), int(pairs[i, 1]),
+                                   t_sched=t0 + arrivals[i]))
     deadline = time.perf_counter() + wait_timeout_s
     for req in reqs:
         if not req.wait(max(0.0, deadline - time.perf_counter())):
@@ -98,9 +102,10 @@ def run_load(runtime: ServingRuntime, pairs: np.ndarray, *,
     # latency from the *scheduled* arrival, not the actual submit —
     # otherwise a generator starved by the server (GIL, overload)
     # under-reports exactly the queueing delay an open-loop client
-    # would see (coordinated omission)
-    lat_ms = np.array([r.t_done - (t0 + arrivals[i])
-                       for i, r in enumerate(reqs)]) * 1e3
+    # would see (coordinated omission).  The basis lives on each
+    # Request (t_sched), so cache-hit responses are measured the same
+    # way as misses here AND everywhere else latency_s is read.
+    lat_ms = np.array([r.latency_s for r in reqs]) * 1e3
     return LoadReport(n_requests=n, offered_qps=rate_qps,
                       achieved_qps=n / wall, wall_s=wall,
                       runtime_stats=runtime.stats(), requests=reqs,
@@ -113,6 +118,7 @@ def run_load_with_refresh(runtime: ServingRuntime, pairs: np.ndarray,
                           refresh_frac: float = 0.02,
                           refresh_interval_s: float = 0.0,
                           refresh_seed: int = 0,
+                          wait_timeout_s: float = 60.0,
                           join_timeout_s: float = 120.0):
     """``run_load`` with an optional concurrent RefreshDriver — the one
     spelling of the load-phase teardown shared by ``serve.py --live``,
@@ -130,7 +136,8 @@ def run_load_with_refresh(runtime: ServingRuntime, pairs: np.ndarray,
                                frac=refresh_frac,
                                interval_s=refresh_interval_s,
                                seed=refresh_seed).start()
-    report = run_load(runtime, pairs, rate_qps=rate_qps, seed=seed)
+    report = run_load(runtime, pairs, rate_qps=rate_qps, seed=seed,
+                      wait_timeout_s=wait_timeout_s)
     if driver is not None:
         driver.join(timeout=join_timeout_s)
         graphs = driver.graphs_by_epoch

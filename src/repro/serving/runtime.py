@@ -63,9 +63,12 @@ class ServingRuntime:
     def warmup(self) -> None:
         self.engine.warmup(self.max_batch)
 
-    def submit(self, s: int, t: int) -> Request:
-        """Enqueue one query; returns its in-flight Request."""
-        return self.batcher.submit(s, t)
+    def submit(self, s: int, t: int,
+               t_sched: float | None = None) -> Request:
+        """Enqueue one query; returns its in-flight Request.
+        ``t_sched``: the open-loop scheduled arrival time — latency is
+        measured from it (see scheduler.Request)."""
+        return self.batcher.submit(s, t, t_sched)
 
     def query(self, s: int, t: int,
               timeout: float | None = 30.0) -> float:

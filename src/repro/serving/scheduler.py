@@ -34,15 +34,25 @@ from ..core.dist_engine import pad_pow2
 class Request:
     """One in-flight query; resolved in place by the serving flush.
     ``error`` is set instead of ``dist`` when the flush failed —
-    ``result()`` is the raising accessor."""
+    ``result()`` is the raising accessor.
 
-    __slots__ = ("s", "t", "t_submit", "t_done", "dist", "epoch",
-                 "cached", "error", "_done")
+    ``t_sched`` is the request's *scheduled* arrival time (open-loop
+    clock); it defaults to the submit instant but an open-loop driver
+    running behind schedule passes the time the request was supposed
+    to arrive, so ``latency_s`` charges the queueing delay instead of
+    hiding it (coordinated omission).  The basis is a property of the
+    request, not of the serve path that resolved it — a cache hit and
+    a device miss measure from the same clock.
+    """
 
-    def __init__(self, s: int, t: int):
+    __slots__ = ("s", "t", "t_submit", "t_sched", "t_done", "dist",
+                 "epoch", "cached", "error", "_done")
+
+    def __init__(self, s: int, t: int, t_sched: float | None = None):
         self.s = int(s)
         self.t = int(t)
         self.t_submit = time.perf_counter()
+        self.t_sched = self.t_submit if t_sched is None else t_sched
         self.t_done: float | None = None
         self.dist: float | None = None
         self.epoch: int | None = None
@@ -71,9 +81,12 @@ class Request:
 
     @property
     def latency_s(self) -> float:
+        """Completion latency from the scheduled arrival (== submit
+        when no schedule was given) — the open-loop basis shared by
+        cache hits and misses alike."""
         if self.t_done is None:
             raise RuntimeError("request not resolved yet")
-        return self.t_done - self.t_submit
+        return self.t_done - self.t_sched
 
 
 class MicroBatcher:
@@ -113,8 +126,9 @@ class MicroBatcher:
             self._thread.start()
 
     # -- submission ----------------------------------------------------
-    def submit(self, s: int, t: int) -> Request:
-        req = Request(s, t)
+    def submit(self, s: int, t: int,
+               t_sched: float | None = None) -> Request:
+        req = Request(s, t, t_sched)
         with self._cond:
             if self._closed:
                 raise RuntimeError(
@@ -160,10 +174,20 @@ class MicroBatcher:
                 req._done.set()
 
     def _resolve(self, batch: list[Request]) -> None:
-        """Serve and complete one flush.  A failure resolves every
-        affected request with the exception (never a silent hang) and
-        re-raises for the caller — flush() propagates it; the auto
-        thread records it and closes the batcher."""
+        """Serve and complete one flush.  A failure closes the batcher
+        FIRST (under the lock), then resolves every affected request
+        with the exception, then re-raises for the caller.
+
+        The close-before-fail order is what makes the failure path
+        race-free in BOTH drive modes: a request submitted during the
+        failing flush either landed in the pending buffer before the
+        close — and is swept into ``_fail`` below — or its submit
+        raises with the cause.  Closing only from the auto thread (the
+        old arrangement) left manual-mode (``auto=False``) callers a
+        window where a request submitted while ``flush()`` was raising
+        stayed queued forever on a serve path whose owner had already
+        seen the exception and walked away.
+        """
         if not batch:
             return
         try:
@@ -175,6 +199,9 @@ class MicroBatcher:
                         "unresolved")
         except BaseException as exc:
             self.error = exc
+            with self._cond:
+                self._closed = True
+                self._cond.notify_all()
             self._fail(batch, exc)
             raise
         now = time.perf_counter()
@@ -211,15 +238,10 @@ class MicroBatcher:
                 batch = self._take(reason)
             try:
                 self._resolve(batch)
-            except BaseException as exc:
-                # fail fast and loud: stop accepting work (submit now
-                # raises, carrying self.error), then fail stragglers
-                # that slipped in between the batch failure and the
-                # close — nothing ever hangs
-                with self._cond:
-                    self._closed = True
-                    self._cond.notify_all()
-                self._fail([], exc)
+            except BaseException:
+                # _resolve already closed the batcher (so submits now
+                # raise, carrying self.error) and failed the batch plus
+                # every straggler — nothing ever hangs; just stop
                 return
 
     def close(self, *, drain: bool = True) -> None:

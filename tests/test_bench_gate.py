@@ -1,0 +1,108 @@
+"""Unit tests for the perf-gate's history handling (scripts/bench_gate).
+
+The gate's statistical contract: the fresh measurement is compared to
+the median of the last N *committed* records of the same config — so
+the fresh record must never be able to join its own baseline, and a
+malformed committed record must fail loudly instead of silently
+shrinking (or unit-mixing) the window.
+"""
+import importlib.util
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_gate",
+    os.path.join(os.path.dirname(__file__), "..", "scripts",
+                 "bench_gate.py"))
+bench_gate = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_gate)
+
+
+MATCH = {"section": "serve", "graph": "road4000", "mode": "planner"}
+
+
+def _rec(us, **over):
+    rec = {"section": "serve", "graph": "road4000", "mode": "planner",
+           "us_per_query": us}
+    rec.update(over)
+    return rec
+
+
+def test_window_selects_matching_tail():
+    recs = ([_rec(9.0 + i) for i in range(8)]
+            + [_rec(99.0, mode="fused"),          # different config
+               _rec(50.0, section="serve_live",   # different section
+                    mode="planner")])
+    win = bench_gate.history_window(recs, MATCH, "us_per_query", 5)
+    assert win == [12.0, 13.0, 14.0, 15.0, 16.0]
+
+
+def test_missing_section_fails_loudly():
+    recs = [_rec(9.0), {"graph": "road4000", "us_per_query": 9.0}]
+    with pytest.raises(SystemExit, match="section"):
+        bench_gate.history_window(recs, MATCH, "us_per_query", 5)
+
+
+def test_matching_record_without_metric_fails_loudly():
+    """A record matching every identity key but carrying no numeric
+    metric is a half-written entry, not a smaller window."""
+    broken = _rec(9.0)
+    del broken["us_per_query"]
+    with pytest.raises(SystemExit, match="numeric"):
+        bench_gate.history_window([_rec(9.0), broken], MATCH,
+                                  "us_per_query", 5)
+    # bool is not a measurement either (isinstance(True, int) holds)
+    with pytest.raises(SystemExit, match="numeric"):
+        bench_gate.history_window([_rec(True)], MATCH,
+                                  "us_per_query", 5)
+
+
+def test_live_and_offline_sections_never_mix():
+    """serve_live p99 records (ms) must be invisible to the offline
+    µs/query window and vice versa — the 'units can't mix' guarantee."""
+    recs = [_rec(9.0),
+            {"section": "serve_live", "graph": "road4000",
+             "mode": "planner", "us_per_query": 9.0, "p99_ms": 30.0}]
+    off = bench_gate.history_window(recs, MATCH, "us_per_query", 5)
+    assert off == [9.0]
+    live = bench_gate.history_window(
+        recs, {"section": "serve_live", "graph": "road4000"},
+        "p99_ms", 5)
+    assert live == [30.0]
+
+
+def test_fresh_equals_history_rejected(tmp_path):
+    """The fresh records file must not alias the committed history —
+    else the fresh record joins its own median baseline and the gate
+    can never fail."""
+    p = tmp_path / "BENCH.json"
+    p.write_text("[]")
+    with pytest.raises(SystemExit, match="median baseline"):
+        bench_gate.ensure_distinct_files(str(p), str(p))
+    # a relative-path alias is still the same file
+    rel = os.path.relpath(str(p))
+    with pytest.raises(SystemExit, match="median baseline"):
+        bench_gate.ensure_distinct_files(rel, str(p))
+    bench_gate.ensure_distinct_files(str(tmp_path / "fresh.json"),
+                                     str(p))    # distinct: fine
+
+
+def test_committed_history_is_gate_clean():
+    """The repo's own BENCH_serve.json must stay loud-failure-free for
+    every config the CI gates query."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "src"))
+    from repro.perflog import read_records
+
+    recs = read_records(os.path.join(os.path.dirname(__file__), "..",
+                                     "BENCH_serve.json"))
+    assert recs, "committed history unreadable"
+    bench_gate.history_window(
+        recs, {"section": "serve", "graph": "road4000",
+               "mode": "planner", "backend": "cpu",
+               "batch_size": 1024}, "us_per_query", 5)
+    bench_gate.history_window(
+        recs, {"section": "serve_live", "graph": "road4000"},
+        "p99_ms", 5)

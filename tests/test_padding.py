@@ -1,0 +1,67 @@
+"""Property tests for the consolidated padding rules (core/padding.py).
+
+Three modules used to carry their own spelling of these (device_engine,
+dist_engine, the serving scheduler via dist_engine); the properties
+below are what build/refresh shape stability, planner warmup coverage,
+and the batcher's occupancy bucketing all silently lean on — so they
+are pinned once, against the one shared implementation, and the old
+import sites are asserted to be aliases of it.
+"""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import device_engine, dist_engine, padding
+from repro.serving import scheduler
+
+
+def test_import_sites_are_aliases():
+    """Every historical spelling resolves to the shared functions."""
+    assert device_engine._pad_to is padding.pad_to
+    assert device_engine._pow2 is padding.pow2
+    assert dist_engine.pad_pow2 is padding.pad_pow2
+    assert dist_engine._pad_pow2 is padding.pad_pow2
+    # the scheduler buckets occupancy with the planner's exact rule
+    assert scheduler.pad_pow2 is padding.pad_pow2
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=60)
+def test_pad_to_properties(x):
+    for mult in (1, 8, 16, 104):
+        p = padding.pad_to(x, mult)
+        assert p >= x and p >= mult            # floor behavior
+        assert p % mult == 0                   # multiple
+        assert p - x < mult or x < mult        # tightness
+        assert padding.pad_to(p, mult) == p    # idempotent (round-trip)
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=60)
+def test_pow2_properties(x):
+    for floor in (1, 4, 8, 16, 24):
+        p = padding.pow2(x, floor)
+        assert p >= x and p >= floor           # floor behavior
+        # p is floor * 2**k for some k >= 0
+        q = p
+        while q > floor:
+            assert q % 2 == 0
+            q //= 2
+        assert q == floor
+        assert p < 2 * max(x, floor)           # tightness: < 2x input
+        assert padding.pow2(p, floor) == p     # idempotent
+
+
+@given(st.integers(0, 10_000), st.integers(0, 10_000))
+@settings(max_examples=60)
+def test_monotone(a, b):
+    """x <= y implies f(x) <= f(y) for every rule (warmup coverage:
+    padding a smaller batch can never need a larger compiled shape)."""
+    lo, hi = min(a, b), max(a, b)
+    assert padding.pad_to(lo) <= padding.pad_to(hi)
+    assert padding.pow2(lo, 4) <= padding.pow2(hi, 4)
+    assert padding.pad_pow2(lo) <= padding.pad_pow2(hi)
+
+
+def test_planner_bucket_rule_pinned():
+    """The serving stack's floor-16 pow2 rule, by example."""
+    assert [padding.pad_pow2(n) for n in (0, 1, 16, 17, 100, 1024)] == \
+        [16, 16, 16, 32, 128, 1024]

@@ -167,6 +167,55 @@ def test_batcher_manual_flush_error_propagates():
     assert r.done and isinstance(r.error, ValueError)
 
 
+def test_manual_flush_failure_closes_batcher():
+    """Regression (deterministic, auto=False): a failing flush must
+    close the batcher in MANUAL mode too.  A request submitted during
+    the failing flush (here: reentrantly from the serve callback, the
+    single-threaded stand-in for a racing submitter) is resolved with
+    the error, and any later submit is rejected with the cause — never
+    parked forever on a serve path whose owner already saw the
+    exception and walked away."""
+    late = []
+
+    def boom(batch):
+        late.append(mb.submit(7, 8))      # arrives mid-failing-flush
+        raise ValueError("device exploded")
+
+    mb = MicroBatcher(boom, max_batch=8, auto=False)
+    r = mb.submit(1, 2)
+    with pytest.raises(ValueError):
+        mb.flush()
+    assert r.done and isinstance(r.error, ValueError)
+    # the mid-flush request was swept into the failure, not forgotten
+    assert late[0].done and isinstance(late[0].error, ValueError)
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit(3, 4)
+    assert isinstance(mb.error, ValueError)
+    with pytest.raises(RuntimeError, match="flush failed"):
+        late[0].result(timeout=0)
+
+
+def test_scheduled_time_latency_basis():
+    """Regression: latency is measured from the *scheduled* arrival
+    when one is given (the open-loop basis of loadgen.run_load), and
+    the basis rides on the Request itself — so a response resolved
+    from the cache is charged its queueing delay exactly like a device
+    miss (no coordinated omission for hot pairs under overload)."""
+    mb = MicroBatcher(_stub_serve, max_batch=8, auto=False)
+    backlog = 0.25
+    t_late = time.perf_counter() - backlog   # scheduled 250ms ago
+    r_late = mb.submit(1, 2, t_sched=t_late)
+    r_now = mb.submit(3, 4)
+    mb.flush()
+    assert r_late.t_sched == t_late
+    assert r_now.t_sched == r_now.t_submit
+    assert r_late.latency_s >= backlog       # queueing delay charged
+    assert r_now.latency_s < backlog
+    # same flush, same t_done: the only difference IS the basis
+    assert abs((r_late.latency_s - r_now.latency_s)
+               - (r_now.t_sched - t_late)) < 1e-9
+
+
 def test_occupancy_buckets_are_planner_shapes():
     """The occupancy histogram reports the padded (pow2, floor-16)
     executable shapes that ran, not raw flush sizes."""
@@ -252,6 +301,21 @@ def test_cache_disabled(engine):
     rt.flush()
     assert not r1.cached and not r2.cached and r1.dist == r2.dist
     assert "cache_hits" not in rt.stats()
+
+
+def test_cache_hit_latency_uses_scheduled_basis(engine):
+    """A response served FROM THE CACHE still measures latency from
+    its scheduled arrival — hot Zipf pairs under overload are exactly
+    the ones that hit, so an optimistic basis there would skew p50."""
+    rt = ServingRuntime(engine, max_batch=64, cache_size=256,
+                        auto=False)
+    rt.submit(3, 100)
+    rt.flush()                                    # miss, fills cache
+    backlog = 0.2
+    r = rt.submit(3, 100, t_sched=time.perf_counter() - backlog)
+    rt.flush()
+    assert r.cached
+    assert r.latency_s >= backlog                 # backlog charged
 
 
 def test_planner_pinned_epoch_query(engine):
