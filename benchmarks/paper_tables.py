@@ -315,8 +315,9 @@ def exp10_scale(out: List[str]) -> None:
     (DESIGN.md §12).
 
     Builds each preset end to end — host index, device index with the
-    preset's overlay closure (dense at road4000, two-level hierarchy
-    at road64k) — then measures planner serve latency at batch 1024,
+    preset's overlay closure (dense at road4000, deep multilevel
+    hierarchy at road64k) — then measures planner serve latency at
+    batch 1024,
     a refresh round, the overlay memory actually resident (closure +
     witness + row tables) against the dense (S+1)^2 baseline, and a
     sampled host-Dijkstra parity check.  The overlay_bytes column is
@@ -348,7 +349,7 @@ def exp10_scale(out: List[str]) -> None:
                             hierarchy_levels=preset.hierarchy)
         device_s = time.perf_counter() - t0
         plan = eng.plan
-        if plan.hierarchy_levels == 2:
+        if plan.hierarchy_levels >= 2:
             from repro.core.hierarchy import hier_overlay_stats
 
             st = hier_overlay_stats(plan.hier, plan.S)

@@ -61,13 +61,17 @@ def history_window(records: list, match: dict, metric: str,
     """The metric values of the last ``last`` committed records
     matching ``match`` — with malformed records failing LOUDLY.
 
-    Two malformation classes would otherwise silently shrink (or
+    Three malformation classes would otherwise silently shrink (or
     worse, mix) the window: a record with no ``section`` field cannot
     be classified into the offline-serve vs serve_live histories at
     all (their metrics have different units — µs/query vs ms p99 — so
-    a misclassified record poisons the median), and a record that
-    matches every identity key but lacks a numeric ``metric`` is a
-    half-written entry that used to just vanish from the window.
+    a misclassified record poisons the median); a record with no
+    ``graph`` field cannot be keyed to a graph scale, and the
+    (section, graph) pair IS the history key — a road64k µs/query
+    landing in the road4000 window would inflate the median ~400x and
+    mask any road4000 regression; and a record that matches every
+    identity key but lacks a numeric ``metric`` is a half-written
+    entry that used to just vanish from the window.
     """
     window = []
     for i, rec in enumerate(records):
@@ -76,6 +80,11 @@ def history_window(records: list, match: dict, metric: str,
                 f"bench_gate: malformed history record #{i}: no "
                 f"'section' field (cannot classify offline vs live, "
                 f"units would mix): {rec!r}")
+        if "graph" not in rec:
+            raise SystemExit(
+                f"bench_gate: malformed history record #{i}: no "
+                f"'graph' field (road4000 and road64k histories would "
+                f"mix — scales differ by orders of magnitude): {rec!r}")
         if not all(rec.get(k) == v for k, v in match.items()):
             continue
         val = rec.get(metric)

@@ -61,17 +61,21 @@ run_stage "live serving smoke (open-loop + concurrent refresh)" \
     --live-seconds 2 --mix zipf --live-update-batches 1 \
     --validate 24 --json ""
 
-# Scale smoke (DESIGN.md §12): road64k must build the two-level
-# overlay (--expect-hierarchy 2 fails the run if the dense closure
-# sneaks back in) and serve with sampled Dijkstra parity.  The long
-# pole of a full check run (minutes of device FW), so CHECK_SKIP_SCALE=1
-# skips it for quick local iteration; CI runs it as a dedicated
-# once-per-matrix step (ci.yml) rather than on every leg.
+# Scale smoke (DESIGN.md §12/§13): road64k must build the deep
+# overlay — --expect-hierarchy 3 fails the run if the build
+# silently falls back to two levels (or the dense closure sneaks
+# back in) — with a multilevel partition whose level-2 boundary is
+# at most 0.5*S (--max-s2-ratio, the partitioner-quality gate;
+# measured ~0.45, the floor set by road_like's highway shortcuts),
+# and serve with sampled Dijkstra parity.  The long pole of a full check
+# run (minutes of device FW), so CHECK_SKIP_SCALE=1 skips it for
+# quick local iteration; CI runs it as a dedicated once-per-matrix
+# step (ci.yml) rather than on every leg.
 if [[ "${CHECK_SKIP_SCALE:-}" != "1" ]]; then
     run_stage "scale smoke (road64k, hierarchical overlay, validated)" \
         python -m repro.launch.serve --graph road64k --batches 1 \
         --batch-size 256 --validate 8 --update-batches 0 \
-        --expect-hierarchy 2 --json ""
+        --expect-hierarchy 3 --max-s2-ratio 0.5 --json ""
 else
     echo "== scale smoke (road64k) =="
     echo "-- scale smoke: SKIPPED (CHECK_SKIP_SCALE=1)"

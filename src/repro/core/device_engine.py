@@ -70,33 +70,44 @@ class DeviceIndex:
     # pieces: every bucketed APSP tensor, flattened end to end
     piece_flat: jax.Array        # f32 [sum_b P_b * mp_b * mp_b]
     piece_next: jax.Array        # int32, same layout as piece_flat (-1)
-    # hierarchical overlay (hierarchy_levels=2, DESIGN.md §12).  The
-    # dense pair above shrinks to a [1, 1] dummy and these per-level
-    # tables take over; at levels=1 THESE are the 1-sized dummies.
-    # Serve/unwind code dispatches on sf_of.shape[0] > 1 — a static
-    # trace-time fact, so no flags thread through jit.
-    sf_of: jax.Array = dataclasses.field(          # int32 [S+1] (nsf = sentinel)
-        default_factory=_dummy((1,), 0, jnp.int32))
-    pos_in_sf: jax.Array = dataclasses.field(      # int32 [S+1]
-        default_factory=_dummy((1,), 0, jnp.int32))
-    sf_members: jax.Array = dataclasses.field(     # int32 [nsf+1, m2] (S = pad)
-        default_factory=_dummy((1, 1), 0, jnp.int32))
-    sf_closure: jax.Array = dataclasses.field(     # f32 [nsf+1, m2, m2]
-        default_factory=_dummy((1, 1, 1), INF, jnp.float32))
-    sf_next: jax.Array = dataclasses.field(        # int32 [nsf+1, m2, m2]
-        default_factory=_dummy((1, 1, 1), -1, jnp.int32))
-    l2row: jax.Array = dataclasses.field(          # f32 [nsf+1, m2, mb2]
-        default_factory=_dummy((1, 1, 1), INF, jnp.float32))
-    bnd2_sid: jax.Array = dataclasses.field(       # int32 [nsf+1, mb2] (S2 = pad)
-        default_factory=_dummy((1, 1), 0, jnp.int32))
-    d2: jax.Array = dataclasses.field(             # f32 [S2+1, S2+1]
+    # hierarchical overlay (hierarchy_levels=N, DESIGN.md §12-13).  One
+    # tuple entry per grouping level, bottom first; the dense pair
+    # above shrinks to a [1, 1] dummy and these per-level tables take
+    # over, with d2/d2_next holding the TOP (last level's boundary)
+    # closure.  At levels=1 the tuples are empty.  Serve/unwind code
+    # dispatches on len(sf_of) — a static trace-time fact (tuple
+    # lengths live in the pytree treedef), so no flags thread through
+    # jit.
+    sf_of: tuple = ()        # int32 [S_l+1] each (group count = sentinel)
+    pos_in_sf: tuple = ()    # int32 [S_l+1]
+    sf_members: tuple = ()   # int32 [ng+1, m2] (S_l = pad)
+    sf_closure: tuple = ()   # f32 [ng+1, m2, m2]
+    sf_next: tuple = ()      # int32 [ng+1, m2, m2]
+    l2row: tuple = ()        # f32 [ng+1, m2, mb2]
+    bnd2_sid: tuple = ()     # int32 [ng+1, mb2] (S_{l+1} = pad)
+    d2: jax.Array = dataclasses.field(             # f32 [S_top+1, S_top+1]
         default_factory=_dummy((1, 1), INF, jnp.float32))
-    d2_next: jax.Array = dataclasses.field(        # int32 [S2+1, S2+1]
+    d2_next: jax.Array = dataclasses.field(        # int32 [S_top+1, S_top+1]
         default_factory=_dummy((1, 1), -1, jnp.int32))
+    # epoch-resident pre-lifted rows (DESIGN.md §13): for each hot
+    # level-1 super-fragment, its members' exact confined distances to
+    # every TOP boundary node — so a hot cross-top-group query is one
+    # fused minplus_twoside against d2 with no per-level lifting.
+    # res_rows row [R] is the all-INF sentinel; res_of_frag maps every
+    # fragment to its group's resident row (R when not resident).
+    res_rows: jax.Array = dataclasses.field(       # f32 [R+1, m2, S_top+1]
+        default_factory=_dummy((1, 1, 1), INF, jnp.float32))
+    res_of_frag: jax.Array = dataclasses.field(    # int32 [k]
+        default_factory=_dummy((1,), 0, jnp.int32))
+    # fragment -> TOP-level group (device twin of the planner sidecar
+    # host_topgrp_frag): the CPU serve path uses it to contract only
+    # against each endpoint's own top-group boundary columns
+    topgrp_of_frag: jax.Array = dataclasses.field(  # int32 [k]
+        default_factory=_dummy((1,), 0, jnp.int32))
 
     @property
     def hierarchy_levels(self) -> int:
-        return 2 if self.sf_of.shape[0] > 1 else 1
+        return 1 + len(self.sf_of)
 
     def tree_flatten(self):
         fields = dataclasses.fields(self)
@@ -167,10 +178,13 @@ class BuildPlan:
     piece_agent_pos: np.ndarray       # int32 [P]
     piece_cap: np.ndarray             # int32 [P] padded size
     piece_base: np.ndarray            # int64 [P] offset into piece_flat
-    # overlay hierarchy (DESIGN.md §12): 1 = dense d_super closure,
-    # 2 = per-super-fragment closures + dense level-2 boundary closure
+    # overlay hierarchy (DESIGN.md §12-13): 1 = dense d_super closure,
+    # N >= 2 = per-group closures at N-1 grouping levels (``hier``, one
+    # HierPlan per level, bottom first) + dense TOP boundary closure
     hierarchy_levels: int = 1
-    hier: "hierarchy.HierPlan | None" = None
+    hier: "List[hierarchy.HierPlan] | None" = None
+    # resident pre-lift budget in MiB (0 disables; DESIGN.md §13)
+    resident_mb: float = 0.0
 
     @property
     def n_pieces(self) -> int:
@@ -484,62 +498,175 @@ def piece_stage(plan: BuildPlan, g, *, force=None) -> tuple[np.ndarray,
 
 
 def hier_super_stage(plan: BuildPlan, *, force=None) -> dict:
-    """Stage 2, hierarchical (DESIGN.md §12): close the overlay as a
-    two-level partition hierarchy instead of one dense FW.
+    """Stage 2, hierarchical (DESIGN.md §12-13): close the overlay as
+    an N-level partition hierarchy instead of one dense FW.
 
-    Runs the existing batched witness FW once per super-fragment batch
-    at the pow2 tile shape [nsf, m2, m2] (``hierarchy.sf_stage``),
-    gathers the level-2 clique weights from those closures (derived
-    state, exactly like the level-1 Upsilon weights), and closes only
-    the small level-2 boundary set densely (``hierarchy.l2_stage``).
-    Returns the DeviceIndex field dict for the per-level tables plus
-    the host-side provenance sidecars.
+    Per grouping level, bottom first: fill the level's group adjacency
+    from its source overlay's current slot weights (level 1 gathers
+    ``plan.sup_w``; level l > 1 the previous level's derived ``l2_w``),
+    run the existing batched witness FW once at the pow2 tile shape
+    [nsf, m2, m2] (``hierarchy.sf_stage``), then gather the NEXT
+    overlay's clique weights from those closures (derived state,
+    exactly like the level-1 Upsilon weights).  Only the top boundary
+    set closes densely (``hierarchy.l2_stage`` -> d2).  Returns the
+    DeviceIndex field dict (per-level tuples) plus the host-side
+    provenance sidecars (one SlotMap per level).
     """
-    hier = plan.hier
-    hierarchy.sf_adj_fill(hier, plan)
-    sf_closure, sf_next, l2row = hierarchy.sf_stage(hier, force=force)
-    hierarchy.hier_weights(hier, plan,
-                           np.asarray(sf_closure)[:hier.nsf])
-    d2, d2_next = hierarchy.l2_stage(hier, force=force)
-    S = plan.S
-    sf_of = np.concatenate([hier.sf_of,
-                            [hier.nsf]]).astype(np.int32)       # [S+1]
-    pos_in_sf = np.concatenate([hier.pos_in_sf, [0]]).astype(np.int32)
-    members = np.where(hier.sf_members < 0, S,
-                       hier.sf_members).astype(np.int32)
-    members = np.concatenate(
-        [members, np.full((1, hier.m2), S, np.int32)])          # [nsf+1]
-    bnd2_sid = np.concatenate(
-        [hier.bnd2_sid, np.full((1, hier.mb2), hier.S2, np.int32)])
+    levels = plan.hier
+    per: dict = {name: [] for name in (
+        "sf_of", "pos_in_sf", "sf_members", "sf_closure", "sf_next",
+        "l2row", "bnd2_sid")}
+    l2_slots = []
+    w = plan.sup_w
+    for h in levels:
+        hierarchy.sf_adj_fill(h, w)
+        sf_closure, sf_next, l2row = hierarchy.sf_stage(h, force=force)
+        hierarchy.hier_weights(h, np.asarray(sf_closure)[:h.nsf], w)
+        Sl = h.sf_of.shape[0]                    # this overlay's size
+        sf_of = np.concatenate([h.sf_of, [h.nsf]]).astype(np.int32)
+        pos_in_sf = np.concatenate([h.pos_in_sf, [0]]).astype(np.int32)
+        members = np.where(h.sf_members < 0, Sl,
+                           h.sf_members).astype(np.int32)
+        members = np.concatenate(
+            [members, np.full((1, h.m2), Sl, np.int32)])
+        bnd2_sid = np.concatenate(
+            [h.bnd2_sid, np.full((1, h.mb2), h.S2, np.int32)])
+        per["sf_of"].append(jnp.asarray(sf_of))
+        per["pos_in_sf"].append(jnp.asarray(pos_in_sf))
+        per["sf_members"].append(jnp.asarray(members))
+        per["sf_closure"].append(sf_closure)
+        per["sf_next"].append(sf_next)
+        per["l2row"].append(l2row)
+        per["bnd2_sid"].append(jnp.asarray(bnd2_sid))
+        l2_slots.append(hierarchy.l2_slot_map(h))
+        w = h.l2_w
+    d2, d2_next = hierarchy.l2_stage(levels[-1], force=force)
+    fields = {name: tuple(v) for name, v in per.items()}
+    fields["d2"] = d2
+    fields["d2_next"] = d2_next
     return {
-        "fields": {
-            "sf_of": jnp.asarray(sf_of),
-            "pos_in_sf": jnp.asarray(pos_in_sf),
-            "sf_members": jnp.asarray(members),
-            "sf_closure": sf_closure,
-            "sf_next": sf_next,
-            "l2row": l2row,
-            "bnd2_sid": jnp.asarray(bnd2_sid),
-            "d2": d2,
-            "d2_next": d2_next,
-        },
+        "fields": fields,
         "ov_slot": hierarchy.ov_slot_map(plan),
-        "l2_slot": hierarchy.l2_slot_map(hier),
+        "l2_slot": l2_slots,
+    }
+
+
+def _compose_minplus(U: jax.Array, M: jax.Array,
+                     chunk: int = 32) -> jax.Array:
+    """out[i, j] = min_b U[i, b] + M[b, j], chunked over b so the peak
+    intermediate stays [m2, chunk, mb'] (build-time helper for the
+    resident pre-lift; runs once per hot group per epoch)."""
+    out = jnp.full((U.shape[0], M.shape[1]), INF, U.dtype)
+    for i in range(0, U.shape[1], chunk):
+        out = jnp.minimum(out, jnp.min(
+            U[:, i:i + chunk, None] + M[None, i:i + chunk, :], axis=1))
+    return out
+
+
+def resident_stage(plan: BuildPlan, fields: dict) -> dict | None:
+    """Stage 2b: epoch-resident pre-lifted rows (DESIGN.md §13).
+
+    For each hot level-1 group g (top traffic mass, capped by
+    ``plan.resident_mb``), compose the per-level lift chain once:
+
+      U_g[p, c] = min over (a_1, ..., a_{L-1}) of
+                  l2row[0][g, p, a_1] + l2row[1][g_2, pos(a_1), a_2]
+                  + ... (+ sentinel-masked at every step)
+
+    scattered to dense top coordinates — the exact confined distance
+    from every member position p to every TOP boundary node c.  A hot
+    cross-top-group query then runs ONE fused minplus_twoside against
+    d2 instead of L per-level lifts; exact because a route between
+    different top groups must touch the top boundary, and its prefix
+    up to the first top contact stays hierarchically confined (no
+    same-group legs apply: different top groups imply different groups
+    at every level, since groups nest).
+
+    Deterministic in (structure, per-level tables), so a refresh that
+    re-runs it lands array-equal with a from-scratch build.  Returns
+    the DeviceIndex field dict plus the planner's host sidecars, or
+    None when disabled/degenerate.
+    """
+    levels = plan.hier
+    if not levels or plan.resident_mb <= 0:
+        return None
+    h0 = levels[0]
+    stp1 = int(fields["d2"].shape[0])
+    if h0.nsf == 0 or stp1 <= 1:
+        return None
+    # traffic-mass proxy: original graph nodes per level-1 group (the
+    # serve mix samples nodes uniformly-by-traffic, so member count is
+    # the stationary hot-group weight)
+    frag_nodes = np.bincount(plan.frag_of[plan.frag_of >= 0].astype(
+        np.int64), minlength=plan.k)
+    mass = np.zeros(h0.nsf, dtype=np.int64)
+    np.add.at(mass, h0.sf_of_frag.astype(np.int64), frag_nodes)
+    per_sf = h0.m2 * stp1 * 4
+    cap = int(plan.resident_mb * (1 << 20)) // max(per_sf, 1)
+    if cap <= 0:
+        return None
+    hot = np.sort(np.argsort(-mass, kind="stable")[:min(cap, h0.nsf)])
+    l2rows, sids, poss = (fields["l2row"], fields["bnd2_sid"],
+                          fields["pos_in_sf"])
+    L = len(l2rows)
+    rows_out = []
+    for g in hot.tolist():
+        U = l2rows[0][g]                         # [m2, mb2_1]
+        ids = np.asarray(sids[0][g])             # next-overlay ids
+        gg = g
+        for li in range(1, L):
+            sent = levels[li - 1].S2             # ids' sentinel value
+            gg = int(levels[li].sf_of_frag[gg])  # groups nest upward
+            p = np.asarray(poss[li])[ids]
+            M = l2rows[li][gg][jnp.asarray(p)]   # [mb, mb']
+            M = jnp.where(jnp.asarray(ids != sent)[:, None], M, INF)
+            U = _compose_minplus(U, M)
+            ids = np.asarray(sids[li][gg])
+        dense = jnp.full((U.shape[0], stp1), INF, U.dtype)
+        rows_out.append(dense.at[:, jnp.asarray(ids)].min(U))
+    R = len(rows_out)
+    res_rows = jnp.stack(
+        rows_out + [jnp.full((h0.m2, stp1), INF, jnp.float32)])
+    rmap = np.full(h0.nsf, R, np.int32)
+    rmap[hot] = np.arange(R, dtype=np.int32)
+    res_of_frag = rmap[h0.sf_of_frag.astype(np.int64)]
+    top = h0.sf_of_frag.astype(np.int64)
+    for li in range(1, L):
+        top = levels[li].sf_of_frag.astype(np.int64)[top]
+    return {
+        "fields": {"res_rows": res_rows,
+                   "res_of_frag": jnp.asarray(res_of_frag),
+                   "topgrp_of_frag": jnp.asarray(top.astype(np.int32))},
+        # planner sidecars: fragment -> resident row (-1: cold) and
+        # fragment -> TOP group (the exactness gate)
+        "res_frag": np.where(res_of_frag < R, res_of_frag,
+                             -1).astype(np.int32),
+        "topgrp_frag": top.astype(np.int32),
     }
 
 
 def resolve_hierarchy_levels(S: int, hierarchy_levels) -> int:
     """Normalize the ``hierarchy_levels`` build knob: "auto" switches
-    to the two-level overlay once S crosses hierarchy.AUTO_THRESHOLD;
-    explicit 1/2 is honored (2 degrades to 1 on an empty overlay)."""
+    off the dense overlay once S crosses hierarchy.AUTO_THRESHOLD (the
+    planner then deepens on its own until the top closure fits);
+    explicit 1..MAX_LEVELS is honored (degrading to 1 on an empty
+    overlay; the built depth plan_hierarchy returns is authoritative
+    when levels collapse early)."""
     if hierarchy_levels == "auto":
         hierarchy_levels = 2 if S > hierarchy.AUTO_THRESHOLD else 1
-    if hierarchy_levels not in (1, 2):
+    try:
+        lv = int(hierarchy_levels)
+    except (TypeError, ValueError):
         raise ValueError(
-            f"hierarchy_levels must be 1, 2 or 'auto': {hierarchy_levels}")
-    if hierarchy_levels == 2 and S == 0:
+            f"hierarchy_levels must be an int or 'auto': "
+            f"{hierarchy_levels!r}")
+    if not 1 <= lv <= hierarchy.MAX_LEVELS:
+        raise ValueError(
+            f"hierarchy_levels must be in 1..{hierarchy.MAX_LEVELS} "
+            f"or 'auto': {hierarchy_levels!r}")
+    if lv > 1 and S == 0:
         return 1
-    return int(hierarchy_levels)
+    return lv
 
 
 def _node_piece_addressing(plan: BuildPlan) -> tuple[np.ndarray,
@@ -554,32 +681,54 @@ def _node_piece_addressing(plan: BuildPlan) -> tuple[np.ndarray,
     return base, stride
 
 
+#: default resident pre-lift budget (MiB) when ``resident_mb="auto"``
+#: on a hierarchical index — sized so every road64k-scale group fits
+RESIDENT_MB_AUTO = 64.0
+
+
 def build_device_index_with_plan(
         ix: DislandIndex, *, force=None,
-        hierarchy_levels: int | str = "auto"
+        hierarchy_levels: int | str = "auto",
+        resident_mb: float | str = "auto"
         ) -> tuple[DeviceIndex, BuildPlan]:
     """Full from-scratch build: compose every stage, keep the plan
     around so refresh_index can run incrementally afterwards.
 
     ``hierarchy_levels`` picks the overlay closure: 1 = the dense
     [S+1, S+1] FW (unchanged, bit-identical to the pre-hierarchy
-    index), 2 = the two-level partition hierarchy (DESIGN.md §12),
-    "auto" = 2 once S crosses ``hierarchy.AUTO_THRESHOLD``.
+    index), N >= 2 = the N-level partition hierarchy (DESIGN.md
+    §12-13), "auto" = hierarchical once S crosses
+    ``hierarchy.AUTO_THRESHOLD``, deepening until the top closure fits
+    under it.  ``resident_mb`` budgets the epoch-resident pre-lifted
+    row cache on hierarchical indices ("auto" = RESIDENT_MB_AUTO; 0
+    disables).
     """
     plan = make_build_plan(ix)
-    plan.hierarchy_levels = resolve_hierarchy_levels(plan.S,
-                                                     hierarchy_levels)
-    if plan.hierarchy_levels == 2:
-        plan.hier = hierarchy.plan_hierarchy(plan)
+    lv = resolve_hierarchy_levels(plan.S, hierarchy_levels)
+    if lv >= 2:
+        plan.hier = hierarchy.plan_hierarchy(
+            plan, levels="auto" if hierarchy_levels == "auto" else lv)
+        # the planner may stop early on degenerate levels (or deepen,
+        # under "auto"): the built depth is authoritative
+        plan.hierarchy_levels = 1 + len(plan.hier)
+        plan.resident_mb = (RESIDENT_MB_AUTO
+                            if resident_mb == "auto"
+                            else float(resident_mb))
+    else:
+        plan.hierarchy_levels = 1
     frag_apsp, brow, frag_next = frag_stage(plan, force=force)
     super_weights(plan, np.asarray(frag_apsp))
-    if plan.hierarchy_levels == 2:
+    if plan.hierarchy_levels >= 2:
         hres = hier_super_stage(plan, force=force)
-        hier_fields = hres["fields"]
+        hier_fields = dict(hres["fields"])
+        rres = resident_stage(plan, hier_fields)
+        if rres is not None:
+            hier_fields.update(rres["fields"])
         d_super = jnp.full((1, 1), INF, jnp.float32)
         super_next = jnp.full((1, 1), -1, jnp.int32)
     else:
         hres = None
+        rres = None
         hier_fields = {}
         d_super, super_next = super_stage(plan, force=force)
     piece_flat, piece_next = piece_stage(plan, ix.g, force=force)
@@ -614,17 +763,37 @@ def build_device_index_with_plan(
     if hres is not None:
         dix.host_ov_slot = hres["ov_slot"]
         dix.host_l2_slot = hres["l2_slot"]
+        if rres is not None:
+            dix.host_res_frag = rres["res_frag"]
+            dix.host_topgrp_frag = rres["topgrp_frag"]
     else:
         dix.host_ov_slot = overlay_slot_table(plan)
     return dix, plan
 
 
 def build_device_index(ix: DislandIndex, *, force=None,
-                       hierarchy_levels: int | str = "auto"
+                       hierarchy_levels: int | str = "auto",
+                       resident_mb: float | str = "auto"
                        ) -> DeviceIndex:
     """Assemble padded tensors on host, run device APSP preprocessing."""
     return build_device_index_with_plan(
-        ix, force=force, hierarchy_levels=hierarchy_levels)[0]
+        ix, force=force, hierarchy_levels=hierarchy_levels,
+        resident_mb=resident_mb)[0]
+
+
+def index_fields_equal(a: DeviceIndex, b: DeviceIndex,
+                       names) -> dict:
+    """Per-field array equality between two indices, tuple-field aware
+    (per-level fields compare leaf-by-leaf).  Shared by the refresh
+    differential harnesses in serve.py and the tests."""
+    out = {}
+    for name in names:
+        la = jax.tree_util.tree_leaves(getattr(a, name))
+        lb = jax.tree_util.tree_leaves(getattr(b, name))
+        out[name] = (len(la) == len(lb) and all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(la, lb)))
+    return out
 
 
 def warmup_refresh(plan: BuildPlan, *, force=None) -> None:
@@ -636,10 +805,10 @@ def warmup_refresh(plan: BuildPlan, *, force=None) -> None:
     shapes = [(min(p, plan.k), plan.maxf, plan.maxf) for p in (4, 8)]
     shapes += [(8, int(cap), int(cap))
                for cap in np.unique(plan.piece_cap)]
-    if plan.hier is not None:
-        # dirty super-fragment batches refresh at these pow2 shapes
-        shapes += [(min(p, plan.hier.nsf), plan.hier.m2, plan.hier.m2)
-                   for p in (4, 8)]
+    if plan.hier:
+        # dirty group batches refresh at these pow2 shapes, per level
+        for h in plan.hier:
+            shapes += [(min(p, h.nsf), h.m2, h.m2) for p in (4, 8)]
     for shp in set(shapes):
         jax.block_until_ready(
             ops.fw_batch_next(jnp.full(shp, INF, jnp.float32),
@@ -790,55 +959,82 @@ def refresh_frag_stage(plan: BuildPlan, frag_apsp: jax.Array,
 def refresh_hier_stage(plan: BuildPlan, dix: DeviceIndex,
                        changed_slots: np.ndarray, undo: dict, *,
                        force=None) -> dict:
-    """Hierarchical twin of the dense overlay re-close (DESIGN.md §12):
-    re-run the super-fragment FW on the dirty super-fragments only.
+    """Hierarchical twin of the dense overlay re-close (DESIGN.md
+    §12-13): cascade the dirty-slot delta up the level ladder.
 
-    A changed level-1 slot dirties either one super-fragment's
-    adjacency block (both endpoints inside it) or a level-2 cross edge
-    (endpoints in different super-fragments) — nothing else, the same
-    block-diagonal structure the fragment refresh exploits one level
-    down.  The dirty batch pads to a power of two with repeats (same
-    idempotent-scatter trick as refresh_frag_stage), so the refreshed
-    rows are bit-identical to a from-scratch hier_super_stage; the
-    small dense level-2 closure is then re-run whole.  ``undo`` is
-    filled with rollback snapshots of the weight caches BEFORE any
-    mutation, so a failure later in the refresh can restore them.
+    At each level, a changed source slot dirties either one group's
+    adjacency block (both endpoints inside it — re-close those groups'
+    FW tiles, pow2-padded with repeats, bit-identical to a
+    from-scratch hier_super_stage) or a cross slot (a direct
+    next-level weight copy) — nothing else, the same block-diagonal
+    structure the fragment refresh exploits one level down.  The
+    *observed* next-level weight delta (l2_w before vs after) is what
+    propagates: the cascade stops at the first level whose boundary
+    weights came out unchanged, and every deeper table plus the top
+    closure carries over by reference — exactly the
+    no-overlay-change carry rule, applied per level.  ``undo`` is
+    filled with per-level rollback snapshots of the weight caches
+    BEFORE any mutation, so a failure later in the refresh can
+    restore them.
     """
-    hier = plan.hier
-    sl = hier.slot_sf[changed_slots]
-    sfs = np.unique(sl[sl >= 0]).astype(np.int64)
-    undo["sfs"] = sfs
-    undo["sf_adj"] = hier.sf_adj[sfs].copy()
-    undo["l2_w"] = hier.l2_w.copy()
-    sf_closure, sf_next, l2row = dix.sf_closure, dix.sf_next, dix.l2row
-    if sfs.size:
-        hierarchy.sf_adj_fill(hier, plan, sfs=sfs)
-        d = int(sfs.size)
-        p = min(_pow2(d, floor=4), hier.nsf)
-        pad = np.concatenate([sfs, np.full(p - d, sfs[0], np.int64)]) \
-            if p > d else sfs
-        jpad = jnp.asarray(pad)
-        blocks, nexts = ops.fw_batch_next(jnp.asarray(hier.sf_adj[pad]),
-                                          force=force)
-        sf_closure = sf_closure.at[jpad].set(blocks)
-        sf_next = sf_next.at[jpad].set(nexts)
-        rows = hierarchy.l2row_from(blocks, hier.bnd2_pos[pad],
-                                    hier.bnd2_valid[pad])
-        l2row = l2row.at[jpad].set(rows)
-        hierarchy.hier_weights(hier, plan, np.asarray(blocks[:d]),
-                               sfs=sfs)
+    levels = plan.hier
+    closures = list(dix.sf_closure)
+    nexts = list(dix.sf_next)
+    rows_t = list(dix.l2row)
+    l2_slots = list(dix.host_l2_slot)
+    undo["levels"] = []
+    cur = changed_slots
+    w_src = plan.sup_w
+    d2, d2_next = dix.d2, dix.d2_next
+    dirty_top = False
+    for li, h in enumerate(levels):
+        sl = h.slot_sf[cur]
+        sfs = np.unique(sl[sl >= 0]).astype(np.int64)
+        lw_old = h.l2_w.copy()
+        undo["levels"].append({"hier": h, "sfs": sfs,
+                               "sf_adj": h.sf_adj[sfs].copy(),
+                               "l2_w": lw_old})
+        if sfs.size:
+            hierarchy.sf_adj_fill(h, w_src, sfs=sfs)
+            d = int(sfs.size)
+            p = min(_pow2(d, floor=4), h.nsf)
+            pad = np.concatenate([sfs, np.full(p - d, sfs[0],
+                                               np.int64)]) \
+                if p > d else sfs
+            jpad = jnp.asarray(pad)
+            blocks, nx = ops.fw_batch_next(jnp.asarray(h.sf_adj[pad]),
+                                           force=force)
+            closures[li] = closures[li].at[jpad].set(blocks)
+            nexts[li] = nexts[li].at[jpad].set(nx)
+            r = hierarchy.l2row_from(blocks, h.bnd2_pos[pad],
+                                     h.bnd2_valid[pad])
+            rows_t[li] = rows_t[li].at[jpad].set(r)
+            hierarchy.hier_weights(h, np.asarray(blocks[:d]), w_src,
+                                   sfs=sfs)
+        else:
+            # only cross-group slots changed at this level: no FW,
+            # just the O(cross) next-level weight copy
+            hierarchy.hier_weights(
+                h, np.empty((0, h.m2, h.m2), np.float32), w_src,
+                sfs=sfs)
+        l2_slots[li] = hierarchy.l2_slot_map(h)
+        nxt_changed = np.nonzero(h.l2_w != lw_old)[0].astype(np.int64)
+        if nxt_changed.size == 0:
+            # the next overlay's weights are untouched: closures AND
+            # witnesses above this level are still exact, carry them
+            break
+        cur = nxt_changed
+        w_src = h.l2_w
     else:
-        # only cross-super-fragment slots changed: no FW, just the
-        # O(cross) level-2 weight rewrite inside hier_weights
-        hierarchy.hier_weights(
-            hier, plan, np.empty((0, hier.m2, hier.m2), np.float32),
-            sfs=sfs)
-    d2, d2_next = hierarchy.l2_stage(hier, force=force)
+        dirty_top = True
+    if dirty_top:
+        d2, d2_next = hierarchy.l2_stage(levels[-1], force=force)
     return {
-        "fields": {"sf_closure": sf_closure, "sf_next": sf_next,
-                   "l2row": l2row, "d2": d2, "d2_next": d2_next},
+        "fields": {"sf_closure": tuple(closures),
+                   "sf_next": tuple(nexts), "l2row": tuple(rows_t),
+                   "d2": d2, "d2_next": d2_next},
         "ov_slot": hierarchy.ov_slot_map(plan),
-        "l2_slot": hierarchy.l2_slot_map(hier),
+        "l2_slot": l2_slots,
     }
 
 
@@ -941,22 +1137,36 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
         changed = slot_w_old != slot_w_new
         hier_fields: dict = {}
         l2_slot = getattr(dix, "host_l2_slot", None)
+        res_frag = getattr(dix, "host_res_frag", None)
+        topgrp_frag = getattr(dix, "host_topgrp_frag", None)
         if changed.any():
-            if plan.hierarchy_levels == 2:
+            if plan.hierarchy_levels >= 2:
                 hres = refresh_hier_stage(plan, dix,
                                           touched_slots[changed],
                                           hier_undo, force=force)
-                hier_fields = hres["fields"]
+                hier_fields = dict(hres["fields"])
                 ov_slot = hres["ov_slot"]
                 l2_slot = hres["l2_slot"]
                 d_super, super_next = dix.d_super, dix.super_next
+                # re-lift the resident rows against the refreshed
+                # per-level tables (same deterministic stage as the
+                # build, so refresh == rebuild stays array-equal)
+                rbase = {name: hier_fields.get(name, getattr(dix, name))
+                         for name in ("l2row", "bnd2_sid", "pos_in_sf",
+                                      "d2")}
+                rres = resident_stage(plan, rbase)
+                if rres is not None:
+                    hier_fields.update(rres["fields"])
+                    res_frag = rres["res_frag"]
+                    topgrp_frag = rres["topgrp_frag"]
             else:
                 d_super, super_next = super_stage(plan, force=force)
                 ov_slot = overlay_slot_table(plan)
         else:
             # no overlay weight changed: closure AND witnesses are
             # still exact, so the path tables carry over too
-            # (hier_fields stays empty — per-level tables carry too)
+            # (hier_fields stays empty — per-level tables and the
+            # resident rows carry too)
             d_super, super_next = dix.d_super, dix.super_next
             ov_slot = getattr(dix, "host_ov_slot", None)
         timings["super_fw"] = time.perf_counter() - t0
@@ -985,9 +1195,9 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
         plan.frag_adj[upd.frag_fi, upd.frag_pv,
                       upd.frag_pu] = frag_w_before
         plan.sup_w[:] = sup_w_before
-        if hier_undo:
-            plan.hier.sf_adj[hier_undo["sfs"]] = hier_undo["sf_adj"]
-            plan.hier.l2_w[:] = hier_undo["l2_w"]
+        for lv in hier_undo.get("levels", []):
+            lv["hier"].sf_adj[lv["sfs"]] = lv["sf_adj"]
+            lv["hier"].l2_w[:] = lv["l2_w"]
         raise
 
     # batch direction: against the edges' previous weights when the
@@ -1011,6 +1221,9 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
         new_dix.host_ov_slot = ov_slot
     if l2_slot is not None:
         new_dix.host_l2_slot = l2_slot
+    if res_frag is not None:
+        new_dix.host_res_frag = res_frag
+        new_dix.host_topgrp_frag = topgrp_frag
     stats = RefreshStats(
         n_updates=int(np.asarray(u).size),
         n_dirty_frags=int(upd.dirty_frags.size), n_frags=plan.k,
@@ -1055,53 +1268,79 @@ def _same_dra_dist(dix: DeviceIndex, s, t, ds, dt):
 
 def _overlay_size(dix: DeviceIndex) -> int:
     """S + 1: the witness packing stride and the sentinel super id + 1.
-    Hierarchical indices carry it as sf_of's length (their d_super is a
-    [1, 1] dummy); dense indices as d_super's side."""
-    return (dix.sf_of.shape[0] if dix.sf_of.shape[0] > 1
+    Hierarchical indices carry it as the bottom sf_of's length (their
+    d_super is a [1, 1] dummy); dense indices as d_super's side."""
+    return (dix.sf_of[0].shape[0] if len(dix.sf_of)
             else dix.d_super.shape[0])
 
 
-def _lift_l2(dix: DeviceIndex, row, sf, p2):
-    """Lift a fragment-boundary row to the level-2 boundary set:
-    r2[q, c] = min over slots (i, j) with bnd2_sid == c of
-    row[q, i] + l2row[sf_i, p2_i, j] — the hierarchical analog of the
-    dense path's scatter into SUPER coordinates.  Chunked over the
-    boundary axis so the gathered block stays [q, 8, mb2] (mb2 can be
-    hundreds at road64k scale; the full [q, mb, mb2] cube would be
-    hundreds of MB per batch)."""
-    q, mb = row.shape
-    c = min(8, mb)                       # mb is padded to a multiple of 8
-    s2p1 = dix.d2.shape[0]
-    qi = jnp.arange(q, dtype=jnp.int32)[:, None, None]
+def _hier_leg(dix: DeviceIndex, li: int, row_s, grp_s, pos_s,
+              row_t, grp_t, pos_t):
+    """Same-group leg at grouping level ``li``: min over slot pairs
+    (i, j) in the SAME level-li group of
+    row_s[i] + sf_closure[li][g, pos_i, pos_j] + row_t[j], chunked
+    over the s-axis so the gathered block stays [q, 8, width]."""
+    q, mbs = row_s.shape
+    mbt = row_t.shape[1]
+    c = min(8, mbs)                    # widths are padded to mult of 8
 
-    def body(i, r2):
-        row_c = jax.lax.dynamic_slice_in_dim(row, i * c, c, axis=1)
-        sf_c = jax.lax.dynamic_slice_in_dim(sf, i * c, c, axis=1)
-        p_c = jax.lax.dynamic_slice_in_dim(p2, i * c, c, axis=1)
-        l2_c = dix.l2row[sf_c, p_c]              # [q, c, mb2]
-        sid_c = dix.bnd2_sid[sf_c]
-        return r2.at[qi, sid_c].min(row_c[:, :, None] + l2_c)
+    def body(i, acc):
+        r_c = jax.lax.dynamic_slice_in_dim(row_s, i * c, c, axis=1)
+        g_c = jax.lax.dynamic_slice_in_dim(grp_s, i * c, c, axis=1)
+        p_c = jax.lax.dynamic_slice_in_dim(pos_s, i * c, c, axis=1)
+        blk = dix.sf_closure[li][g_c[:, :, None], p_c[:, :, None],
+                                 pos_t[:, None, :]]      # [q, c, mbt]
+        same = g_c[:, :, None] == grp_t[:, None, :]
+        cand = jnp.min(jnp.where(same, r_c[:, :, None] + blk, INF),
+                       axis=1)
+        return jnp.minimum(acc, cand)
+
+    tmp = jax.lax.fori_loop(0, mbs // c, body,
+                            jnp.full((q, mbt), INF, row_s.dtype))
+    return jnp.min(tmp + row_t, axis=1)
+
+
+def _lift_compact(dix: DeviceIndex, li: int, row, grp, pos):
+    """Lift a compact boundary row one level: out[q, j] = min_b
+    row[q, b] + l2row[li][grp_b, pos_b, j].  All valid slots of one
+    side share one group per level (groups nest), so the output stays
+    COMPACT — its next-level ids are that group's bnd2_sid row, read
+    by the caller — instead of scattering to a dense [q, S_{l+1}+1]
+    row at every level.  Chunked so the gathered block stays
+    [q, 8, mb']."""
+    q, mb = row.shape
+    c = min(8, mb)
+    mbn = dix.l2row[li].shape[2]
+
+    def body(i, acc):
+        r_c = jax.lax.dynamic_slice_in_dim(row, i * c, c, axis=1)
+        g_c = jax.lax.dynamic_slice_in_dim(grp, i * c, c, axis=1)
+        p_c = jax.lax.dynamic_slice_in_dim(pos, i * c, c, axis=1)
+        l2_c = dix.l2row[li][g_c, p_c]           # [q, c, mb']
+        return jnp.minimum(acc,
+                           jnp.min(r_c[:, :, None] + l2_c, axis=1))
 
     return jax.lax.fori_loop(0, mb // c, body,
-                             jnp.full((q, s2p1), INF, row.dtype))
+                             jnp.full((q, mbn), INF, row.dtype))
 
 
-def _l2_src_of(dix: DeviceIndex, row, b, sf, p2, wc):
-    """Witness recovery for the level-2 leg: the level-1 super id whose
-    lifted contribution achieved r2[q, wc[q]] (same chunked schedule
-    as _lift_l2, carrying a running argmin; exact f32 re-comparison)."""
+def _lift_src_of(dix: DeviceIndex, li: int, row, ids, grp, pos, wc):
+    """Witness recovery for one lift: the level-li id whose lifted
+    contribution achieved the next-level row at target id ``wc`` (same
+    chunked schedule as _lift_compact, carrying a running argmin;
+    exact f32 re-comparison)."""
     q, mb = row.shape
     c = min(8, mb)
 
     def body(i, carry):
         best, besti = carry
-        row_c = jax.lax.dynamic_slice_in_dim(row, i * c, c, axis=1)
-        sf_c = jax.lax.dynamic_slice_in_dim(sf, i * c, c, axis=1)
-        p_c = jax.lax.dynamic_slice_in_dim(p2, i * c, c, axis=1)
-        l2_c = dix.l2row[sf_c, p_c]
-        sid_c = dix.bnd2_sid[sf_c]
+        r_c = jax.lax.dynamic_slice_in_dim(row, i * c, c, axis=1)
+        g_c = jax.lax.dynamic_slice_in_dim(grp, i * c, c, axis=1)
+        p_c = jax.lax.dynamic_slice_in_dim(pos, i * c, c, axis=1)
+        l2_c = dix.l2row[li][g_c, p_c]
+        sid_c = dix.bnd2_sid[li][g_c]
         m = sid_c == wc[:, None, None]
-        contrib = jnp.min(jnp.where(m, row_c[:, :, None] + l2_c, INF),
+        contrib = jnp.min(jnp.where(m, r_c[:, :, None] + l2_c, INF),
                           axis=2)                # [q, c]
         cmin = jnp.min(contrib, axis=1)
         loc = jnp.argmin(contrib, axis=1).astype(jnp.int32)
@@ -1112,109 +1351,191 @@ def _l2_src_of(dix: DeviceIndex, row, b, sf, p2, wc):
     _best, besti = jax.lax.fori_loop(
         0, mb // c, body,
         (jnp.full((q,), INF, row.dtype), jnp.zeros((q,), jnp.int32)))
-    return jnp.take_along_axis(b, besti[:, None], axis=1)[:, 0]
+    return jnp.take_along_axis(ids, besti[:, None], axis=1)[:, 0]
+
+
+def _scatter_top(dix: DeviceIndex, row, ids):
+    """Scatter a compact top-level row into dense d2 coordinates."""
+    q = row.shape[0]
+    stp1 = dix.d2.shape[0]
+    qi = jnp.arange(q, dtype=jnp.int32)[:, None]
+    return jnp.full((q, stp1), INF, row.dtype).at[qi, ids].min(row)
+
+
+def _top_mid_gather(dix: DeviceIndex, row_s, ids_s, row_t, ids_t):
+    """Contract compact top rows against d2 WITHOUT scattering:
+
+      mid = min_{x,y} row_s[x] + d2[ids_s[x], ids_t[y]] + row_t[y]
+
+    The scattered row is +inf outside its own top-group boundary
+    columns, so gathering d2 at just [ids_s x ids_t] is bit-identical
+    to scatter + full minplus_twoside while touching mb_s*mb_t of the
+    (S_top+1)^2 closure (~8x less on road64k).  Sentinel slots carry
+    id S_top, which indexes d2's +inf row/col — no masking needed.
+    Same chunked-gather idiom as the dense CPU witness path, but with
+    the largest chunk that divides the (pad_to-8) width — bigger
+    gather blocks amortize XLA's per-slice overhead (~25% on the
+    road64k top width of 552)."""
+    q, mb = row_s.shape
+    c = next(cc for cc in (24, 16, 8, mb) if mb % cc == 0)
+
+    def body(i, acc):
+        r_c = jax.lax.dynamic_slice_in_dim(row_s, i * c, c, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(ids_s, i * c, c, axis=1)
+        blk = dix.d2[b_c[:, :, None], ids_t[:, None, :]]  # [q, c, mb_t]
+        return jnp.minimum(acc,
+                           jnp.min(r_c[:, :, None] + blk, axis=1))
+
+    tmp = jax.lax.fori_loop(
+        0, mb // c, body,
+        jnp.full((q, row_t.shape[1]), INF, row_s.dtype))
+    return jnp.min(tmp + row_t, axis=1)
 
 
 def _combine_mid_h(dix: DeviceIndex, row_s, bs, row_t, bt, *,
                    force=None):
-    """Hierarchical combine (hierarchy_levels=2, DESIGN.md §12):
+    """Hierarchical combine (hierarchy_levels=N, DESIGN.md §12-13):
 
-      mid = min_{x,y} row_s[x] + OD(x, y) + row_t[y],
-      OD(x, y) = min( sf_closure[sf, x, y]  if sf(x) == sf(y),
-                      min_{a,b} l2row[x,a] + D2[a,b] + l2row[y,b] )
+      mid = min_{x,y} row_s[x] + OD(x, y) + row_t[y]
 
-    computed as (a) a b1-chunked same-super-fragment gather (peak
-    intermediate [q, 8, mb], same schedule as the dense CPU path) plus
-    (b) a level-2 lift of both rows contracted by the SAME fused
-    minplus_twoside kernel the dense path uses — just against the
-    small [S2+1, S2+1] closure instead of [S+1, S+1].
+    where OD decomposes per level: either both sides sit in the same
+    level-l group (its resident closure answers exactly — the va
+    legs), or the route crosses every level's boundary and the TOP
+    closure answers against both rows lifted level by level (the vb
+    leg).  On an accelerator the vb leg scatters both rows dense and
+    runs the SAME fused minplus_twoside kernel as the dense path; on
+    CPU it stays compact and gathers only each side's own top-group
+    boundary columns of d2 (_top_mid_gather — bit-identical, the
+    scattered row is +inf everywhere else).  The lift state stays
+    compact ([q, width] + ids) until the top; one grouping level
+    reproduces the two-level combine bit-for-bit (min re-association
+    is exact in f32).
     """
-    sfs, p2s = dix.sf_of[bs], dix.pos_in_sf[bs]
-    sft, p2t = dix.sf_of[bt], dix.pos_in_sf[bt]
-    q, mb = row_s.shape
-    c = min(8, mb)                       # mb is padded to a multiple of 8
-
-    def body(i, acc):
-        r_c = jax.lax.dynamic_slice_in_dim(row_s, i * c, c, axis=1)
-        sf_c = jax.lax.dynamic_slice_in_dim(sfs, i * c, c, axis=1)
-        p_c = jax.lax.dynamic_slice_in_dim(p2s, i * c, c, axis=1)
-        blk = dix.sf_closure[sf_c[:, :, None], p_c[:, :, None],
-                             p2t[:, None, :]]            # [q, c, mb]
-        same = sf_c[:, :, None] == sft[:, None, :]
-        cand = jnp.min(jnp.where(same, r_c[:, :, None] + blk, INF),
-                       axis=1)
-        return jnp.minimum(acc, cand)
-
-    tmp = jax.lax.fori_loop(0, mb // c, body,
-                            jnp.full((q, mb), INF, row_s.dtype))
-    va = jnp.min(tmp + row_t, axis=1)
-    rs2 = _lift_l2(dix, row_s, sfs, p2s)
-    rt2 = _lift_l2(dix, row_t, sft, p2t)
-    vb = ops.minplus_twoside(rs2, dix.d2, rt2, force=force)
+    L = len(dix.sf_of)
+    q = row_s.shape[0]
+    ids_s, ids_t = bs, bt
+    va = jnp.full((q,), INF, row_s.dtype)
+    for li in range(L):
+        grp_s, pos_s = dix.sf_of[li][ids_s], dix.pos_in_sf[li][ids_s]
+        grp_t, pos_t = dix.sf_of[li][ids_t], dix.pos_in_sf[li][ids_t]
+        va = jnp.minimum(va, _hier_leg(dix, li, row_s, grp_s, pos_s,
+                                       row_t, grp_t, pos_t))
+        new_s = _lift_compact(dix, li, row_s, grp_s, pos_s)
+        new_t = _lift_compact(dix, li, row_t, grp_t, pos_t)
+        # slot 0 is valid-first by construction, so its group IS the
+        # side's group (sentinel-only rows land on the sentinel group,
+        # whose bnd2_sid row is all-sentinel and whose rows are +inf)
+        ids_s = dix.bnd2_sid[li][grp_s[:, 0]]
+        ids_t = dix.bnd2_sid[li][grp_t[:, 0]]
+        row_s, row_t = new_s, new_t
+    if ops.use_pallas(force):
+        vb = ops.minplus_twoside(_scatter_top(dix, row_s, ids_s),
+                                 dix.d2,
+                                 _scatter_top(dix, row_t, ids_t),
+                                 force=force)
+    else:
+        vb = _top_mid_gather(dix, row_s, ids_s, row_t, ids_t)
     return jnp.minimum(va, vb)
 
 
-def _combine_mid_h_w(dix: DeviceIndex, row_s, bs, row_t, bt, *,
-                     force=None):
-    """Witness variant of _combine_mid_h -> (mid, wx, wy): the winning
-    level-1 SUPER pair under the hierarchical overlay metric.  The
-    same-super-fragment leg carries its argmin like the dense CPU
-    schedule; the level-2 leg gets the winning boundary pair (c, d)
-    from the fused argmin kernel and resolves it back to level-1 ids
-    by re-finding, per side, the row entry whose lift achieved
-    rs2[c] / rt2[d] (an O(q * mb) masked argmin — exact because the
-    lift is a min of f32 sums re-comparable bit-for-bit).
-    """
-    sfs, p2s = dix.sf_of[bs], dix.pos_in_sf[bs]
-    sft, p2t = dix.sf_of[bt], dix.pos_in_sf[bt]
-    q, mb = row_s.shape
-    c = min(8, mb)
+def _hier_leg_w(dix: DeviceIndex, li: int, row_s, ids_s, grp_s, pos_s,
+                row_t, ids_t, grp_t, pos_t):
+    """_hier_leg carrying its argmin -> (va, xa, ya) with the winning
+    pair expressed as level-li overlay ids."""
+    q, mbs = row_s.shape
+    mbt = row_t.shape[1]
+    c = min(8, mbs)
 
     def body(i, carry):
         acc, accb = carry
         r_c = jax.lax.dynamic_slice_in_dim(row_s, i * c, c, axis=1)
-        sf_c = jax.lax.dynamic_slice_in_dim(sfs, i * c, c, axis=1)
-        p_c = jax.lax.dynamic_slice_in_dim(p2s, i * c, c, axis=1)
-        blk = dix.sf_closure[sf_c[:, :, None], p_c[:, :, None],
-                             p2t[:, None, :]]
-        same = sf_c[:, :, None] == sft[:, None, :]
+        g_c = jax.lax.dynamic_slice_in_dim(grp_s, i * c, c, axis=1)
+        p_c = jax.lax.dynamic_slice_in_dim(pos_s, i * c, c, axis=1)
+        blk = dix.sf_closure[li][g_c[:, :, None], p_c[:, :, None],
+                                 pos_t[:, None, :]]
+        same = g_c[:, :, None] == grp_t[:, None, :]
         cube = jnp.where(same, r_c[:, :, None] + blk, INF)
         cand = jnp.min(cube, axis=1)
         hit = cube == cand[:, None, :]
         loc = jnp.min(jnp.where(
             hit, jax.lax.broadcasted_iota(jnp.int32, cube.shape, 1),
-            jnp.int32(mb)), axis=1)
+            jnp.int32(mbs)), axis=1)
         better = cand < acc
         return (jnp.where(better, cand, acc),
                 jnp.where(better, i * c + loc, accb))
 
-    acc0 = jnp.full((q, mb), INF, row_s.dtype)
-    accb0 = jnp.full((q, mb), -1, jnp.int32)
-    acc, accb = jax.lax.fori_loop(0, mb // c, body, (acc0, accb0))
+    acc0 = jnp.full((q, mbt), INF, row_s.dtype)
+    accb0 = jnp.full((q, mbt), -1, jnp.int32)
+    acc, accb = jax.lax.fori_loop(0, mbs // c, body, (acc0, accb0))
     tmp = acc + row_t
     va = jnp.min(tmp, axis=1)
     hit = tmp == va[:, None]
-    pos_t = jnp.min(jnp.where(
-        hit, jnp.arange(mb, dtype=jnp.int32)[None, :], jnp.int32(mb)),
+    pos_tw = jnp.min(jnp.where(
+        hit, jnp.arange(mbt, dtype=jnp.int32)[None, :], jnp.int32(mbt)),
         axis=1)
-    pos_t_c = jnp.clip(pos_t, 0, mb - 1)
-    pos_s = jnp.take_along_axis(accb, pos_t_c[:, None], axis=1)[:, 0]
+    pos_tc = jnp.clip(pos_tw, 0, mbt - 1)
+    pos_sw = jnp.take_along_axis(accb, pos_tc[:, None], axis=1)[:, 0]
     xa = jnp.take_along_axis(
-        bs, jnp.clip(pos_s, 0, mb - 1)[:, None], axis=1)[:, 0]
-    ya = jnp.take_along_axis(bt, pos_t_c[:, None], axis=1)[:, 0]
+        ids_s, jnp.clip(pos_sw, 0, mbs - 1)[:, None], axis=1)[:, 0]
+    ya = jnp.take_along_axis(ids_t, pos_tc[:, None], axis=1)[:, 0]
+    return va, xa, ya
 
-    rs2 = _lift_l2(dix, row_s, sfs, p2s)
-    rt2 = _lift_l2(dix, row_t, sft, p2t)
-    vb, wc, wd = ops.minplus_twoside_argmin(rs2, dix.d2, rt2,
-                                            force=force)
-    xb = _l2_src_of(dix, row_s, bs, sfs, p2s, wc)
-    yb = _l2_src_of(dix, row_t, bt, sft, p2t, wd)
 
-    use_a = va <= vb
-    mid = jnp.minimum(va, vb)
+def _combine_mid_h_w(dix: DeviceIndex, row_s, bs, row_t, bt, *,
+                     force=None):
+    """Witness variant of _combine_mid_h -> (mid, wx, wy): the winning
+    level-1 SUPER pair under the hierarchical overlay metric.  Each
+    same-group leg carries its argmin; the top leg gets the winning
+    boundary pair (c, d) from the fused argmin kernel and resolves it
+    back DOWN the ladder: at each level the winning id either comes
+    from that level's same-group leg (if it won) or is un-lifted one
+    level by re-finding the row entry whose lift achieved the
+    next-level row (an O(q * width) masked argmin — exact because the
+    lift is a min of f32 sums re-comparable bit-for-bit).
+    """
+    L = len(dix.sf_of)
+    q = row_s.shape[0]
+    ids_s, ids_t = bs, bt
+    states = []
+    vas, legx, legy = [], [], []
+    for li in range(L):
+        grp_s, pos_s = dix.sf_of[li][ids_s], dix.pos_in_sf[li][ids_s]
+        grp_t, pos_t = dix.sf_of[li][ids_t], dix.pos_in_sf[li][ids_t]
+        states.append((row_s, ids_s, grp_s, pos_s,
+                       row_t, ids_t, grp_t, pos_t))
+        va, xa, ya = _hier_leg_w(dix, li, row_s, ids_s, grp_s, pos_s,
+                                 row_t, ids_t, grp_t, pos_t)
+        vas.append(va)
+        legx.append(xa)
+        legy.append(ya)
+        row_s = _lift_compact(dix, li, row_s, grp_s, pos_s)
+        row_t = _lift_compact(dix, li, row_t, grp_t, pos_t)
+        ids_s = dix.bnd2_sid[li][grp_s[:, 0]]
+        ids_t = dix.bnd2_sid[li][grp_t[:, 0]]
+    vb, wc, wd = ops.minplus_twoside_argmin(
+        _scatter_top(dix, row_s, ids_s), dix.d2,
+        _scatter_top(dix, row_t, ids_t), force=force)
+    mid = vb
+    for va in vas:
+        mid = jnp.minimum(mid, va)
+    # winner selection, lowest level first (same tie preference as the
+    # two-level code: a same-group leg beats the lifted leg)
+    taken = jnp.zeros((q,), bool)
+    wins = []
+    for va in vas:
+        w = (va == mid) & ~taken
+        taken = taken | w
+        wins.append(w)
+    cur_x, cur_y = wc, wd
+    for li in range(L - 1, -1, -1):
+        (r_s, i_s, g_s, p_s, r_t, i_t, g_t, p_t) = states[li]
+        dx = _lift_src_of(dix, li, r_s, i_s, g_s, p_s, cur_x)
+        dy = _lift_src_of(dix, li, r_t, i_t, g_t, p_t, cur_y)
+        cur_x = jnp.where(wins[li], legx[li], dx)
+        cur_y = jnp.where(wins[li], legy[li], dy)
     fin = jnp.isfinite(mid)
-    wx = jnp.where(fin, jnp.where(use_a, xa, xb), -1)
-    wy = jnp.where(fin, jnp.where(use_a, ya, yb), -1)
+    wx = jnp.where(fin, cur_x, -1)
+    wy = jnp.where(fin, cur_y, -1)
     return mid, wx, wy
 
 
@@ -1222,14 +1543,14 @@ def _combine_mid(dix: DeviceIndex, row_s, bs, row_t, bt, *, force=None):
     """combine = min_{b1,b2} row_s[b1] + D_super[bs[b1], bt[b2]]
     + row_t[b2] without a [q, mb, mb] intermediate.
 
-    Hierarchical indices (sf_of longer than the [1] dummy — a static
-    trace-time shape fact) route to _combine_mid_h.  Dense indices:
+    Hierarchical indices (non-empty sf_of tuple — a static trace-time
+    treedef fact) route to _combine_mid_h.  Dense indices:
     TPU: scatter-min the boundary rows into SUPER coordinates (one
     O(q*mb) scatter each) and run the fused two-sided tropical kernel
     against the resident D_super.  CPU/ref: chunk the b1 axis so the
     gathered block never exceeds [q, 8, mb].
     """
-    if dix.sf_of.shape[0] > 1:
+    if len(dix.sf_of):
         return _combine_mid_h(dix, row_s, bs, row_t, bt, force=force)
     if ops.use_pallas(force):
         s1 = dix.d_super.shape[0]
@@ -1260,7 +1581,7 @@ def _combine_mid_w(dix: DeviceIndex, row_s, bs, row_t, bt, *,
     +inf).  Same two layouts as the distance path: fused argmin kernel
     against the scattered rows on TPU, b1-chunked gather on CPU;
     hierarchical indices route to _combine_mid_h_w."""
-    if dix.sf_of.shape[0] > 1:
+    if len(dix.sf_of):
         return _combine_mid_h_w(dix, row_s, bs, row_t, bt, force=force)
     if ops.use_pallas(force):
         s1 = dix.d_super.shape[0]
@@ -1383,6 +1704,81 @@ def serve_cross_w(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
     return d, wit.astype(jnp.int32)
 
 
+def _lift_res(dix: DeviceIndex, row, pos, ridx, cols=None):
+    """Resident lift: rs[q, c] = min_b row[q, b] +
+    res_rows[ridx, pos_b, c] — the whole per-level lift ladder
+    collapsed into one chunked gather against the pre-composed rows.
+
+    With ``cols`` (int32 [q, w]) the output is restricted to those
+    d2 columns per query instead of the full S_top+1 width — the CPU
+    path passes each endpoint's own top-group boundary ids, cutting
+    the gather traffic to match _top_mid_gather's contraction."""
+    q, mb = row.shape
+    c = min(8, mb)
+    stp1 = dix.res_rows.shape[2]
+
+    def body_full(i, acc):
+        r_c = jax.lax.dynamic_slice_in_dim(row, i * c, c, axis=1)
+        p_c = jax.lax.dynamic_slice_in_dim(pos, i * c, c, axis=1)
+        blk = dix.res_rows[ridx[:, None], p_c]   # [q, c, S_top+1]
+        return jnp.minimum(acc,
+                           jnp.min(r_c[:, :, None] + blk, axis=1))
+
+    def body_cols(i, acc):
+        r_c = jax.lax.dynamic_slice_in_dim(row, i * c, c, axis=1)
+        p_c = jax.lax.dynamic_slice_in_dim(pos, i * c, c, axis=1)
+        blk = dix.res_rows[ridx[:, None, None], p_c[:, :, None],
+                           cols[:, None, :]]     # [q, c, w]
+        return jnp.minimum(acc,
+                           jnp.min(r_c[:, :, None] + blk, axis=1))
+
+    width = stp1 if cols is None else cols.shape[1]
+    body = body_full if cols is None else body_cols
+    return jax.lax.fori_loop(0, mb // c, body,
+                             jnp.full((q, width), INF, row.dtype))
+
+
+def serve_cross_res(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
+                    force=None) -> jax.Array:
+    """Planner bucket 4 (DESIGN.md §13): the resident fast path for hot
+    cross-top-group queries.  Both endpoints' fragments must be in
+    RESIDENT level-1 groups and in DIFFERENT top-level groups (the
+    planner guarantees both) — then the route must touch the top
+    boundary, every confined prefix is pre-composed in res_rows, and
+    the whole combine is one contraction against d2: a fused
+    minplus_twoside on an accelerator, or a gather restricted to each
+    endpoint's own top-group boundary columns on CPU (a route's first
+    top-boundary contact lies in its endpoint's own top group — the
+    confined prefix up to it is exactly what res_rows pre-compose —
+    so the restriction is exact).  The same value as the full lift up
+    to f32 re-association (the resident rows pre-add the per-level
+    legs); exact in the reals, validated against the oracle like
+    every other bucket."""
+    us, ut = dix.agent_of[s], dix.agent_of[t]
+    ds, dt = dix.dist_to_agent[s], dix.dist_to_agent[t]
+    fs, ft = dix.frag_of[us], dix.frag_of[ut]
+    ps, pt = dix.pos_in_frag[us], dix.pos_in_frag[ut]
+    row_s = dix.brow[fs, ps]                     # [q, mb]
+    row_t = dix.brow[ft, pt]
+    bs, bt = dix.bnd_super[fs], dix.bnd_super[ft]
+    pos_s = dix.pos_in_sf[0][bs]
+    pos_t = dix.pos_in_sf[0][bt]
+    if ops.use_pallas(force):
+        rs = _lift_res(dix, row_s, pos_s, dix.res_of_frag[fs])
+        rt = _lift_res(dix, row_t, pos_t, dix.res_of_frag[ft])
+        mid = ops.minplus_twoside(rs, dix.d2, rt, force=force)
+    else:
+        ids_s = dix.bnd2_sid[-1][dix.topgrp_of_frag[fs]]
+        ids_t = dix.bnd2_sid[-1][dix.topgrp_of_frag[ft]]
+        rs = _lift_res(dix, row_s, pos_s, dix.res_of_frag[fs],
+                       cols=ids_s)
+        rt = _lift_res(dix, row_t, pos_t, dix.res_of_frag[ft],
+                       cols=ids_t)
+        mid = _top_mid_gather(dix, rs, ids_s, rt, ids_t)
+    d = ds + mid + dt
+    return jnp.where((fs >= 0) & (ft >= 0), d, INF)
+
+
 def serve_step(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
                force=None) -> jax.Array:
     """Batched exact distance queries: s, t int32 [q] -> f32 [q].
@@ -1418,20 +1814,33 @@ def serve_step_w(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
 def _overlay_row_h(dix: DeviceIndex, rs: jax.Array, *,
                    force=None) -> jax.Array:
     """Exact overlay distances from a scattered source row rs [S+1] to
-    EVERY overlay node, through the hierarchy: per-super-fragment
-    (min,+) against the resident closures for the within-sf leg, one
-    small vector (x) matrix product against D2 for the cross leg."""
-    members = dix.sf_members                     # [nsf+1, m2] (S = pad)
-    r = rs[members]                              # [nsf+1, m2]
-    within = jnp.min(r[:, :, None] + dix.sf_closure, axis=1)
-    lift = jnp.min(r[:, :, None] + dix.l2row, axis=1)   # [nsf+1, mb2]
-    s2p1 = dix.d2.shape[0]
-    rs2 = jnp.full((s2p1,), INF, rs.dtype).at[dix.bnd2_sid].min(lift)
-    z2 = ops.minplus(rs2[None, :], dix.d2, force=force)[0]  # [S2+1]
-    back = z2[dix.bnd2_sid]                      # [nsf+1, mb2]
-    via = jnp.min(dix.l2row + back[:, None, :], axis=2)
-    out = jnp.minimum(within, via)               # [nsf+1, m2]
-    return jnp.full(rs.shape, INF, rs.dtype).at[members].min(out)
+    EVERY overlay node, through the hierarchy: ascend the ladder
+    (within-group (min,+) against the resident closures + boundary
+    lift per level), one small vector (x) matrix product against the
+    top closure, then descend (lift back through each level's rows,
+    min-merged with that level's within-group leg)."""
+    L = len(dix.sf_of)
+    r = rs
+    withins = []
+    for li in range(L):
+        members = dix.sf_members[li]             # [ng+1, m2] (S_l pad)
+        rm = r[members]                          # [ng+1, m2]
+        withins.append(jnp.min(rm[:, :, None] + dix.sf_closure[li],
+                               axis=1))
+        lift = jnp.min(rm[:, :, None] + dix.l2row[li], axis=1)
+        np1 = (dix.sf_of[li + 1].shape[0] if li + 1 < L
+               else dix.d2.shape[0])
+        r = jnp.full((np1,), INF, rs.dtype).at[
+            dix.bnd2_sid[li]].min(lift)
+    z = ops.minplus(r[None, :], dix.d2, force=force)[0]  # [S_top+1]
+    for li in range(L - 1, -1, -1):
+        back = z[dix.bnd2_sid[li]]               # [ng+1, mb2]
+        via = jnp.min(dix.l2row[li] + back[:, None, :], axis=2)
+        out = jnp.minimum(withins[li], via)      # [ng+1, m2]
+        sz = dix.sf_of[li].shape[0]
+        z = jnp.full((sz,), INF, rs.dtype).at[
+            dix.sf_members[li]].min(out)
+    return z
 
 
 def serve_one_to_all(dix: DeviceIndex, s: int | jax.Array, *,
@@ -1455,7 +1864,7 @@ def serve_one_to_all(dix: DeviceIndex, s: int | jax.Array, *,
     rs = jnp.full((s1,), INF, row_s.dtype).at[bs].min(row_s)
     # u_s -> every super node (vector (x) matrix min-plus; the
     # hierarchical overlay runs it per level)
-    if dix.sf_of.shape[0] > 1:
+    if len(dix.sf_of):
         x = _overlay_row_h(dix, rs, force=force)                # [S+1]
     else:
         x = ops.minplus(rs[None, :], dix.d_super, force=force)[0]

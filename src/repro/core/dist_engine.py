@@ -31,8 +31,9 @@ from ..kernels import ops
 from . import padding, sssp
 from .device_engine import (DeviceIndex, RefreshStats,
                             build_device_index_with_plan, refresh_index,
-                            serve_cross, serve_cross_w, serve_same_dra,
-                            serve_same_dra_w, serve_step, warmup_refresh)
+                            serve_cross, serve_cross_res, serve_cross_w,
+                            serve_same_dra, serve_same_dra_w, serve_step,
+                            warmup_refresh)
 from .paths import PathUnwinder
 from .supergraph import DislandIndex, build_index
 
@@ -60,7 +61,7 @@ class QueryPlanner:
     compile lands anywhere near the serving path (DESIGN.md §9).
     """
 
-    CASES = ("same_dra", "same_frag", "cross_frag")
+    CASES = ("same_dra", "same_frag", "cross_frag", "cross_res")
 
     def __init__(self, dix: DeviceIndex, *, force=None,
                  paths: bool = False):
@@ -70,15 +71,26 @@ class QueryPlanner:
                 serve_cross, with_local=True, force=force)),
             "cross_frag": jax.jit(functools.partial(
                 serve_cross, with_local=False, force=force)),
+            # resident fast path: both endpoints in pre-lifted hot
+            # super-fragments of *different* top-level groups, so the
+            # whole query is one fused twoside against the top closure
+            "cross_res": jax.jit(functools.partial(
+                serve_cross_res, force=force)),
         }
         # witness-returning (return_witness mode) sub-programs; jit
         # wrappers are free until called, so these always exist and
-        # ``paths`` only decides whether warmup() compiles them
+        # ``paths`` only decides whether warmup() compiles them.
+        # cross_res deliberately maps to the full-lift witness program:
+        # the resident rows re-associate f32 min-plus, so an argmin over
+        # them may disagree with the unwinder's exact re-find — witness
+        # queries keep the exact pipeline (distances are equal anyway)
         self._wfns = {
             "same_dra": jax.jit(serve_same_dra_w),
             "same_frag": jax.jit(functools.partial(
                 serve_cross_w, with_local=True, force=force)),
             "cross_frag": jax.jit(functools.partial(
+                serve_cross_w, with_local=False, force=force)),
+            "cross_res": jax.jit(functools.partial(
                 serve_cross_w, with_local=False, force=force)),
         }
         self.paths = paths
@@ -96,7 +108,9 @@ class QueryPlanner:
         # mid-flush (weight-only refreshes share these arrays across
         # epochs, but the epoch-pin contract must not depend on that)
         self._maps = (dix, np.asarray(dix.agent_of),
-                      np.asarray(dix.frag_of))
+                      np.asarray(dix.frag_of),
+                      getattr(dix, "host_res_frag", None),
+                      getattr(dix, "host_topgrp_frag", None))
 
     @staticmethod
     def bucket_sizes(batch_size: int) -> list[int]:
@@ -118,9 +132,15 @@ class QueryPlanner:
         the serving (timed) path."""
         sizes = self.bucket_sizes(batch_size)
         z = np.zeros(max(sizes), np.int32)
-        fns = list(self._fns.values())
+        # the resident program only exists on indices that carry real
+        # pre-lifted rows (shape[0] > 1; the cold dummy is (1, 1, 1)) —
+        # its bucket is provably empty otherwise, so skip the compile
+        has_res = np.asarray(self.dix.res_rows).shape[0] > 1
+        fns = [fn for case, fn in self._fns.items()
+               if has_res or case != "cross_res"]
         if self.paths:
-            fns += list(self._wfns.values())
+            fns += [fn for case, fn in self._wfns.items()
+                    if has_res or case != "cross_res"]
         for fn in fns:
             for size in sizes:
                 jax.block_until_ready(fn(self.dix, jnp.asarray(z[:size]),
@@ -133,20 +153,40 @@ class QueryPlanner:
         cached = self._maps          # single atomic read of the tuple
         if dix is None or cached[0] is dix:
             agent_of, frag_of = cached[1], cached[2]
+            res_frag, topgrp = cached[3], cached[4]
         else:
             # pinned to an epoch that is no longer current: derive the
             # maps from that index (cold path — only reachable when a
             # publish lands between the pin and this dispatch)
             agent_of = np.asarray(dix.agent_of)
             frag_of = np.asarray(dix.frag_of)
+            res_frag = getattr(dix, "host_res_frag", None)
+            topgrp = getattr(dix, "host_topgrp_frag", None)
         us, ut = agent_of[s], agent_of[t]
         fs, ft = frag_of[us], frag_of[ut]
         case1 = us == ut
         case2 = ~case1 & (fs == ft)
+        case3 = ~case1 & ~case2
+        if res_frag is not None and topgrp is not None:
+            # hot split of cross_frag: both fragments pre-lifted AND in
+            # different top-level groups (the exactness gate for the
+            # resident rows: nested grouping means different top groups
+            # imply different groups at every level, so no same-group
+            # leg can shortcut the route and the pre-composed lift
+            # covers the confined prefix completely)
+            valid = (fs >= 0) & (ft >= 0)
+            hot = case3 & valid & (res_frag[np.where(valid, fs, 0)] >= 0) \
+                & (res_frag[np.where(valid, ft, 0)] >= 0) \
+                & (topgrp[np.where(valid, fs, 0)]
+                   != topgrp[np.where(valid, ft, 0)])
+            case3 = case3 & ~hot
+        else:
+            hot = np.zeros(s.shape, bool)
         return {
             "same_dra": np.nonzero(case1)[0],
             "same_frag": np.nonzero(case2)[0],
-            "cross_frag": np.nonzero(~case1 & ~case2)[0],
+            "cross_frag": np.nonzero(case3)[0],
+            "cross_res": np.nonzero(hot)[0],
         }
 
     def _dispatch(self, fns, s, t, outs, dix=None) -> None:
@@ -234,11 +274,13 @@ class EpochedEngine:
     def __init__(self, g, *, c: int = 2, seed: int = 0, force=None,
                  ix: DislandIndex | None = None,
                  warm_refresh: bool = True, paths: bool = False,
-                 hierarchy_levels: int | str = "auto"):
+                 hierarchy_levels: int | str = "auto",
+                 resident_mb: float | str = "auto"):
         self.g = g
         self.ix = ix if ix is not None else build_index(g, c=c, seed=seed)
         self.dix, self.plan = build_device_index_with_plan(
-            self.ix, force=force, hierarchy_levels=hierarchy_levels)
+            self.ix, force=force, hierarchy_levels=hierarchy_levels,
+            resident_mb=resident_mb)
         self.planner = QueryPlanner(self.dix, force=force, paths=paths)
         self.epoch = 0
         # one-tuple publish (epoch, dix, graph): snapshot() readers get

@@ -1,40 +1,48 @@
-"""Two-level SUPER overlay hierarchy (DESIGN.md §12).
+"""N-level SUPER overlay hierarchy (DESIGN.md §12–13).
 
 The dense overlay closure (`device_engine.super_stage`) is O(S^2)
 memory and O(S^3) work in the boundary count S — fine at road4000
 (S ~ 600), a wall at road64k (S ~ 7000+).  Hierarchical Cut Labelling
 (arXiv:2311.11063) and Pruned Landmark Labeling (arXiv:1304.4661) both
 reach large road networks the same way: keep every per-level closure
-small.  This module applies that recursively to our own overlay:
+small.  This module applies that recursively to our own overlay.
 
-  1. group the level-1 *fragments* into super-fragments (greedy BFS
-     over the fragment quotient graph, budgeted by overlay-node count
-     — topology only, so the grouping is weight-invariant and survives
-     every refresh, exactly like the level-1 partition);
-  2. close each super-fragment's induced overlay subgraph with the
-     existing batched witness FW kernel (`ops.fw_batch_next`) at one
+One *grouping level* takes an overlay (node set of size S, a slot list
+with min-merged weights) and
+
+  1. groups its *units* (fragments at level 1, groups-of-the-previous-
+     level above that) into super-fragments via a multilevel scheme on
+     the unit quotient graph — coarsen by heavy-edge matching,
+     partition the coarse graph (``partition_bgp`` with per-unit
+     boundary-mass node weights), uncoarsen with FM refinement — then
+     runs a final FM pass whose gain is the EXACT change in the
+     next-level boundary size (the count of overlay nodes incident to
+     a cross-group slot).  That boundary size is the quantity that
+     makes the hierarchy pay: the next level is built on exactly those
+     nodes.  Purely topological, so the grouping is weight-invariant
+     and survives every refresh;
+  2. closes each group's induced overlay subgraph with the existing
+     batched witness FW kernel (`ops.fw_batch_next`) at one
      pow2-padded tile shape [nsf, m2, m2];
-  3. close only the level-2 boundary set (overlay nodes incident to a
-     super-fragment-crossing slot) densely: a level-2 overlay graph of
-     cross slots + per-super-fragment boundary cliques whose weights
-     are *gathered from the super-fragment closures* — the same
+  3. emits the next overlay: the boundary nodes (incident to a
+     cross-group slot) with cross slots + per-group boundary cliques
+     whose weights are *gathered from the group closures* — the same
      derived-weight discipline as the level-1 Upsilon weights
      (`device_engine.super_weights`), so scratch build and incremental
-     refresh obtain every level-2 weight by the same gather.
+     refresh obtain every weight by the same gather.
 
-Exactness mirrors the level-1 argument one level up: any overlay path
-between x and y either stays inside x's super-fragment (covered by its
-closure) or crosses the level-2 boundary, where it decomposes into
-within-super-fragment segments (>= the clique weights) and cross slots
-(= the cross edges); the dense level-2 closure is therefore the exact
-overlay metric on the boundary set, and
+``plan_hierarchy`` stacks grouping levels until the remaining boundary
+set is small enough to close densely (the top closure ``d2``), or to
+the explicitly requested depth.  ``hierarchy_levels = 1 + len(levels)``:
+one grouping level is the two-level hierarchy of DESIGN.md §12,
+unchanged in meaning.
 
-  OD(x, y) = min( sf_closure[sf, x, y]           if sf(x) == sf(y),
-                  min_{a, b} l2row[x, a] + D2[a, b] + l2row[y, b] ).
-
-Memory drops from (S+1)^2 to nsf*m2^2 + nsf*m2*mb2 + (S2+1)^2 —
-sub-quadratic in S for the sqrt-ish budget chosen below (measured and
-recorded by benchmarks exp10).
+Exactness is the level-1 argument applied per level: any overlay path
+between x and y either stays inside x's group (covered by its closure)
+or crosses the next boundary, where it decomposes into within-group
+segments (>= the clique weights) and cross slots (= the cross edges);
+by induction the top dense closure is the exact overlay metric on the
+top boundary set.
 
 Everything here is host-side numpy structure plus thin device stages;
 `device_engine` owns the DeviceIndex fields, the serve-path combine,
@@ -51,62 +59,75 @@ import numpy as np
 
 from ..kernels import ops
 from . import padding
+from .partition import partition_bgp
+from .graph import Graph
 
 INF = np.float32(np.inf)
 
-#: S above which build_device_index's ``hierarchy_levels="auto"``
-#: switches from the dense closure to the two-level hierarchy.  Road
-#: graphs near the threshold are fine either way; road4000 (S ~ 600)
-#: stays dense (bit-identical to the pre-hierarchy index), road64k
-#: (S ~ 7000) must not be closed densely.
+#: Boundary size above which ``hierarchy_levels="auto"`` adds another
+#: grouping level instead of closing densely.  Road graphs near the
+#: threshold are fine either way; road4000 (S ~ 600) stays dense
+#: (bit-identical to the pre-hierarchy index), road64k (S ~ 7000)
+#: gets as many levels as it takes to bring the top under this.
 AUTO_THRESHOLD = 1024
+
+#: Hard cap on hierarchy depth ("auto" and explicit): each level's
+#: boundary shrinks geometrically, so depth beyond this is a planner
+#: bug, not a bigger graph.
+MAX_LEVELS = 5
 
 
 @dataclasses.dataclass
 class HierPlan:
-    """Host-side level-2 structure, carried on BuildPlan as ``.hier``.
+    """Host-side structure of ONE grouping level, carried on BuildPlan
+    as an element of ``.hier`` (a list, bottom level first).
 
-    Like the rest of the plan, everything except the weight caches
-    (``sf_adj``, ``l2_w``) is weight-invariant structure; a refresh
-    mutates only those caches and regathers everything else.
+    Field names keep their two-level spelling — "sf" is this level's
+    group, "l2"/"2" is this level's *next* overlay — but every array is
+    per-level: at level 1 the units are fragments and the overlay nodes
+    are the level-1 boundary set; at level l+1 the units are level-l
+    groups and the nodes are level-l boundary slots.  Like the rest of
+    the plan, everything except the weight caches (``sf_adj``,
+    ``l2_w``) is weight-invariant structure; a refresh mutates only
+    those caches and regathers everything else.
     """
 
-    nsf: int                 # super-fragment count
-    m2: int                  # pow2-padded max overlay nodes per sf
-    mb2: int                 # padded max level-2 boundary slots per sf
-    S2: int                  # level-2 boundary node count
-    sf_of_frag: np.ndarray   # int32 [k] fragment -> super-fragment
-    sf_of: np.ndarray        # int32 [S] overlay node -> super-fragment
-    pos_in_sf: np.ndarray    # int32 [S] position inside its sf
-    sf_members: np.ndarray   # int64 [nsf, m2] sf slot -> overlay id (-1)
-    # intra-sf slot addressing (level-1 overlay slots)
-    slot_sf: np.ndarray      # int32 [Es] owning sf (-1: crosses sfs)
-    slot_p2u: np.ndarray     # int32 [Es] sf-local endpoints (-1: cross)
+    nsf: int                 # group count at this level
+    m2: int                  # pow2-padded max overlay nodes per group
+    mb2: int                 # padded max next-level boundary slots/group
+    S2: int                  # next-level boundary node count
+    sf_of_frag: np.ndarray   # int32 [k] unit -> group
+    sf_of: np.ndarray        # int32 [S] overlay node -> group
+    pos_in_sf: np.ndarray    # int32 [S] position inside its group
+    sf_members: np.ndarray   # int64 [nsf, m2] slot -> overlay id (-1)
+    # intra-group slot addressing (this level's overlay slots)
+    slot_sf: np.ndarray      # int32 [Es] owning group (-1: crosses)
+    slot_p2u: np.ndarray     # int32 [Es] group-local endpoints (-1)
     slot_p2v: np.ndarray
     sf_adj: np.ndarray       # f32 [nsf, m2, m2] weight cache
-    # level-2 boundary registry
+    # next-level boundary registry
     bnd2_ids: np.ndarray     # int64 [S2] overlay ids, sorted
-    sid2_of: np.ndarray      # int64 [S] overlay id -> level-2 id (-1)
-    bnd2_pos: np.ndarray     # int32 [nsf, mb2] sf-local positions
+    sid2_of: np.ndarray      # int64 [S] overlay id -> next-level id (-1)
+    bnd2_pos: np.ndarray     # int32 [nsf, mb2] group-local positions
     bnd2_valid: np.ndarray   # bool [nsf, mb2]
-    bnd2_sid: np.ndarray     # int32 [nsf, mb2] level-2 id (S2 sentinel)
-    # level-2 slots (fixed structure, derived weights)
-    l2_src: np.ndarray       # int32 [E2] level-2 ids
+    bnd2_sid: np.ndarray     # int32 [nsf, mb2] next id (S2 sentinel)
+    # next-level slots (fixed structure, derived weights)
+    l2_src: np.ndarray       # int32 [E2] next-level ids
     l2_dst: np.ndarray
     l2_w: np.ndarray         # f32 [E2] weight cache
-    l2_sf: np.ndarray        # int32 [E2] owning sf for cliques (-1: cross)
-    l2_pu: np.ndarray        # int32 [E2] sf-local gather coords (cliques)
+    l2_sf: np.ndarray        # int32 [E2] owning group (cliques; -1 cross)
+    l2_pu: np.ndarray        # int32 [E2] group-local gather coords
     l2_pv: np.ndarray
-    l2_ov_slot: np.ndarray   # int64 [E2] level-1 slot id (cross; -1 else)
+    l2_ov_slot: np.ndarray   # int64 [E2] slot id in THIS level's slot
+    #                          list (cross slots; -1 for cliques)
 
     def overlay_bytes(self) -> int:
-        """Device bytes of the hierarchical overlay tables (closure +
-        witness + rows + level-2 closure), the quantity exp10 reports
-        against the dense (S+1)^2 baseline."""
+        """Device bytes of this level's tables (closure + witness +
+        rows); the top dense closure is accounted by
+        ``hier_overlay_stats``."""
         nsf1 = self.nsf + 1
         return (2 * nsf1 * self.m2 * self.m2 * 4      # sf_closure + next
-                + nsf1 * self.m2 * self.mb2 * 4       # l2row
-                + 2 * (self.S2 + 1) ** 2 * 4)         # d2 + d2_next
+                + nsf1 * self.m2 * self.mb2 * 4)      # l2row
 
 
 # ---------------------------------------------------------------------------
@@ -121,78 +142,68 @@ def _frag_of_sid(plan) -> np.ndarray:
     return out
 
 
-def _group_fragments(plan, frag_of_sid: np.ndarray,
-                     gamma2: int) -> np.ndarray:
-    """Group fragments into super-fragments: greedy BFS seeding over
-    the fragment quotient graph, budgeted by total overlay-node
-    (boundary) count <= gamma2 per group, then FM-style refinement
-    that moves fragments toward the neighbouring group holding most of
-    their E_B adjacency.
+def _refine_boundary(labels: np.ndarray, unit_of: np.ndarray,
+                     na: np.ndarray, nb: np.ndarray,
+                     bcount: np.ndarray, gamma2: int,
+                     passes: int = 8) -> np.ndarray:
+    """Exact next-boundary FM over unit moves.
 
-    The refinement objective IS the quantity that makes the hierarchy
-    pay: every E_B slot whose endpoints land in different groups makes
-    both endpoints level-2 boundary nodes, and the level-2 closure is
-    dense O(S2^2)/O(S2^3) — so minimizing cross-group slots minimizes
-    S2 directly (a road graph's boundary set shrinks like the group
-    perimeter, ~1/sqrt(fragments per group)).
+    The multilevel partitioner below optimizes the cross-slot edge cut
+    (a good proxy: every cross-group slot makes both endpoints boundary
+    nodes).  This final pass optimizes the real objective: for each
+    candidate move of unit ``f`` to an adjacent group, the gain is the
+    exact change in the number of overlay nodes incident to a
+    cross-group slot, evaluated over the only nodes a move of ``f``
+    can affect (f's own cross-adjacent nodes and their cross
+    neighbours).  Greedy positive-gain moves under the gamma2 budget,
+    until a pass moves nothing.
 
-    Deterministic and purely topological (quotient edges = which
-    fragments share a cross E_B slot, weights = how many): a weight
-    update can never move a fragment between super-fragments, which is
-    what keeps the level-2 structure refresh-stable — the same
-    invariance the level-1 partition provides one level down.
+    ``na, nb``: node endpoints of the cross-UNIT slots (intra-unit
+    slots can never cross groups — units move atomically).
     """
-    k = plan.k
-    bcount = plan.bvalid.sum(axis=1).astype(np.int64)
-    # fragment quotient multigraph from cross-fragment (E_B) slots:
-    # nbrs[f][g] = number of E_B slots between fragments f and g
-    cross = plan.sup_fi < 0
-    fu = frag_of_sid[plan.sup_src[cross]]
-    fv = frag_of_sid[plan.sup_dst[cross]]
-    nbrs: List[dict] = [{} for _ in range(k)]
-    for a, b in zip(fu, fv):
-        a, b = int(a), int(b)
-        nbrs[a][b] = nbrs[a].get(b, 0) + 1
-        nbrs[b][a] = nbrs[b].get(a, 0) + 1
-    labels = -np.ones(k, dtype=np.int64)
-    sf = 0
-    for seed in range(k):
-        if labels[seed] >= 0:
-            continue
-        size = 0
-        queue = [seed]
-        qi = 0
-        while qi < len(queue):
-            f = queue[qi]
-            qi += 1
-            if labels[f] >= 0:
-                continue
-            if size and size + bcount[f] > gamma2:
-                continue
-            labels[f] = sf
-            size += int(bcount[f])
-            # grow toward the heaviest-adjacency neighbours first:
-            # compactness now is less rework for the refiner below
-            queue.extend(sorted((x for x in nbrs[f] if labels[x] < 0),
-                                key=lambda x: (-nbrs[f][x], x)))
-        sf += 1
-    # FM-style refinement: move a fragment to the neighbouring group
-    # with the best cross-slot gain, under the budget
-    sizes = np.zeros(sf, dtype=np.int64)
+    labels = labels.copy()
+    k = labels.size
+    if k == 0 or na.size == 0:
+        return labels
+    nfrag = int(labels.max()) + 1
+    sizes = np.zeros(nfrag, dtype=np.int64)
     np.add.at(sizes, labels, bcount)
-    for _ in range(8):
+    # node -> units reachable via one cross slot; unit -> affected nodes
+    adj: dict[int, list] = {}
+    touch: List[set] = [set() for _ in range(k)]
+    for a, b in zip(na.tolist(), nb.tolist()):
+        ua, ub = int(unit_of[a]), int(unit_of[b])
+        adj.setdefault(a, []).append(ub)
+        adj.setdefault(b, []).append(ua)
+        touch[ua].update((a, b))
+        touch[ub].update((a, b))
+
+    def n_boundary(nodes) -> int:
+        c = 0
+        for x in nodes:
+            lx = labels[unit_of[x]]
+            for u in adj[x]:
+                if labels[u] != lx:
+                    c += 1
+                    break
+        return c
+
+    for _ in range(passes):
         moved = 0
         for f in range(k):
+            nodes = touch[f]
+            if not nodes:
+                continue
             lf = int(labels[f])
-            gains: dict = {}
-            for g, w in nbrs[f].items():
-                gains[int(labels[g])] = gains.get(int(labels[g]), 0) + w
-            internal = gains.get(lf, 0)
+            cand = sorted({int(labels[unit_of[x]]) for x in nodes})
+            base = n_boundary(nodes)
             best_l, best_gain = lf, 0
-            for lg in sorted(gains):
+            for lg in cand:
                 if lg == lf or sizes[lg] + bcount[f] > gamma2:
                     continue
-                gain = gains[lg] - internal
+                labels[f] = lg
+                gain = base - n_boundary(nodes)
+                labels[f] = lf
                 if gain > best_gain:
                     best_l, best_gain = lg, gain
             if best_l != lf:
@@ -202,35 +213,76 @@ def _group_fragments(plan, frag_of_sid: np.ndarray,
                 moved += 1
         if moved == 0:
             break
-    # compact away groups the refiner emptied
+    return labels
+
+
+def _group_units(S: int, unit_of: np.ndarray, k: int,
+                 src: np.ndarray, dst: np.ndarray,
+                 gamma2: int, seed: int = 0) -> np.ndarray:
+    """Group this level's units into super-fragments, minimizing the
+    next-level boundary size.
+
+    The unit quotient graph (nodes = units, node weight = overlay-node
+    count, edge weight = cross-unit slot multiplicity) goes through
+    the SAME multilevel partitioner as the level-1 node partition —
+    heavy-edge-matching coarsening, Prim-style initial growth, FM
+    uncoarsening (``partition_bgp`` with per-unit node weights and
+    ``cut_weights=True``: here one quotient edge stands for its slot
+    multiplicity, so the weighted cut IS the boundary proxy) — and
+    then ``_refine_boundary`` trades the edge-cut proxy for the exact
+    objective.  Deterministic and purely topological, so a weight
+    update can never move a unit between groups: the same refresh
+    stability the level-1 partition provides one level down.
+    """
+    if k == 0:
+        return np.empty(0, dtype=np.int64)
+    bcount = np.bincount(unit_of, minlength=k).astype(np.int64)
+    cross = unit_of[src] != unit_of[dst]
+    na, nb = src[cross].astype(np.int64), dst[cross].astype(np.int64)
+    fu, fv = unit_of[na], unit_of[nb]
+    lo = np.minimum(fu, fv).astype(np.int64)
+    hi = np.maximum(fu, fv).astype(np.int64)
+    if lo.size:
+        key = lo * k + hi
+        uniq, cnt = np.unique(key, return_counts=True)
+        qlo, qhi = uniq // k, uniq % k
+        qg = Graph.from_edges(k, qlo, qhi, cnt.astype(np.float64))
+    else:
+        qg = Graph.from_edges(k, [], [], [])
+    part = partition_bgp(qg, gamma2, seed=seed, node_w=bcount,
+                         cut_weights=True)
+    labels = _refine_boundary(part.labels, unit_of, na, nb, bcount,
+                              gamma2)
     uniq, inv = np.unique(labels, return_inverse=True)
     return inv.astype(np.int64)
 
 
-def plan_hierarchy(plan, *, gamma2: Optional[int] = None) -> HierPlan:
-    """Assemble the level-2 structure for ``plan`` (no device work).
+def _default_gamma2(S: int) -> int:
+    """Per-group overlay-node budget.  Balances the per-level closures:
+    the next boundary shrinks like the group perimeter (S2 ~ S/sqrt(f)
+    for f units per group), so groups must be LARGE enough that the
+    next level stays small, while the batched per-group FW (nsf * m2^3)
+    stays tractable — ~S^(2/3) is where those costs meet.  The budget
+    is snapped to ~94% of the pow2 tile size it implies, so the padded
+    [nsf, m2, m2] batch runs nearly full instead of wasting up to half
+    its closure memory on padding."""
+    m2_target = padding.pow2(
+        max(48, int(round(2.0 * max(S, 1) ** (2.0 / 3.0)))), floor=8)
+    return max(48, int(0.94 * m2_target))
 
-    ``gamma2`` bounds overlay nodes per super-fragment.  The default
-    balances the two per-level closures: the level-2 boundary shrinks
-    like the group perimeter (S2 ~ S/sqrt(f) for f fragments per
-    group), so groups must be LARGE enough that the dense S2 closure
-    stays small, while the batched per-group FW (nsf * m2^3) stays
-    tractable — ~S^(2/3) is where those costs meet.  The budget is
-    then snapped to ~94% of the pow2 tile size it implies, so the
-    padded [nsf, m2, m2] batch runs nearly full instead of wasting up
-    to half its closure memory on padding.
-    """
-    S = plan.S
-    if gamma2 is None:
-        m2_target = padding.pow2(
-            max(48, int(round(2.0 * max(S, 1) ** (2.0 / 3.0)))), floor=8)
-        gamma2 = max(48, int(0.94 * m2_target))
-    frag_sid = _frag_of_sid(plan)
-    sf_of_frag = _group_fragments(plan, frag_sid, gamma2)
+
+def plan_one_level(S: int, unit_of: np.ndarray, k: int,
+                   src: np.ndarray, dst: np.ndarray,
+                   gamma2: int, seed: int = 0) -> HierPlan:
+    """Assemble one grouping level over an overlay of ``S`` nodes with
+    slot list ``(src, dst)`` and unit assignment ``unit_of`` (no device
+    work)."""
+    sf_of_frag = _group_units(S, unit_of, k, src, dst, gamma2,
+                              seed=seed)
     nsf = int(sf_of_frag.max()) + 1 if sf_of_frag.size else 0
-    sf_of = sf_of_frag[frag_sid].astype(np.int32)
+    sf_of = sf_of_frag[unit_of].astype(np.int32)
 
-    # members (overlay-id order within each sf) + positions
+    # members (overlay-id order within each group) + positions
     pos_in_sf = np.zeros(S, dtype=np.int32)
     sf_sizes = np.bincount(sf_of, minlength=nsf)
     m2 = padding.pow2(int(sf_sizes.max()) if nsf else 1, floor=8)
@@ -240,9 +292,9 @@ def plan_hierarchy(plan, *, gamma2: Optional[int] = None) -> HierPlan:
         sf_members[s, :ids.size] = ids
         pos_in_sf[ids] = np.arange(ids.size, dtype=np.int32)
 
-    # slot addressing: intra-sf slots scatter into sf_adj, the rest
-    # cross super-fragments and become level-2 edges
-    su, sv = plan.sup_src, plan.sup_dst
+    # slot addressing: intra-group slots scatter into sf_adj, the rest
+    # cross groups and become next-level edges
+    su, sv = src, dst
     sfu, sfv = sf_of[su], sf_of[sv]
     intra = sfu == sfv
     slot_sf = np.where(intra, sfu, -1).astype(np.int32)
@@ -250,7 +302,7 @@ def plan_hierarchy(plan, *, gamma2: Optional[int] = None) -> HierPlan:
     slot_p2v = np.where(intra, pos_in_sf[sv], -1).astype(np.int32)
     sf_adj = np.full((nsf, m2, m2), INF, dtype=np.float32)
 
-    # level-2 boundary: overlay nodes incident to a cross-sf slot
+    # next-level boundary: overlay nodes incident to a cross-group slot
     is_b2 = np.zeros(S, dtype=bool)
     is_b2[su[~intra]] = True
     is_b2[sv[~intra]] = True
@@ -269,8 +321,9 @@ def plan_hierarchy(plan, *, gamma2: Optional[int] = None) -> HierPlan:
         bnd2_valid[s, :nb] = True
         bnd2_sid[s, :nb] = sid2_of[ids]
 
-    # level-2 slot list: cross slots keep their level-1 provenance,
-    # per-sf boundary cliques get derived weights (hier_weights)
+    # next-level slot list: cross slots keep their provenance into
+    # THIS level's slot list, per-group boundary cliques get derived
+    # weights (hier_weights)
     l2_src = [sid2_of[su[~intra]].astype(np.int32)]
     l2_dst = [sid2_of[sv[~intra]].astype(np.int32)]
     n_cross = int((~intra).sum())
@@ -310,16 +363,76 @@ def plan_hierarchy(plan, *, gamma2: Optional[int] = None) -> HierPlan:
     )
 
 
+def plan_hierarchy(plan, *, levels="auto",
+                   gamma2: Optional[int] = None) -> List[HierPlan]:
+    """Stack grouping levels over ``plan``'s overlay (no device work).
+
+    ``levels="auto"`` keeps adding grouping levels while the remaining
+    boundary exceeds AUTO_THRESHOLD (so the top dense closure stays
+    small), up to MAX_LEVELS total; an integer asks for exactly that
+    many total hierarchy levels (``len(result) = levels - 1``), ending
+    early only when a level's boundary empties or collapses to one
+    group — the returned depth is the authoritative one.  ``gamma2``
+    overrides the first level's group budget (tests); deeper levels
+    use the size-derived default, floored so a group averages >= ~2.2
+    units: deeper units are whole previous-level groups, so without
+    that floor most units exceed the budget, land solo, and the
+    boundary stops shrinking.  Under "auto" a level is dropped (and
+    the stack stops below it) when it fails to shrink the boundary by
+    >= 5% — highway-dense graphs hit a floor set by long-range edges
+    — or when its group closures (nsf * m2^2) would cost more memory
+    than just closing the remaining boundary densely; stacking such
+    levels only adds closure memory and lift hops.  An explicit
+    integer depth is honored as requested (differential tests rely on
+    exact depths).
+    """
+    out: List[HierPlan] = []
+    S = plan.S
+    unit_of = _frag_of_sid(plan)
+    k = plan.k
+    src, dst = plan.sup_src, plan.sup_dst
+    while True:
+        if gamma2 is not None and not out:
+            g2 = gamma2
+        else:
+            g2 = _default_gamma2(S)
+            if out:
+                g2 = max(g2, int(np.ceil(2.2 * S / max(k, 1))))
+        h = plan_one_level(S, unit_of, k, src, dst, g2,
+                           seed=len(out))
+        out.append(h)
+        if h.S2 == 0 or h.nsf <= 1:
+            break
+        if levels == "auto":
+            if len(out) > 1 and (
+                    h.S2 > 0.95 * S
+                    or h.nsf * h.m2 ** 2 >= (S + 1) ** 2):
+                # no progress, or the level's group closures cost more
+                # memory than just closing this boundary densely:
+                # stop below it
+                out.pop()
+                break
+            if h.S2 <= AUTO_THRESHOLD or len(out) >= MAX_LEVELS - 1:
+                break
+        elif len(out) >= int(levels) - 1:
+            break
+        S = h.S2
+        unit_of = h.sf_of[h.bnd2_ids].astype(np.int64)
+        k = h.nsf
+        src, dst = h.l2_src.astype(np.int64), h.l2_dst.astype(np.int64)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # weight caches (derived; the refresh path re-runs these on dirt)
 # ---------------------------------------------------------------------------
-def sf_adj_fill(hier: HierPlan, plan, sfs: Optional[np.ndarray] = None
-                ) -> None:
-    """(Re)build the intra-super-fragment adjacency blocks from the
-    current level-1 slot weights (``plan.sup_w``), min-merging parallel
-    slots.  ``sfs=None``: every block; otherwise only the listed ones
-    (their blocks are reset first, so a slot that stopped being the
-    min is forgotten)."""
+def sf_adj_fill(hier: HierPlan, w: np.ndarray,
+                sfs: Optional[np.ndarray] = None) -> None:
+    """(Re)build the intra-group adjacency blocks from this level's
+    current slot weights ``w`` (``plan.sup_w`` at level 1, the previous
+    level's ``l2_w`` above), min-merging parallel slots.  ``sfs=None``:
+    every block; otherwise only the listed ones (their blocks are reset
+    first, so a slot that stopped being the min is forgotten)."""
     intra = hier.slot_sf >= 0
     if sfs is None:
         hier.sf_adj[:] = INF
@@ -330,22 +443,23 @@ def sf_adj_fill(hier: HierPlan, plan, sfs: Optional[np.ndarray] = None
     s = hier.slot_sf[sel]
     pu = hier.slot_p2u[sel]
     pv = hier.slot_p2v[sel]
-    w = plan.sup_w[sel].astype(np.float32)
-    np.minimum.at(hier.sf_adj, (s, pu, pv), w)
-    np.minimum.at(hier.sf_adj, (s, pv, pu), w)
+    ws = np.asarray(w)[sel].astype(np.float32)
+    np.minimum.at(hier.sf_adj, (s, pu, pv), ws)
+    np.minimum.at(hier.sf_adj, (s, pv, pu), ws)
 
 
-def hier_weights(hier: HierPlan, plan, blocks: np.ndarray,
+def hier_weights(hier: HierPlan, blocks: np.ndarray, src_w: np.ndarray,
                  sfs: Optional[np.ndarray] = None) -> None:
-    """Fill the level-2 slot weights: clique slots gather from the
-    super-fragment closure ``blocks`` (never stored authoritatively —
+    """Fill this level's next-overlay slot weights: clique slots gather
+    from the group closure ``blocks`` (never stored authoritatively —
     the same derived-state rule as ``device_engine.super_weights``),
-    cross slots copy their level-1 slot's current weight.
+    cross slots copy their source slot's current weight from ``src_w``
+    (this level's slot weight vector).
 
     ``sfs=None``: blocks is the full [nsf, m2, m2] closure, every slot
-    is rewritten.  Otherwise blocks holds only the listed sfs' rows and
-    only their clique slots are rewritten (cross slots are always
-    rewritten — they are O(cross) cheap and depend only on sup_w).
+    is rewritten.  Otherwise blocks holds only the listed groups' rows
+    and only their clique slots are rewritten (cross slots are always
+    rewritten — they are O(cross) cheap and depend only on src_w).
     """
     if sfs is None:
         mask = hier.l2_sf >= 0
@@ -357,7 +471,7 @@ def hier_weights(hier: HierPlan, plan, blocks: np.ndarray,
         local = sf_to_row[hier.l2_sf[mask]]
     hier.l2_w[mask] = blocks[local, hier.l2_pu[mask], hier.l2_pv[mask]]
     cross = hier.l2_ov_slot >= 0
-    hier.l2_w[cross] = plan.sup_w[hier.l2_ov_slot[cross]]
+    hier.l2_w[cross] = np.asarray(src_w)[hier.l2_ov_slot[cross]]
 
 
 # ---------------------------------------------------------------------------
@@ -374,9 +488,9 @@ def _pad_sentinel(dist: jax.Array, nxt: jax.Array
 
 def l2row_from(closure: jax.Array, bnd2_pos: np.ndarray,
                bnd2_valid: np.ndarray) -> jax.Array:
-    """Per-member level-2 boundary rows, the hierarchy analog of the
+    """Per-member next-boundary rows, the hierarchy analog of the
     fragment ``brow`` table: l2row[sf, p, b] = closure distance from
-    the member at position p to the sf's b-th level-2 boundary slot."""
+    the member at position p to the group's b-th next-boundary slot."""
     rows = jnp.take_along_axis(closure,
                                jnp.asarray(bnd2_pos)[:, None, :], axis=2)
     return jnp.where(jnp.asarray(bnd2_valid)[:, None, :], rows, INF)
@@ -385,7 +499,7 @@ def l2row_from(closure: jax.Array, bnd2_pos: np.ndarray,
 def sf_stage(hier: HierPlan, *, force=None) -> tuple[jax.Array,
                                                      jax.Array,
                                                      jax.Array]:
-    """Stage 2a: batched witness FW over every super-fragment's induced
+    """Per-level stage: batched witness FW over every group's induced
     overlay subgraph at the one pow2 tile shape [nsf, m2, m2] ->
     (sf_closure, sf_next, l2row), sentinel block appended."""
     closure, nxt = ops.fw_batch_next(jnp.asarray(hier.sf_adj),
@@ -397,8 +511,8 @@ def sf_stage(hier: HierPlan, *, force=None) -> tuple[jax.Array,
 
 
 def l2_overlay(hier: HierPlan) -> jax.Array:
-    """Dense [S2, S2] level-2 adjacency from the slot list (parallel
-    slots min-merged, diag 0) — the level-2 twin of super_overlay."""
+    """Dense [S2, S2] next-level adjacency from the slot list (parallel
+    slots min-merged, diag 0) — the per-level twin of super_overlay."""
     S2 = hier.S2
     m = np.full((S2, S2), INF, np.float32)
     np.minimum.at(m, (hier.l2_src, hier.l2_dst), hier.l2_w)
@@ -409,8 +523,8 @@ def l2_overlay(hier: HierPlan) -> jax.Array:
 
 def l2_stage(hier: HierPlan, *, force=None) -> tuple[jax.Array,
                                                      jax.Array]:
-    """Stage 2b: dense witness FW closure of the level-2 boundary set
-    -> (d2, d2_next) with the +inf sentinel row/col appended."""
+    """Top stage: dense witness FW closure of the LAST level's boundary
+    set -> (d2, d2_next) with the +inf sentinel row/col appended."""
     S2 = hier.S2
     d2 = jnp.full((S2 + 1, S2 + 1), INF, jnp.float32)
     d2_next = jnp.full((S2 + 1, S2 + 1), -1, jnp.int32)
@@ -465,7 +579,8 @@ def ov_slot_map(plan) -> SlotMap:
 
 
 def l2_slot_map(hier: HierPlan) -> SlotMap:
-    """Level-2 slot provenance (cross + clique slots, min-merged)."""
+    """One level's next-overlay slot provenance (cross + clique slots,
+    min-merged)."""
     return SlotMap(hier.l2_src, hier.l2_dst, hier.l2_w, hier.S2 + 1)
 
 
@@ -474,15 +589,23 @@ def l2_slot_map(hier: HierPlan) -> SlotMap:
 OvSlotMap = SlotMap
 
 
-def hier_overlay_stats(hier: HierPlan, S: int) -> dict:
-    """Shape/memory summary for perf records and the serve driver."""
+def hier_overlay_stats(levels: List[HierPlan], S: int) -> dict:
+    """Shape/memory summary for perf records and the serve driver.
+    ``nsf``/``m2``/``S2`` keep their historical (first-level) meaning
+    so exp10 records stay comparable; ``S_top``/``levels_S2`` carry the
+    full ladder."""
+    h0, htop = levels[0], levels[-1]
     dense = 2 * (S + 1) * (S + 1) * 4            # d_super + super_next
+    total = (sum(h.overlay_bytes() for h in levels)
+             + 2 * (htop.S2 + 1) ** 2 * 4)       # d2 + d2_next
     return {
-        "hierarchy_levels": 2,
+        "hierarchy_levels": 1 + len(levels),
         "S": S,
-        "nsf": hier.nsf,
-        "m2": hier.m2,
-        "S2": hier.S2,
-        "overlay_bytes": hier.overlay_bytes(),
+        "nsf": h0.nsf,
+        "m2": h0.m2,
+        "S2": h0.S2,
+        "S_top": htop.S2,
+        "levels_S2": [h.S2 for h in levels],
+        "overlay_bytes": total,
         "overlay_dense_bytes": dense,
     }

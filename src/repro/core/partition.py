@@ -9,20 +9,37 @@ the same multilevel scheme in-repo (DESIGN.md §7.2):
   1. coarsening by heavy-edge matching (contract heaviest incident edge;
      node weights accumulate so balance is tracked in original-node
      units),
-  2. initial partition by greedy BFS region growing on the coarsest
-     graph, bounded by Gamma,
+  2. initial partition by greedy heaviest-connection (Prim-style) region
+     growing on the coarsest graph: each region repeatedly absorbs the
+     unassigned node with the largest total edge weight into the region,
+     grown only to ``_FILL * Gamma`` so refinement has slack to move
+     nodes without violating the hard bound,
   3. uncoarsening with boundary Kernighan-Lin/FM refinement: move
      boundary nodes to the neighbouring fragment with the best edge-cut
      gain subject to the size bound.
+
+Objective note: BGP minimizes the *number* of boundary nodes, so the
+cut objective counts edges (|B| <= 2|E_B|) — by default every edge
+weighs 1 in matching and refinement regardless of the graph's own
+weights (road travel times are noise for this objective).  Callers
+whose edge weights ARE cut multiplicities — the hierarchy planner's
+unit quotient graph, where one edge stands for N parallel cross-unit
+slots — pass ``cut_weights=True`` to optimize the weighted cut.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import List
 
 import numpy as np
 
 from .graph import Graph
+
+#: initial regions grow only to this fraction of Gamma, leaving FM
+#: refinement headroom to move boundary nodes (a partition packed to
+#: 100% of the bound admits no moves at all — every region is full)
+_FILL = 0.8
 
 
 @dataclasses.dataclass
@@ -106,7 +123,16 @@ def _contract(g: Graph, node_w: np.ndarray, match: np.ndarray):
 
 def _initial_partition(g: Graph, node_w: np.ndarray, gamma: int,
                        rng: np.random.Generator) -> np.ndarray:
-    """Greedy BFS region growing bounded by gamma (original-node units)."""
+    """Greedy heaviest-connection region growing bounded by gamma.
+
+    Prim-style: the region absorbs the unassigned node with the
+    largest accumulated edge weight into the region (a max-heap keyed
+    by connection weight, stale entries skipped).  Plain BFS order
+    crosses a 1-weight long-range edge as readily as a 20-weight
+    interface, which scatters regions all over the graph; growing by
+    connection strength keeps them geometrically compact, which is
+    what the FM passes need to polish the cut.
+    """
     labels = -np.ones(g.n, dtype=np.int64)
     frag = 0
     order = np.argsort(np.diff(g.indptr))  # grow from low-degree periphery
@@ -114,26 +140,28 @@ def _initial_partition(g: Graph, node_w: np.ndarray, gamma: int,
         if labels[seed] >= 0:
             continue
         size = 0
-        queue = [int(seed)]
-        qi = 0
-        while qi < len(queue):
-            u = queue[qi]
-            qi += 1
-            if labels[u] >= 0:
-                continue
+        conn = {int(seed): 0.0}
+        heap = [(0.0, int(seed))]
+        while heap:
+            negw, u = heapq.heappop(heap)
+            if labels[u] >= 0 or -negw < conn.get(u, 0.0):
+                continue               # already taken / stale entry
             if size + node_w[u] > gamma and size > 0:
                 continue
             labels[u] = frag
             size += int(node_w[u])
             s, e = g.indptr[u], g.indptr[u + 1]
-            nbrs = [int(v) for v in g.indices[s:e] if labels[v] < 0]
-            queue.extend(nbrs)
+            for v, w in zip(g.indices[s:e], g.weights[s:e]):
+                v = int(v)
+                if labels[v] < 0:
+                    conn[v] = conn.get(v, 0.0) + float(w)
+                    heapq.heappush(heap, (-conn[v], v))
         frag += 1
     return labels
 
 
 def _refine(g: Graph, node_w: np.ndarray, labels: np.ndarray, gamma: int,
-            passes: int = 4) -> np.ndarray:
+            passes: int = 8) -> np.ndarray:
     """Boundary FM: greedy positive-gain moves under the size bound."""
     labels = labels.copy()
     nfrag = int(labels.max()) + 1 if labels.size else 0
@@ -173,13 +201,35 @@ def _refine(g: Graph, node_w: np.ndarray, labels: np.ndarray, gamma: int,
 
 
 def partition_bgp(g: Graph, gamma: int, seed: int = 0,
-                  coarsen_to: int = 512) -> PartitionResult:
-    """Multilevel BGP partitioner: fragments of <= gamma original nodes."""
+                  coarsen_to: int = 512,
+                  node_w: np.ndarray | None = None,
+                  cut_weights: bool = False) -> PartitionResult:
+    """Multilevel BGP partitioner: fragments of <= gamma weight units.
+
+    ``node_w=None`` (the default, and the level-1 call path) weights
+    every node 1 so gamma bounds original-node counts exactly as
+    before.  A caller partitioning a *quotient* graph — the hierarchy
+    planner grouping fragments by overlay-boundary mass — passes its
+    own per-node weights and gamma bounds their sum per fragment; the
+    coarsening, initial partition, and FM refinement already track
+    accumulated node weights, so the scheme is unchanged.
+
+    ``cut_weights=False`` (default) optimizes the *unweighted* edge
+    cut — the BGP boundary objective, where road travel times on the
+    edges are irrelevant noise; ``cut_weights=True`` keeps the graph's
+    edge weights as cut multiplicities (the quotient-graph callers,
+    whose one edge stands for N parallel cross-unit slots).
+    """
     if g.n == 0:
         return PartitionResult(labels=np.empty(0, np.int64), n_fragments=0)
+    if not cut_weights:
+        g = Graph.from_edges(g.n, g.edge_u, g.edge_v,
+                             np.ones(g.m, dtype=np.float64))
     rng = np.random.default_rng(seed)
     graphs: List[Graph] = [g]
-    weights: List[np.ndarray] = [np.ones(g.n, dtype=np.int64)]
+    if node_w is None:
+        node_w = np.ones(g.n, dtype=np.int64)
+    weights: List[np.ndarray] = [np.asarray(node_w, dtype=np.int64)]
     maps: List[np.ndarray] = []
     # 1. coarsen
     while graphs[-1].n > coarsen_to:
@@ -191,8 +241,10 @@ def partition_bgp(g: Graph, gamma: int, seed: int = 0,
         graphs.append(cg)
         weights.append(cw)
         maps.append(cmap)
-    # 2. initial partition on the coarsest level
-    labels = _initial_partition(graphs[-1], weights[-1], gamma, rng)
+    # 2. initial partition on the coarsest level (grown to _FILL*gamma
+    #    so the refinement passes have slack; the bound stays gamma)
+    grow = max(1, int(_FILL * gamma))
+    labels = _initial_partition(graphs[-1], weights[-1], grow, rng)
     labels = _refine(graphs[-1], weights[-1], labels, gamma)
     # 3. uncoarsen + refine
     for lvl in range(len(maps) - 1, -1, -1):

@@ -52,14 +52,15 @@ class PathUnwinder:
     build/refresh stages); the plan-derived fallback below is for
     standalone indices that never saw a refresh.
 
-    Hierarchical epochs (DESIGN.md §12) have no dense ``super_next``;
-    the overlay walk x -> y is instead *derived* here from the
-    per-level snapshots (super-fragment closures + the level-2
-    closure): the winning route is recomputed host-side over the small
-    per-pair candidate sets — O(mb2^2) numpy, exact because every
-    table entry is the same f32 the device served — and then expanded
-    level by level until every hop is overlay-adjacent, at which point
-    the ordinary slot expansion below takes over.
+    Hierarchical epochs (DESIGN.md §12/§13) have no dense
+    ``super_next``; the overlay walk x -> y is instead *derived* here
+    from the per-level snapshots (each level's group closures + the
+    top closure): the winning route is recomputed host-side over the
+    small per-pair candidate sets — O(mb2^2) numpy per level, exact
+    because every table entry is the same f32 the device served — and
+    then expanded level by level (``_route`` recursing down the
+    ladder) until every hop is overlay-adjacent, at which point the
+    ordinary slot expansion below takes over.
     """
 
     def __init__(self, dix: DeviceIndex, plan: BuildPlan):
@@ -72,16 +73,18 @@ class PathUnwinder:
         self.frag_next = np.asarray(dix.frag_next)
         self.piece_next = np.asarray(dix.piece_next)
         self.super_next = np.asarray(dix.super_next)
-        self.hier = plan.hier if dix.sf_of.shape[0] > 1 else None
+        self.hier = plan.hier if len(dix.sf_of) else None
         if self.hier is not None:
-            self.sf_closure = np.asarray(dix.sf_closure)
-            self.sf_next = np.asarray(dix.sf_next)
-            self.l2row_t = np.asarray(dix.l2row)
+            # per-grouping-level snapshots (lists indexed by lvl - 1)
+            self.sf_closure = [np.asarray(a) for a in dix.sf_closure]
+            self.sf_next = [np.asarray(a) for a in dix.sf_next]
+            self.l2row_t = [np.asarray(a) for a in dix.l2row]
             self.d2 = np.asarray(dix.d2)
             self.d2_next = np.asarray(dix.d2_next)
             l2s = getattr(dix, "host_l2_slot", None)
-            self.l2_slot = (l2s if l2s is not None
-                            else hierarchy.l2_slot_map(self.hier))
+            self.l2_slot = (list(l2s) if l2s is not None
+                            else [hierarchy.l2_slot_map(h)
+                                  for h in self.hier])
         # position -> original id, per fragment (inverse of the plan's
         # frag_of/pos_in_frag lookups)
         k, maxf = plan.k, plan.maxf
@@ -162,9 +165,9 @@ class PathUnwinder:
     def _super_walk(self, x: int, y: int) -> List[int]:
         """Overlay-adjacent super-id sequence x -> y: a super_next
         chase on dense epochs, the derived hierarchical route on
-        two-level epochs."""
+        hierarchical epochs."""
         if self.hier is not None:
-            return self._overlay_route(x, y)
+            return self._route(1, x, y)
         seq = [x]
         u = x
         while u != y:
@@ -175,26 +178,32 @@ class PathUnwinder:
             seq.append(u)
         return seq
 
-    # ---- hierarchical overlay walks (DESIGN.md §12) --------------------
-    def _sf_walk(self, sf: int, pa: int, pb: int) -> List[int]:
-        """Super-id sequence of the within-super-fragment overlay
-        shortest path from sf-local position pa to pb (inclusive ends);
-        every hop is overlay-adjacent by the successor-matrix
-        invariant, one level up from _frag_walk."""
-        h = self.hier
-        nxt = self.sf_next[sf]
+    # ---- hierarchical overlay walks (DESIGN.md §12/§13) ----------------
+    # id/level vocabulary: "level-1 ids" are super (overlay) ids;
+    # grouping level lvl (hier[lvl - 1]) groups level-lvl ids and its
+    # group boundaries form the level-(lvl + 1) id space; the top
+    # (lvl == len(hier) + 1) ids index the d2 closure.
+
+    def _sf_walk(self, lvl: int, sf: int, pa: int, pb: int) -> List[int]:
+        """Level-``lvl`` id sequence of the within-group shortest path
+        from group-local position pa to pb (inclusive ends); every hop
+        is level-``lvl``-adjacent by the successor-matrix invariant,
+        one level up from _frag_walk."""
+        h = self.hier[lvl - 1]
+        nxt = self.sf_next[lvl - 1][sf]
         seq = [pa]
         u = pa
         while u != pb:
             u = int(nxt[u, pb])
             if u < 0 or len(seq) > nxt.shape[0]:
                 raise RuntimeError(
-                    f"inconsistent sf_next walk (sf {sf}, {pa}->{pb})")
+                    f"inconsistent sf_next walk (lvl {lvl}, sf {sf}, "
+                    f"{pa}->{pb})")
             seq.append(u)
         return [int(h.sf_members[sf, p]) for p in seq]
 
     def _l2_walk(self, c: int, d: int) -> List[int]:
-        """Level-2-adjacent id sequence c -> d from d2_next."""
+        """Top-level-adjacent id sequence c -> d from d2_next."""
         seq = [c]
         u = c
         while u != d:
@@ -205,58 +214,107 @@ class PathUnwinder:
             seq.append(u)
         return seq
 
-    def _expand_l2_hop(self, a2: int, b2: int) -> List[int]:
-        """One level-2 adjacency hop -> overlay-adjacent super ids
-        AFTER a2's node (cross slot: its level-1 slot's far endpoint;
-        clique slot: the within-super-fragment walk)."""
-        h = self.hier
-        slot = self.l2_slot.lookup(a2, b2)
+    def _dist_block(self, lvl: int, xs, ys) -> np.ndarray:
+        """[len(xs), len(ys)] exact distances between level-``lvl``
+        ids from the epoch snapshots: the d2 closure at the top, else
+        min(same-group closure, lift through the group boundary one
+        level up) — the same recurrence the device combine evaluates.
+        Integer edge weights keep every f32 sum exact, so an argmin
+        over this block always reproduces a servable route."""
+        xs = np.asarray(xs, np.int64)
+        ys = np.asarray(ys, np.int64)
+        if lvl == len(self.hier) + 1:
+            return self.d2[np.ix_(xs, ys)]
+        inf = np.float32(np.inf)
+        if xs.size == 0 or ys.size == 0:
+            return np.full((xs.size, ys.size), inf, np.float32)
+        h = self.hier[lvl - 1]
+        sfx, px = h.sf_of[xs], h.pos_in_sf[xs]
+        sfy, py = h.sf_of[ys], h.pos_in_sf[ys]
+        cls = self.sf_closure[lvl - 1]
+        same = sfx[:, None] == sfy[None, :]
+        out = np.where(same,
+                       cls[sfx[:, None], px[:, None], py[None, :]], inf)
+        if h.bnd2_valid.shape[1] == 0:
+            return out
+        row = self.l2row_t[lvl - 1]
+        RX = np.where(h.bnd2_valid[sfx], row[sfx, px], inf)
+        RY = np.where(h.bnd2_valid[sfy], row[sfy, py], inf)
+        IX = np.where(h.bnd2_valid[sfx], h.bnd2_sid[sfx], 0)
+        IY = np.where(h.bnd2_valid[sfy], h.bnd2_sid[sfy], 0)
+        U, inv = np.unique(np.concatenate([IX.ravel(), IY.ravel()]),
+                           return_inverse=True)
+        mix = inv[:IX.size].reshape(IX.shape)
+        miy = inv[IX.size:].reshape(IY.shape)
+        B = self._dist_block(lvl + 1, U, U)
+        # tropical RX*B then gather-min against each y's boundary rows
+        x2 = np.min(RX[:, :, None] + B[mix], axis=1)       # [nx, |U|]
+        vb = np.min(x2[:, miy] + RY[None, :, :], axis=2)   # [nx, ny]
+        return np.minimum(out, vb)
+
+    def _expand_hop(self, lvl: int, a: int, b: int) -> List[int]:
+        """One level-``lvl`` adjacency hop -> level-(lvl-1) ids AFTER
+        a's node (cross slot: the far endpoint of the underlying
+        level-(lvl-1) adjacency; clique slot: the within-group walk
+        one level down)."""
+        h = self.hier[lvl - 2]
+        slot = self.l2_slot[lvl - 2].lookup(a, b)
         if slot < 0:
-            raise RuntimeError(f"no level-2 slot for hop {a2}->{b2}")
+            raise RuntimeError(
+                f"no level-{lvl} slot for hop {a}->{b}")
         ov = int(h.l2_ov_slot[slot])
-        if ov >= 0:                      # cross slot: one overlay hop
-            su = int(self.plan.sup_src[ov])
-            sv = int(self.plan.sup_dst[ov])
-            return [sv] if int(h.sid2_of[su]) == a2 else [su]
+        if ov >= 0:               # cross slot: one hop one level down
+            if lvl == 2:
+                su = int(self.plan.sup_src[ov])
+                sv = int(self.plan.sup_dst[ov])
+            else:
+                hh = self.hier[lvl - 3]
+                su, sv = int(hh.l2_src[ov]), int(hh.l2_dst[ov])
+            return [sv] if int(h.sid2_of[su]) == a else [su]
         sf = int(h.l2_sf[slot])
-        if int(h.l2_src[slot]) == a2:
+        if int(h.l2_src[slot]) == a:
             pa, pb = int(h.l2_pu[slot]), int(h.l2_pv[slot])
         else:
             pa, pb = int(h.l2_pv[slot]), int(h.l2_pu[slot])
-        return self._sf_walk(sf, pa, pb)[1:]
+        return self._sf_walk(lvl - 1, sf, pa, pb)[1:]
 
-    def _overlay_route(self, x: int, y: int) -> List[int]:
-        """Overlay-adjacent super-id sequence x -> y through the
-        hierarchy: re-derive the winning route (same-super-fragment
-        closure vs level-1 rows + level-2 closure) from the epoch
-        snapshots, then expand the level-2 leg hop by hop."""
-        h = self.hier
+    def _route(self, lvl: int, x: int, y: int) -> List[int]:
+        """Level-``lvl``-adjacent id sequence x -> y through the
+        hierarchy: re-derive the winning route (same-group closure vs
+        lift through the group boundary one level up) from the epoch
+        snapshots, then expand the upper leg hop by hop.  At the top
+        it is a plain d2_next chase."""
+        if lvl == len(self.hier) + 1:
+            return self._l2_walk(x, y)
+        h = self.hier[lvl - 1]
         sfx, sfy = int(h.sf_of[x]), int(h.sf_of[y])
         px, py = int(h.pos_in_sf[x]), int(h.pos_in_sf[y])
-        va = (self.sf_closure[sfx, px, py] if sfx == sfy
+        va = (self.sf_closure[lvl - 1][sfx, px, py] if sfx == sfy
               else np.float32(np.inf))
         vx = np.nonzero(h.bnd2_valid[sfx])[0]
         vy = np.nonzero(h.bnd2_valid[sfy])[0]
         vb = np.float32(np.inf)
         if vx.size and vy.size:
-            a_row = self.l2row_t[sfx, px, vx]
-            b_row = self.l2row_t[sfy, py, vy]
-            d_blk = self.d2[np.ix_(h.bnd2_sid[sfx, vx],
-                                   h.bnd2_sid[sfy, vy])]
+            a_row = self.l2row_t[lvl - 1][sfx, px, vx]
+            b_row = self.l2row_t[lvl - 1][sfy, py, vy]
+            d_blk = self._dist_block(lvl + 1, h.bnd2_sid[sfx, vx],
+                                     h.bnd2_sid[sfy, vy])
             tot = a_row[:, None] + d_blk + b_row[None, :]
             ai, bi = np.unravel_index(int(np.argmin(tot)), tot.shape)
             vb = tot[ai, bi]
         if not (np.isfinite(va) or np.isfinite(vb)):
-            raise RuntimeError(f"unreachable overlay route {x}->{y}")
+            raise RuntimeError(
+                f"unreachable level-{lvl} route {x}->{y}")
         if va <= vb:
-            return self._sf_walk(sfx, px, py)
+            return self._sf_walk(lvl, sfx, px, py)
         a_slot, b_slot = int(vx[ai]), int(vy[bi])
-        seq = self._sf_walk(sfx, px, int(h.bnd2_pos[sfx, a_slot]))
-        l2seq = self._l2_walk(int(h.bnd2_sid[sfx, a_slot]),
-                              int(h.bnd2_sid[sfy, b_slot]))
-        for u2, v2 in zip(l2seq, l2seq[1:]):
-            seq += self._expand_l2_hop(u2, v2)
-        seq += self._sf_walk(sfy, int(h.bnd2_pos[sfy, b_slot]), py)[1:]
+        seq = self._sf_walk(lvl, sfx, px, int(h.bnd2_pos[sfx, a_slot]))
+        up = self._route(lvl + 1, int(h.bnd2_sid[sfx, a_slot]),
+                         int(h.bnd2_sid[sfy, b_slot]))
+        for u2, v2 in zip(up, up[1:]):
+            seq += self._expand_hop(lvl + 1, u2, v2)
+        seq += self._sf_walk(lvl, sfy, int(h.bnd2_pos[sfy, b_slot]),
+                             py)[1:]
         return seq
 
     def _expand_super_hop(self, a: int, b: int) -> List[int]:

@@ -10,8 +10,11 @@ The ``hierarchy`` field is the overlay-closure knob threaded into
 ``build_device_index`` (DESIGN.md §12): road4000 pins the dense
 closure explicitly (its records must stay comparable with the whole
 pre-hierarchy BENCH history — and "auto" picks dense at that size
-anyway); the 64k/250k presets ride "auto", which switches to the
-two-level hierarchy the moment S crosses the threshold.
+anyway); road64k pins the measured sweet spot of three levels so the
+CI smoke and BENCH records can't drift with the auto heuristics;
+road250k rides "auto", which keeps adding grouping levels until the
+top boundary fits under the dense threshold or stops shrinking
+(DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -37,7 +40,7 @@ ROAD_PRESETS = {
         RoadPreset("road2000", nodes=2000, hierarchy=1),
         RoadPreset("road4000", nodes=4000, hierarchy=1),
         RoadPreset("road16k", nodes=16_000),
-        RoadPreset("road64k", nodes=64_000),
+        RoadPreset("road64k", nodes=64_000, hierarchy=3),
         RoadPreset("road250k", nodes=250_000),
     )
 }

@@ -40,7 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import dijkstra
-from ..core.device_engine import build_device_index, serve_step
+from ..core.device_engine import (build_device_index, index_fields_equal,
+                                  serve_step)
 from ..core.dist_engine import EpochedEngine, serve_sharded
 from ..core.graph import road_like, traffic_updates
 from ..core.paths import path_weight
@@ -52,9 +53,12 @@ from .mesh import make_host_mesh
 REFRESHED_FIELDS = ("frag_apsp", "frag_next", "brow", "d_super",
                     "super_next", "piece_flat", "piece_next",
                     "dist_to_agent",
-                    # hierarchical overlay tables (1-sized dummies at
-                    # hierarchy_levels=1, so the parity check is free)
-                    "sf_closure", "sf_next", "l2row", "d2", "d2_next")
+                    # hierarchical overlay tables — per-level tuples,
+                    # empty (or 1-sized dummies) at hierarchy_levels=1,
+                    # so the parity check is free on dense epochs
+                    "sf_closure", "sf_next", "l2row", "d2", "d2_next",
+                    # resident pre-lifted rows (dummies when cold)
+                    "res_rows", "res_of_frag")
 
 
 # ---------------------------------------------------------------------------
@@ -70,10 +74,13 @@ def _overlay_record(engine: EpochedEngine) -> dict:
     """Overlay-closure shape + memory fields for perf records: the
     measurement behind the exp10 sub-quadratic claim (DESIGN.md §12)."""
     plan = engine.plan
-    if plan.hierarchy_levels == 2:
+    if plan.hierarchy_levels >= 2:
         from ..core.hierarchy import hier_overlay_stats
 
-        return hier_overlay_stats(plan.hier, plan.S)
+        rec = hier_overlay_stats(plan.hier, plan.S)
+        rec["resident_groups"] = max(
+            0, int(engine.dix.res_rows.shape[0]) - 1)
+        return rec
     dense = 2 * (plan.S + 1) * (plan.S + 1) * 4
     return {"hierarchy_levels": 1, "S": plan.S,
             "overlay_bytes": dense, "overlay_dense_bytes": dense}
@@ -96,15 +103,18 @@ def _build_engine(args) -> tuple[EpochedEngine, float]:
                 or (args.live and args.live_update_batches))
     engine = EpochedEngine(g, ix=ix, paths=args.paths,
                            hierarchy_levels=args.hierarchy_levels,
+                           resident_mb=args.resident_mb,
                            warm_refresh=warm)
     build_s = time.perf_counter() - t0
     dix = engine.dix
     ov = _overlay_record(engine)
     print(f"device index: frag_apsp={dix.frag_apsp.shape} "
           f"d_super={dix.d_super.shape} ({build_s:.1f}s)")
-    if ov["hierarchy_levels"] == 2:
-        print(f"overlay hierarchy: nsf={ov['nsf']} m2={ov['m2']} "
-              f"S2={ov['S2']} of S={ov['S']}; "
+    if ov["hierarchy_levels"] >= 2:
+        print(f"overlay hierarchy: {ov['hierarchy_levels']} levels, "
+              f"S2 ladder {ov['levels_S2']} from S={ov['S']} "
+              f"(nsf={ov['nsf']} m2={ov['m2']}); "
+              f"{ov['resident_groups']} resident groups; "
               f"{ov['overlay_bytes'] / 1e6:.1f}MB vs dense "
               f"{ov['overlay_dense_bytes'] / 1e6:.1f}MB")
     if args.expect_hierarchy and \
@@ -112,6 +122,14 @@ def _build_engine(args) -> tuple[EpochedEngine, float]:
         raise SystemExit(
             f"expected hierarchy_levels={args.expect_hierarchy}, "
             f"built {ov['hierarchy_levels']} (S={ov['S']})")
+    if args.max_s2_ratio and ov["hierarchy_levels"] >= 2:
+        ratio = ov["S2"] / max(1, ov["S"])
+        if ratio > args.max_s2_ratio:
+            raise SystemExit(
+                f"level-2 boundary too large: S2={ov['S2']} / "
+                f"S={ov['S']} = {ratio:.3f} > --max-s2-ratio "
+                f"{args.max_s2_ratio}")
+        print(f"S2/S ratio {ratio:.3f} <= {args.max_s2_ratio} (ok)")
     return engine, build_s
 
 
@@ -182,10 +200,8 @@ def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
             reweight_index(engine.ix, engine.g),
             hierarchy_levels=engine.plan.hierarchy_levels)
         reweight_s = time.perf_counter() - t0
-        scratch_match = all(
-            np.array_equal(np.asarray(getattr(engine.dix, f)),
-                           np.asarray(getattr(sdix, f)))
-            for f in REFRESHED_FIELDS)
+        scratch_match = all(index_fields_equal(
+            engine.dix, sdix, REFRESHED_FIELDS).values())
         rec = {
             "section": "refresh",
             "graph": _label(args),
@@ -341,12 +357,24 @@ def main() -> None:
                          "road64k); overrides --nodes and labels the "
                          "perf records")
     ap.add_argument("--hierarchy-levels", default=None,
-                    help="overlay closure: 1 (dense), 2 (two-level "
-                         "hierarchy) or auto; default: the preset's "
-                         "setting, else auto")
+                    help="overlay closure: 1 (dense), N>=2 (N-level "
+                         "tiled hierarchy) or auto (deepen until the "
+                         "top closure is small); default: the "
+                         "preset's setting, else auto")
     ap.add_argument("--expect-hierarchy", type=int, default=0,
                     help="fail unless the built index uses exactly "
-                         "this many overlay levels (CI smoke sanity)")
+                         "this many overlay levels (CI smoke sanity; "
+                         "catches an auto build silently falling back "
+                         "to a shallower hierarchy)")
+    ap.add_argument("--max-s2-ratio", type=float, default=0.0,
+                    help="fail if the level-2 boundary exceeds this "
+                         "fraction of S (partitioner-quality gate; "
+                         "0 disables)")
+    ap.add_argument("--resident-mb", default="auto",
+                    help="budget (MB) for the epoch-resident "
+                         "pre-lifted row cache on hierarchical "
+                         "indices; 0 disables, auto uses the "
+                         "built-in default")
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--batch-size", type=int, default=1024)
     ap.add_argument("--validate", type=int, default=64)
@@ -412,6 +440,8 @@ def main() -> None:
         args.hierarchy_levels = preset.hierarchy if preset else "auto"
     elif args.hierarchy_levels != "auto":
         args.hierarchy_levels = int(args.hierarchy_levels)
+    if args.resident_mb != "auto":
+        args.resident_mb = float(args.resident_mb)
     mode = "sharded" if args.sharded else args.mode
     if args.expect_hierarchy and mode != "planner":
         # the guard lives in _build_engine (planner setup); accepting

@@ -61,6 +61,13 @@ class ServingRuntime:
                                     deadline_s=deadline_s, auto=auto)
 
     def warmup(self) -> None:
+        """Compile every planner sub-program at every bucket size a
+        flush can produce — including the resident fast-path program
+        (cross_res) when the epoch carries pre-lifted rows.  Because an
+        epoch swap preserves every table's shape (refresh re-derives
+        the resident rows at the same budget), the executables warmed
+        here keep serving across swaps: the first live flush after
+        ``apply_updates`` never pays an XLA compile in its p99."""
         self.engine.warmup(self.max_batch)
 
     def submit(self, s: int, t: int,

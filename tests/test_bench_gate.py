@@ -58,6 +58,31 @@ def test_matching_record_without_metric_fails_loudly():
                                   "us_per_query", 5)
 
 
+def test_missing_graph_fails_loudly():
+    """A committed record with a section but no graph key cannot be
+    attributed to a scale; it must not silently drop out of (or worse,
+    be writable into) any graph's window."""
+    broken = _rec(9.0)
+    del broken["graph"]
+    with pytest.raises(SystemExit, match="graph"):
+        bench_gate.history_window([_rec(9.0), broken], MATCH,
+                                  "us_per_query", 5)
+
+
+def test_graph_scales_never_mix():
+    """road64k records must be invisible to the road4000 window (and
+    vice versa): one 81,000 µs/query record in a 9 µs/query history
+    would inflate the median and mask a road4000 regression."""
+    recs = ([_rec(9.0 + i) for i in range(4)]
+            + [_rec(81021.7, graph="road64k"),
+               _rec(81550.0, graph="road64k")])
+    win = bench_gate.history_window(recs, MATCH, "us_per_query", 5)
+    assert win == [9.0, 10.0, 11.0, 12.0]
+    win64 = bench_gate.history_window(
+        recs, {**MATCH, "graph": "road64k"}, "us_per_query", 5)
+    assert win64 == [81021.7, 81550.0]
+
+
 def test_live_and_offline_sections_never_mix():
     """serve_live p99 records (ms) must be invisible to the offline
     µs/query window and vice versa — the 'units can't mix' guarantee."""

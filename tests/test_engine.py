@@ -69,7 +69,8 @@ def test_device_one_to_all(small_world):
 
 def _pairs_covering_all_buckets(g, dix, n_random=60, seed=11):
     """Random pairs plus hand-picked ones so every planner bucket
-    (same-DRA / same-fragment / cross-fragment) is non-empty."""
+    (same-DRA / same-fragment / cross-fragment, plus cross_res when
+    the epoch carries pre-lifted resident rows) is non-empty."""
     rng = np.random.default_rng(seed)
     pairs = list(map(tuple, rng.integers(0, g.n, size=(n_random, 2))))
     agent_of = np.asarray(dix.agent_of)
@@ -95,6 +96,18 @@ def _pairs_covering_all_buckets(g, dix, n_random=60, seed=11):
     f0 = fa[valid[0]]
     other = valid[np.argmax(fa[valid] != f0)]
     pairs.append((int(valid[0]), int(other)))
+    # cross_res: both endpoints in resident fragments of different
+    # top-level groups (only exists on hierarchical epochs)
+    rf = getattr(dix, "host_res_frag", None)
+    tg = getattr(dix, "host_topgrp_frag", None)
+    if rf is not None and tg is not None:
+        hot = (rf[fa[valid]] >= 0)
+        hv = valid[hot]
+        if hv.size:
+            t0 = tg[fa[hv[0]]]
+            j = np.argmax(tg[fa[hv]] != t0)
+            if tg[fa[hv[j]]] != t0:
+                pairs.append((int(hv[0]), int(hv[j])))
     return np.asarray(pairs)
 
 
@@ -112,8 +125,12 @@ def test_planner_matches_host_engine(graph_factory, seed):
     pairs = _pairs_covering_all_buckets(g, dix, seed=seed)
     planner = QueryPlanner(dix)
     got = planner(pairs[:, 0], pairs[:, 1])
-    assert all(n >= 1 for n in planner.last_counts.values()), \
-        planner.last_counts
+    # cross_res only fills on hierarchical epochs with resident rows;
+    # the other buckets must always be exercised
+    assert all(n >= 1 for c, n in planner.last_counts.items()
+               if c != "cross_res"), planner.last_counts
+    if np.asarray(dix.res_rows).shape[0] > 1:
+        assert planner.last_counts["cross_res"] >= 1, planner.last_counts
     got_mono = np.asarray(serve_step(dix, jnp.asarray(pairs[:, 0]),
                                      jnp.asarray(pairs[:, 1])))
     for i, (a, b) in enumerate(pairs):

@@ -26,6 +26,7 @@ import pytest
 from repro.core import dijkstra, hierarchy
 from repro.core.device_engine import (build_device_index,
                                       build_device_index_with_plan,
+                                      index_fields_equal,
                                       overlay_slot_table,
                                       refresh_index,
                                       resolve_hierarchy_levels,
@@ -53,9 +54,16 @@ def test_resolve_levels_knob():
     assert resolve_hierarchy_levels(thr, "auto") == 1
     assert resolve_hierarchy_levels(thr + 1, "auto") == 2
     assert resolve_hierarchy_levels(50, 2) == 2
+    assert resolve_hierarchy_levels(50, 3) == 3
+    assert resolve_hierarchy_levels(50, hierarchy.MAX_LEVELS) \
+        == hierarchy.MAX_LEVELS
     assert resolve_hierarchy_levels(0, 2) == 1      # empty overlay
     with pytest.raises(ValueError):
-        resolve_hierarchy_levels(50, 3)
+        resolve_hierarchy_levels(50, 0)
+    with pytest.raises(ValueError):
+        resolve_hierarchy_levels(50, hierarchy.MAX_LEVELS + 1)
+    with pytest.raises(ValueError):
+        resolve_hierarchy_levels(50, "deep")
 
 
 def test_auto_small_graph_stays_dense(built):
@@ -68,8 +76,10 @@ def test_auto_small_graph_stays_dense(built):
                                   np.asarray(dix1.d_super))
     np.testing.assert_array_equal(np.asarray(auto_dix.super_next),
                                   np.asarray(dix1.super_next))
-    assert auto_dix.sf_of.shape == (1,)
+    assert auto_dix.sf_of == ()            # no grouping levels at all
+    assert auto_dix.hierarchy_levels == 1
     assert auto_dix.d2.shape == (1, 1)
+    assert auto_dix.res_rows.shape == (1, 1, 1)
 
 
 def test_hier_structure_invariants(built):
@@ -78,7 +88,7 @@ def test_hier_structure_invariants(built):
     level-2 boundary is exactly the cross-super-fragment slot
     endpoints."""
     _g, _ix, (_d1, p1), (dix2, p2) = built
-    h = p2.hier
+    h = p2.hier[0]
     assert dix2.hierarchy_levels == 2
     S = p2.S
     assert h.sf_of.shape == (S,) and (h.sf_of >= 0).all()
@@ -195,11 +205,9 @@ def test_hier_refresh_differential():
         engine.apply_updates(u, v, w)
         sdix = build_device_index(reweight_index(engine.ix, engine.g),
                                   hierarchy_levels=2)
-        for f in REFRESHED_FIELDS:
-            np.testing.assert_array_equal(
-                np.asarray(getattr(engine.dix, f)),
-                np.asarray(getattr(sdix, f)),
-                err_msg=f"epoch {engine.epoch}: {f}")
+        eq = index_fields_equal(engine.dix, sdix, REFRESHED_FIELDS)
+        bad = [f for f, ok in eq.items() if not ok]
+        assert not bad, f"epoch {engine.epoch}: {bad}"
         _paths_exact(engine, engine.g, rng, n=40)
     # piece-only (or overlay-untouched) update: hier tables must be
     # the SAME arrays (immutability-based double buffering, no FW)
@@ -226,24 +234,21 @@ def test_hier_refresh_rollback():
     g = road_like(500, seed=9)
     engine = EpochedEngine(g, hierarchy_levels=2)
     plan = engine.plan
-    h = plan.hier
-    sf_adj_before = h.sf_adj.copy()
-    l2_w_before = h.l2_w.copy()
+    before = [(h.sf_adj.copy(), h.l2_w.copy()) for h in plan.hier]
     u, v, w = traffic_updates(g, frac=0.05, seed=2)
     has_piece = any(plan.piece_gid[a] >= 0 or plan.piece_gid[b] >= 0
                     for a, b in zip(u, v))
     if has_piece:
         with pytest.raises(AttributeError):
             refresh_index(engine.dix, plan, object(), u, v, w)
-        np.testing.assert_array_equal(h.sf_adj, sf_adj_before)
-        np.testing.assert_array_equal(h.l2_w, l2_w_before)
+        for h, (sf_adj_b, l2_w_b) in zip(plan.hier, before):
+            np.testing.assert_array_equal(h.sf_adj, sf_adj_b)
+            np.testing.assert_array_equal(h.l2_w, l2_w_b)
     engine.apply_updates(u, v, w)
     sdix = build_device_index(reweight_index(engine.ix, engine.g),
                               hierarchy_levels=2)
-    for f in REFRESHED_FIELDS:
-        np.testing.assert_array_equal(
-            np.asarray(getattr(engine.dix, f)),
-            np.asarray(getattr(sdix, f)), err_msg=f)
+    eq = index_fields_equal(engine.dix, sdix, REFRESHED_FIELDS)
+    assert all(eq.values()), [f for f, ok in eq.items() if not ok]
 
 
 def test_overlay_bytes_accounting():
@@ -252,8 +257,8 @@ def test_overlay_bytes_accounting():
     g = road_like(700, seed=7)
     _dix, plan = build_device_index_with_plan(build_index(g),
                                               hierarchy_levels=2)
-    h = plan.hier
-    stats = hierarchy.hier_overlay_stats(h, plan.S)
+    stats = hierarchy.hier_overlay_stats(plan.hier, plan.S)
+    h = plan.hier[0]
     nsf1 = h.nsf + 1
     want = (2 * nsf1 * h.m2 * h.m2 * 4 + nsf1 * h.m2 * h.mb2 * 4
             + 2 * (h.S2 + 1) ** 2 * 4)

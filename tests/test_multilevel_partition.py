@@ -1,0 +1,148 @@
+"""Property tests for the multilevel (coarsen / partition / refine)
+BGP partitioner and its hierarchy-planner caller, plus the N-level
+serving differential (DESIGN.md §13).
+
+The partitioner invariants gate the tentpole's objective: every unit
+assigned exactly once, the balance bound respected in *weight* units
+(the quotient-graph caller weighs each fragment by its boundary mass),
+and the planner's reported level-2 boundary size matching an
+independent recount from the slot endpoints.
+"""
+import numpy as np
+import pytest
+
+from repro.core import hierarchy
+from repro.core.device_engine import build_device_index_with_plan
+from repro.core.graph import Graph, road_like
+from repro.core.partition import partition_bgp
+from repro.core.supergraph import build_index
+
+
+def _random_graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    keep = u != v
+    u, v = u[keep], v[keep]
+    # ensure connectivity-ish: chain backbone
+    cu = np.arange(n - 1)
+    cv = cu + 1
+    u = np.concatenate([u, cu])
+    v = np.concatenate([v, cv])
+    w = rng.integers(1, 20, u.size).astype(float)
+    return Graph.from_edges(n, u, v, w)
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_partition_weighted_invariants(seed):
+    """Weighted quotient-graph path: every node assigned exactly once,
+    labels compact, and each fragment's node-weight sum respects the
+    bound whenever no single unit exceeds it on its own."""
+    g = _random_graph(300, 600, seed)
+    rng = np.random.default_rng(seed + 1)
+    node_w = rng.integers(1, 9, g.n)
+    gamma = 64
+    res = partition_bgp(g, gamma, seed=seed, node_w=node_w)
+    assert res.labels.shape == (g.n,)
+    assert (res.labels >= 0).all()
+    assert res.labels.max() + 1 == res.n_fragments
+    assert np.array_equal(np.unique(res.labels),
+                          np.arange(res.n_fragments))
+    sizes = np.zeros(res.n_fragments, np.int64)
+    np.add.at(sizes, res.labels, node_w)
+    assert sizes.max() <= gamma, (sizes.max(), gamma)
+    assert sizes.sum() == node_w.sum()      # exactly-once, in weight
+
+
+def test_partition_default_weights_identical():
+    """node_w=None is exactly the all-ones path — the level-1 call
+    sites stay byte-identical to the pre-weighted partitioner."""
+    g = _random_graph(250, 500, 7)
+    a = partition_bgp(g, 48, seed=2)
+    b = partition_bgp(g, 48, seed=2, node_w=np.ones(g.n, np.int64))
+    np.testing.assert_array_equal(a.labels, b.labels)
+    assert a.n_fragments == b.n_fragments
+
+
+def test_partition_edge_cut_and_boundary_consistent():
+    g = _random_graph(200, 420, 5)
+    res = partition_bgp(g, 40, seed=1)
+    cut = (res.labels[g.edge_u] != res.labels[g.edge_v])
+    assert res.edge_cut(g) == int(cut.sum())
+    mask = res.boundary_mask(g)
+    want = np.zeros(g.n, bool)
+    want[g.edge_u[cut]] = True
+    want[g.edge_v[cut]] = True
+    np.testing.assert_array_equal(mask, want)
+
+
+def test_planner_boundary_size_matches_recount():
+    """Every grouping level of a deep hierarchy: each unit in exactly
+    one group, groups within the planner's balance bound, and the
+    reported S2 equal to an independent recount of cross-group slot
+    endpoints."""
+    g = road_like(900, seed=17)
+    _dix, plan = build_device_index_with_plan(build_index(g),
+                                              hierarchy_levels=3)
+    assert plan.hier and len(plan.hier) >= 1
+    S = plan.S
+    src, dst = plan.sup_src, plan.sup_dst      # level-1 adjacency slots
+    for li, h in enumerate(plan.hier):
+        assert h.sf_of.shape == (S,)
+        assert (h.sf_of >= 0).all() and h.sf_of.max() + 1 == h.nsf
+        # members table round-trips: exactly-once assignment
+        for sid in range(S):
+            assert h.sf_members[h.sf_of[sid], h.pos_in_sf[sid]] == sid
+        # reported boundary == independent recount of the endpoints of
+        # this level's cross-group slots (slot_sf < 0 marks crossing)
+        crossing = h.slot_sf < 0
+        np.testing.assert_array_equal(
+            h.sf_of[src[crossing]] != h.sf_of[dst[crossing]],
+            np.ones(int(crossing.sum()), bool))
+        recount = np.unique(np.concatenate([src[crossing],
+                                            dst[crossing]]))
+        assert h.S2 == recount.size, f"level {li}"
+        np.testing.assert_array_equal(h.bnd2_ids, recount)
+        # next level groups the level-up ids via the level-up slots
+        S, src, dst = h.S2, h.l2_src, h.l2_dst
+
+
+def test_nlevel_differential_road4000():
+    """levels=1 vs 2 vs 3 serve array-equal distances on road4000 —
+    the acceptance-criteria differential at the benchmark scale."""
+    import jax.numpy as jnp
+
+    from repro.core.device_engine import serve_step
+
+    g = road_like(4000, seed=0)
+    ix = build_index(g)
+    rng = np.random.default_rng(2)
+    s = jnp.asarray(rng.integers(0, g.n, 512), jnp.int32)
+    t = jnp.asarray(rng.integers(0, g.n, 512), jnp.int32)
+    base = None
+    for lv in (1, 2, 3):
+        dix, plan = build_device_index_with_plan(ix, hierarchy_levels=lv)
+        assert dix.hierarchy_levels == lv
+        out = np.asarray(serve_step(dix, s, t))
+        if base is None:
+            base = out
+        else:
+            np.testing.assert_array_equal(base, out,
+                                          err_msg=f"levels={lv}")
+
+
+def test_hierarchy_balance_bound():
+    """The quotient partitioner's groups respect the boundary-mass
+    balance bound the planner hands it (gamma2), in units of per-unit
+    boundary counts."""
+    g = road_like(900, seed=17)
+    _dix, plan = build_device_index_with_plan(build_index(g),
+                                              hierarchy_levels=2)
+    h = plan.hier[0]
+    # per-fragment boundary-node counts are the unit weights
+    frag_of_sid = hierarchy._frag_of_sid(plan)
+    bcount = np.bincount(frag_of_sid, minlength=plan.k)
+    gsum = np.zeros(h.nsf, np.int64)
+    np.add.at(gsum, h.sf_of_frag[bcount > 0], bcount[bcount > 0])
+    gamma2 = hierarchy._default_gamma2(plan.S)
+    assert gsum.max() <= max(gamma2, bcount.max())

@@ -23,6 +23,25 @@ def world():
     return g, dix, QueryPlanner(dix)
 
 
+@pytest.fixture(scope="module")
+def world_res():
+    """A hierarchical index with resident pre-lifted rows, so the
+    cross_res bucket is actually reachable (the dense ``world`` index
+    has no residency and its cross_res bucket is provably empty)."""
+    g = road_like(2500, seed=3)
+    ix = build_index(g)
+    dix = build_device_index(ix, hierarchy_levels=3)
+    rf = getattr(dix, "host_res_frag", None)
+    if rf is None or np.asarray(dix.res_rows).shape[0] <= 1:
+        pytest.skip("no resident rows at this size")
+    rf = np.asarray(rf)
+    tg = np.asarray(dix.host_topgrp_frag)
+    hot = np.nonzero(rf >= 0)[0]
+    if hot.size < 2 or np.unique(tg[hot]).size < 2:
+        pytest.skip("no resident pair across top groups at this size")
+    return g, dix, QueryPlanner(dix)
+
+
 def _want(g, pairs):
     return np.array([dijkstra.pair(g, int(a), int(b)) for a, b in pairs])
 
@@ -60,31 +79,52 @@ def _pairs_of_case(g, dix, case, n):
                 for i in range(n):
                     out.append((int(nodes[0]), int(nodes[j])))
                 break
+    elif case == "cross_res":
+        rf = np.asarray(dix.host_res_frag)
+        tg = np.asarray(dix.host_topgrp_frag)
+        hot = np.nonzero(rf >= 0)[0]
+        f0 = int(hot[0])
+        f1 = int(hot[np.argmax(tg[hot] != tg[f0])])
+        assert tg[f1] != tg[f0], "no resident pair across top groups"
+        a = int(np.nonzero(fa == f0)[0][0])
+        b = int(np.nonzero(fa == f1)[0][0])
+        for i in range(n):
+            out.append((a, b))
     else:  # cross_frag
         valid = np.nonzero(fa >= 0)[0]
         f0 = fa[valid[0]]
         other = valid[np.argmax(fa[valid] != f0)]
+        rf = getattr(dix, "host_res_frag", None)
+        if rf is not None:
+            # on a resident index, make sure the pair is NOT hot (it
+            # would dispatch as cross_res, not cross_frag)
+            rf = np.asarray(rf)
+            cold = np.nonzero(rf[fa[valid]] < 0)[0]
+            if cold.size:
+                other = valid[cold[0]]
         for i in range(n):
             out.append((int(valid[0]), int(other)))
     assert len(out) == n, f"could not build {case} pairs"
     return np.asarray(out)
 
 
-def test_batch_of_one(world):
-    g, dix, planner = world
-    for case in QueryPlanner.CASES:
-        pairs = _pairs_of_case(g, dix, case, 1)
-        _check(g, planner, pairs)
-        counts = dict(planner.last_counts)
-        assert counts[case] == 1
-        assert sum(counts.values()) == 1
+@pytest.mark.parametrize("case", QueryPlanner.CASES)
+def test_batch_of_one(request, case):
+    g, dix, planner = request.getfixturevalue(
+        "world_res" if case == "cross_res" else "world")
+    pairs = _pairs_of_case(g, dix, case, 1)
+    _check(g, planner, pairs)
+    counts = dict(planner.last_counts)
+    assert counts[case] == 1
+    assert sum(counts.values()) == 1
 
 
 @pytest.mark.parametrize("case", QueryPlanner.CASES)
-def test_single_case_batches(world, case):
-    """A batch entirely of one case: the other two sub-programs must
+def test_single_case_batches(request, case):
+    """A batch entirely of one case: the other sub-programs must
     not be dispatched at all (empty-bucket skip)."""
-    g, dix, planner = world
+    g, dix, planner = request.getfixturevalue(
+        "world_res" if case == "cross_res" else "world")
     pairs = _pairs_of_case(g, dix, case, 13)   # odd size -> pow2 pad
     _check(g, planner, pairs)
     for c, n in planner.last_counts.items():

@@ -449,3 +449,41 @@ def test_soak_concurrent_refresh(engine):
     assert set(drv.as_record()) == {"refresh_rounds", "refresh_mean_s",
                                     "refresh_max_s"}
     assert drv.as_record()["refresh_rounds"] == 3
+
+
+def test_resident_bucket_warm_across_epoch_swap():
+    """The resident fast-path program (cross_res) is warmed with the
+    other planner buckets, and an epoch swap keeps every executable
+    warm: a flush containing hot cross-fragment queries right after
+    ``apply_updates`` must trigger zero fresh XLA compiles."""
+    g = road_like(2500, seed=3)
+    engine = EpochedEngine(g, hierarchy_levels=3, warm_refresh=True)
+    dix = engine.dix
+    assert np.asarray(dix.res_rows).shape[0] > 1, \
+        "fixture graph produced no resident rows"
+    rt = ServingRuntime(engine, max_batch=64, cache_size=0, auto=False)
+    rt.warmup()
+    sizes = {case: fn._cache_size()
+             for case, fn in engine.planner._fns.items()}
+    assert sizes["cross_res"] > 0, "warmup skipped the resident program"
+    # swap the epoch, then serve a batch that exercises every bucket
+    u, v = g.edge_u[:6], g.edge_v[:6]
+    engine.apply_updates(u, v, g.edge_w[:6] + 1.0)
+    rf = engine.dix.host_res_frag
+    tg = engine.dix.host_topgrp_frag
+    agent_of = np.asarray(engine.dix.agent_of)
+    frag_of = np.asarray(engine.dix.frag_of)
+    fa = frag_of[agent_of]
+    hot = np.nonzero((fa >= 0) & (rf[np.maximum(fa, 0)] >= 0))[0]
+    t0 = tg[fa[hot[0]]]
+    far = hot[tg[fa[hot]] != t0]
+    reqs = [rt.submit(int(hot[0]), int(far[i % far.size]))
+            for i in range(40)]
+    rt.flush()
+    assert engine.planner.last_counts["cross_res"] > 0
+    for r in reqs:
+        assert r.wait(10.0) and r.error is None
+    after = {case: fn._cache_size()
+             for case, fn in engine.planner._fns.items()}
+    assert after == sizes, f"epoch swap recompiled: {sizes} -> {after}"
+    rt.close()
