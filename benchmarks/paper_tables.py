@@ -279,7 +279,8 @@ def exp9_sustained_load(out: List[str]) -> None:
                                workload_pairs)
 
     out.append("exp9,graph,rate_qps,cache,refresh,achieved_qps,"
-               "p50_ms,p99_ms,hit_rate,mean_occ,epochs,oracle_bad")
+               "p50_ms,p99_ms,hit_rate,mean_occ,epochs,oracle_bad,"
+               "max_gap_ms,stale_resp")
     name, g = next(_graphs((2500,)))
     ix = _build_ix(g)
     for rate in (500.0, 2000.0):
@@ -292,13 +293,15 @@ def exp9_sustained_load(out: List[str]) -> None:
                 rt.warmup()
                 pairs = workload_pairs(eng.g, "zipf",
                                        max(1, int(rate * 2.5)), seed=9)
-                rep, graphs, _drv = run_load_with_refresh(
+                rep, graphs, drv = run_load_with_refresh(
                     rt, pairs, rate_qps=rate, seed=5,
                     refresh_rounds=2 if refresh else 0,
-                    refresh_interval_s=0.2, refresh_seed=17)
+                    refresh_interval_s=0.2, refresh_seed=17,
+                    refresh_pipelined=refresh)
                 rt.close()
-                _n, bad = validate_against_epochs(rep.requests,
-                                                  graphs, sample=32)
+                _n, bad = validate_against_epochs(
+                    rep.requests, graphs, sample=32,
+                    evicted=drv.evicted_epochs if drv else ())
                 st = rep.runtime_stats
                 epochs = len({r.epoch for r in rep.requests})
                 out.append(
@@ -307,7 +310,9 @@ def exp9_sustained_load(out: List[str]) -> None:
                     f"{rep.achieved_qps:.0f},{rep.p50_ms},"
                     f"{rep.p99_ms},"
                     f"{st.get('cache_hit_rate', 0.0):.3f},"
-                    f"{st['mean_occupancy']:.3f},{epochs},{bad}")
+                    f"{st['mean_occupancy']:.3f},{epochs},{bad},"
+                    f"{rep.max_serving_gap_ms},"
+                    f"{rep.stale_responses}")
 
 
 def exp10_scale(out: List[str]) -> None:

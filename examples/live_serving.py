@@ -38,11 +38,15 @@ def main() -> None:
     d = runtime.query(3, g.n - 5)
     print(f"single query dist(3, {g.n - 5}) = {d}")
 
-    # open-loop Zipf load with two concurrent refresh waves
+    # open-loop Zipf load with two concurrent refresh waves, staged
+    # through the prioritized refresh pipeline (DESIGN.md §14): the
+    # busiest-served groups re-close first and every intermediate
+    # epoch publishes with an explicit staleness descriptor
     pairs = workload_pairs(engine.g, "zipf", 3000, seed=2)
     report, graphs, driver = run_load_with_refresh(
         runtime, pairs, rate_qps=600.0, seed=3, refresh_rounds=2,
-        refresh_frac=0.03, refresh_interval_s=0.2, refresh_seed=5)
+        refresh_frac=0.03, refresh_interval_s=0.2, refresh_seed=5,
+        refresh_pipelined=True)
     runtime.close()
 
     stats = report.runtime_stats
@@ -56,10 +60,16 @@ def main() -> None:
           f"(full={stats['flush_full']}, "
           f"deadline={stats['flush_deadline']}), occupancy "
           f"{stats['mean_occupancy']:.1%}")
-    print(f"epochs served: {epochs} "
-          f"(refresh mean {driver.as_record()['refresh_mean_s']}s)")
+    rec = driver.as_record()
+    print(f"epochs served: {epochs} (refresh mean "
+          f"{rec['refresh_mean_s']}s across {rec['refresh_items']} "
+          f"pipelined work items)")
+    print(f"staleness: max serving gap {report.max_serving_gap_ms}ms, "
+          f"{report.stale_responses} responses from mid-pipeline "
+          f"epochs, max lag {report.max_staleness_batches} batch(es)")
     checked, bad = validate_against_epochs(report.requests, graphs,
-                                           sample=48)
+                                           sample=48,
+                                           evicted=driver.evicted_epochs)
     assert bad == 0, f"{bad} responses broke epoch consistency"
     print(f"validated {checked} responses against their serving "
           "epoch's host oracle: all exact — live-serving demo OK")

@@ -19,8 +19,17 @@ offline-serve and live-serve histories never mix).  Same 2.5x median
 rule; the run also re-asserts the per-epoch oracle check, so the gate
 doubles as a consistency smoke.
 
+``--refresh`` gates the concurrent-refresh path (``section:
+"serve_refresh"``, emitted by every ``--live`` run that refreshes):
+BOTH the refresh wall time (``refresh_max_s``) and the longest
+foreground serving gap (``max_serving_gap_ms``) must stay within
+``--factor`` x their committed medians — the second metric is the
+stop-the-world detector, failing long before wall time moves if a
+change re-serializes refresh against the serving flushes.
+
     python scripts/bench_gate.py                         # CI invocation
     python scripts/bench_gate.py --live                  # live-serve p99 gate
+    python scripts/bench_gate.py --refresh               # refresh + gap gate
     python scripts/bench_gate.py --inject-slowdown 10    # self-test: the
         fresh measurement is multiplied by 10x, which MUST fail the gate
 
@@ -141,6 +150,20 @@ def run_live(args) -> dict:
          "rate_qps": args.rate})
 
 
+def run_refresh(args) -> dict:
+    """Run the live smoke WITH concurrent refresh and return its fresh
+    ``serve_refresh`` record (the per-run refresh/staleness summary the
+    driver emits alongside ``serve_live``)."""
+    return _run_serve_cmd(
+        args,
+        ["--live", "--rate", str(args.rate),
+         "--live-seconds", str(args.live_seconds), "--mix", args.mix,
+         "--live-update-batches",
+         str(max(1, args.live_update_batches))],
+        {"section": "serve_refresh", "mix": args.mix,
+         "rate_qps": args.rate})
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--history", default=os.path.join(
@@ -181,14 +204,37 @@ def main() -> int:
     live.add_argument("--live-update-batches", type=int, default=1,
                       help="concurrent refresh rounds during the "
                            "live smoke")
+    live.add_argument("--refresh", action="store_true",
+                      help="gate the concurrent-refresh path (section "
+                           "serve_refresh) instead: refresh wall time "
+                           "(refresh_max_s) AND the longest foreground "
+                           "serving gap (max_serving_gap_ms) both gate "
+                           "against their committed medians")
     args = ap.parse_args()
 
     from repro.perflog import read_records
 
     ensure_distinct_files(args.fresh, args.history)
-    if args.live:
+    if args.refresh:
+        fresh = run_refresh(args)
+        # two metrics gate together: the refresh must not get slower
+        # AND the foreground must keep serving while it runs (a
+        # regression to stop-the-world shows up as a huge serving gap
+        # long before refresh wall time moves)
+        checks = [("refresh_max_s", "s refresh"),
+                  ("max_serving_gap_ms", "ms gap")]
+        match = {"section": "serve_refresh",
+                 "graph": f"road{args.nodes}",
+                 "backend": fresh.get("backend"), "mix": args.mix,
+                 "rate_qps": args.rate,
+                 "pipelined": fresh.get("pipelined")}
+        desc = (f"road{args.nodes}/refresh/{args.mix}"
+                f"@{args.rate:.0f}qps/"
+                f"pipelined={fresh.get('pipelined')}/"
+                f"{fresh.get('backend')}")
+    elif args.live:
         fresh = run_live(args)
-        metric, unit = "p99_ms", "ms p99"
+        checks = [("p99_ms", "ms p99")]
         # separate section + config key: live histories never mix with
         # offline serve records or with differently-shaped live runs
         match = {"section": "serve_live", "graph": f"road{args.nodes}",
@@ -201,36 +247,40 @@ def main() -> int:
                 f"{fresh.get('backend')}")
     else:
         fresh = run_serve(args)
-        metric, unit = "us_per_query", "us/query"
+        checks = [("us_per_query", "us/query")]
         match = {"section": "serve", "graph": f"road{args.nodes}",
                  "mode": args.mode, "backend": fresh.get("backend"),
                  "batch_size": args.batch_size}
         desc = (f"road{args.nodes}/{args.mode}/{fresh.get('backend')}/"
                 f"b{args.batch_size}")
 
-    fresh_val = fresh[metric] * args.inject_slowdown
-    if args.inject_slowdown != 1.0:
-        print(f"bench_gate: INJECTED {args.inject_slowdown}x slowdown "
-              f"({fresh[metric]} -> {fresh_val:.3f}{unit})")
-
-    window = history_window(read_records(args.history), match, metric,
-                            args.last)
-    if not window:
-        print(f"bench_gate: PASS (no committed history for {desc} in "
-              f"{args.history}; nothing to regress against)")
-        return 0
-    baseline = statistics.median(window)
-    limit = args.factor * baseline
-    print(f"bench_gate: fresh {fresh_val:.3f}{unit} vs median of last "
-          f"{len(window)} committed records {baseline:.3f}{unit} "
-          f"(limit {limit:.3f} = {args.factor}x)")
-    if fresh_val > limit:
-        print(f"bench_gate: FAIL — {fresh_val:.3f}{unit} is "
-              f"{fresh_val / baseline:.2f}x the committed median "
-              f"(allowed {args.factor}x)")
-        return 1
-    print("bench_gate: PASS")
-    return 0
+    history = read_records(args.history)
+    failed = 0
+    for metric, unit in checks:
+        fresh_val = fresh[metric] * args.inject_slowdown
+        if args.inject_slowdown != 1.0:
+            print(f"bench_gate: INJECTED {args.inject_slowdown}x "
+                  f"slowdown ({fresh[metric]} -> {fresh_val:.3f}{unit})")
+        window = history_window(history, match, metric, args.last)
+        if not window:
+            print(f"bench_gate: PASS [{metric}] (no committed history "
+                  f"for {desc} in {args.history}; nothing to regress "
+                  f"against)")
+            continue
+        baseline = statistics.median(window)
+        limit = args.factor * baseline
+        print(f"bench_gate: [{metric}] fresh {fresh_val:.3f}{unit} vs "
+              f"median of last {len(window)} committed records "
+              f"{baseline:.3f}{unit} (limit {limit:.3f} = "
+              f"{args.factor}x)")
+        if fresh_val > limit:
+            print(f"bench_gate: FAIL — [{metric}] {fresh_val:.3f}{unit} "
+                  f"is {fresh_val / baseline:.2f}x the committed "
+                  f"median (allowed {args.factor}x)")
+            failed = 1
+        else:
+            print(f"bench_gate: PASS [{metric}]")
+    return failed
 
 
 if __name__ == "__main__":

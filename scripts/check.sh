@@ -76,6 +76,23 @@ if [[ "${CHECK_SKIP_SCALE:-}" != "1" ]]; then
         python -m repro.launch.serve --graph road64k --batches 1 \
         --batch-size 256 --validate 8 --update-batches 0 \
         --expect-hierarchy 3 --max-s2-ratio 0.5 --json ""
+    # Live serving under concurrent refresh at scale (DESIGN.md §14):
+    # the foreground must keep completing responses while a 2% update
+    # batch re-closes through the pipeline — --max-serving-gap fails
+    # the run on the longest response-completion gap, which is exactly
+    # where a stop-the-world re-close shows up (the road64k refresh
+    # wall is ~4 min; a blocked foreground gaps that long, while the
+    # pipelined path measures ~8s worst-case flush-under-contention,
+    # so 15s separates the two regimes with CI-machine margin).
+    # 1024-cap flushes and 60 qps keep serving under capacity at this
+    # scale (flushes are seconds each while refresh hogs the cores).
+    # Responses carry staleness tags; sampled epochs oracle-validated.
+    run_stage "scale live smoke (road64k, pipelined refresh, gap-gated)" \
+        python -m repro.launch.serve --graph road64k --live \
+        --rate 60 --live-seconds 8 --mix zipf --live-batch 1024 \
+        --live-update-batches 1 --update-frac 0.02 \
+        --live-update-every 2 --live-pipelined \
+        --max-serving-gap 15 --validate 8 --json ""
 else
     echo "== scale smoke (road64k) =="
     echo "-- scale smoke: SKIPPED (CHECK_SKIP_SCALE=1)"

@@ -903,6 +903,9 @@ class RefreshStats:
     total_increase: float
     decrease_only: bool          # no weight rose (jam-clear batch)
     timings: dict
+    # how the top closure was produced: "carry" (no overlay delta),
+    # "decrease" (bounded relaxation fast path), "full_fw", "dense"
+    top_closure: str = "carry"
 
     @property
     def dirty_frag_frac(self) -> float:
@@ -915,6 +918,7 @@ class RefreshStats:
             "dirty_frag_frac": round(self.dirty_frag_frac, 4),
             "dirty_pieces": f"{self.n_dirty_pieces}/{self.n_pieces}",
             "decrease_only": self.decrease_only,
+            "top_closure": self.top_closure,
             "refresh_s": round(self.timings.get("total", 0.0), 4),
         }
 
@@ -987,6 +991,8 @@ def refresh_hier_stage(plan: BuildPlan, dix: DeviceIndex,
     w_src = plan.sup_w
     d2, d2_next = dix.d2, dix.d2_next
     dirty_top = False
+    top_closure = "carry"
+    lw_old = np.empty(0, np.float32)
     for li, h in enumerate(levels):
         sl = h.slot_sf[cur]
         sfs = np.unique(sl[sl >= 0]).astype(np.int64)
@@ -1028,13 +1034,27 @@ def refresh_hier_stage(plan: BuildPlan, dix: DeviceIndex,
     else:
         dirty_top = True
     if dirty_top:
-        d2, d2_next = hierarchy.l2_stage(levels[-1], force=force)
+        # decrease-only fast path: when every changed top slot weight
+        # went DOWN, a bounded (min,+) relaxation seeded from the old
+        # closure is exact (hierarchy.l2_decrease_stage); any increase
+        # — or a too-large touched set — falls back to the full FW
+        h = levels[-1]
+        fast = None
+        if cur.size and bool(np.all(h.l2_w[cur] <= lw_old[cur])):
+            fast = hierarchy.l2_decrease_stage(h, d2, d2_next, cur)
+        if fast is not None:
+            d2, d2_next = fast
+            top_closure = "decrease"
+        else:
+            d2, d2_next = hierarchy.l2_stage(h, force=force)
+            top_closure = "full_fw"
     return {
         "fields": {"sf_closure": tuple(closures),
                    "sf_next": tuple(nexts), "l2row": tuple(rows_t),
                    "d2": d2, "d2_next": d2_next},
         "ov_slot": hierarchy.ov_slot_map(plan),
         "l2_slot": l2_slots,
+        "top_closure": top_closure,
     }
 
 
@@ -1139,6 +1159,7 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
         l2_slot = getattr(dix, "host_l2_slot", None)
         res_frag = getattr(dix, "host_res_frag", None)
         topgrp_frag = getattr(dix, "host_topgrp_frag", None)
+        top_closure = "carry"
         if changed.any():
             if plan.hierarchy_levels >= 2:
                 hres = refresh_hier_stage(plan, dix,
@@ -1147,6 +1168,7 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
                 hier_fields = dict(hres["fields"])
                 ov_slot = hres["ov_slot"]
                 l2_slot = hres["l2_slot"]
+                top_closure = hres["top_closure"]
                 d_super, super_next = dix.d_super, dix.super_next
                 # re-lift the resident rows against the refreshed
                 # per-level tables (same deterministic stage as the
@@ -1162,6 +1184,7 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
             else:
                 d_super, super_next = super_stage(plan, force=force)
                 ov_slot = overlay_slot_table(plan)
+                top_closure = "dense"
         else:
             # no overlay weight changed: closure AND witnesses are
             # still exact, so the path tables carry over too
@@ -1231,7 +1254,8 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
         n_pieces=plan.n_pieces,
         n_eb_slots=int(upd.eb_slots.size), n_inert=upd.n_inert,
         total_increase=total_increase,
-        decrease_only=total_increase == 0.0, timings=timings)
+        decrease_only=total_increase == 0.0, timings=timings,
+        top_closure=top_closure)
     return new_dix, stats
 
 

@@ -28,7 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..kernels import ops
-from . import padding, sssp
+from . import padding, refresh_pipeline, sssp
 from .device_engine import (DeviceIndex, RefreshStats,
                             build_device_index_with_plan, refresh_index,
                             serve_cross, serve_cross_res, serve_cross_w,
@@ -283,10 +283,11 @@ class EpochedEngine:
             resident_mb=resident_mb)
         self.planner = QueryPlanner(self.dix, force=force, paths=paths)
         self.epoch = 0
-        # one-tuple publish (epoch, dix, graph): snapshot() readers get
-        # a mutually consistent triple with a single reference read,
-        # never a torn mix of old epoch number and new index
-        self._published = (0, self.dix, self.g)
+        # one-tuple publish (epoch, dix, graph, staleness): snapshot()
+        # readers get a mutually consistent quadruple with a single
+        # reference read, never a torn mix of old epoch number and new
+        # index (or of an epoch and another epoch's staleness tag)
+        self._published = (0, self.dix, self.g, refresh_pipeline.FRESH)
         self.force = force
         self.last_stats: RefreshStats | None = None
         # (dix, PathUnwinder) pair, replaced atomically (unwinder())
@@ -334,13 +335,15 @@ class EpochedEngine:
         return self.planner(s, t)
 
     def snapshot(self) -> tuple:
-        """Atomic ``(epoch, dix, graph)`` read of the published state.
+        """Atomic ``(epoch, dix, graph, staleness)`` read of the
+        published state.
 
-        The triple is replaced as one tuple by ``apply_updates``, so a
-        reader can pin an epoch for a whole micro-batch flush — serve
+        The quadruple is replaced as one tuple by ``apply_updates``, so
+        a reader can pin an epoch for a whole micro-batch flush — serve
         against ``dix``, key cache entries by ``epoch``, validate
-        against ``graph`` — without holding any lock and without ever
-        observing epoch e's number next to epoch e+1's arrays.
+        against ``graph``, tag responses with ``staleness`` — without
+        holding any lock and without ever observing epoch e's number
+        next to epoch e+1's arrays or another epoch's staleness tag.
         """
         return self._published
 
@@ -381,11 +384,17 @@ class EpochedEngine:
     def warmup(self, batch_size: int) -> None:
         self.planner.warmup(batch_size)
 
-    def apply_updates(self, u, v, w) -> RefreshStats:
+    def apply_updates(self, u, v, w, *,
+                      staleness: "refresh_pipeline.Staleness | None"
+                      = None) -> RefreshStats:
         """Absorb a weight-update batch and publish the next epoch.
 
         Serving continues on the old epoch until the final swap; the
         lock only serializes concurrent updaters, never readers.
+        ``staleness`` is the recency descriptor a staged caller
+        (core.refresh_pipeline.RefreshPipeline) attaches to the
+        published epoch; a direct (monolithic) call publishes a
+        complete tag — the epoch reflects everything it was handed.
         """
         with self._lock:
             w_old = self.g.edge_w[self.g.edge_ids(u, v)]
@@ -401,7 +410,12 @@ class EpochedEngine:
             self.dix = new_dix
             self.planner.set_index(new_dix)
             self.epoch += 1
-            self._published = (self.epoch, new_dix, g_new)
+            if staleness is None:
+                prev = self._published[3]
+                sub = max(prev.submitted, prev.watermark) + 1
+                staleness = refresh_pipeline.Staleness(
+                    watermark=sub, submitted=sub)
+            self._published = (self.epoch, new_dix, g_new, staleness)
             self.last_stats = stats
             return stats
 

@@ -521,17 +521,143 @@ def l2_overlay(hier: HierPlan) -> jax.Array:
     return jnp.asarray(m)
 
 
+def first_hops(adj: np.ndarray, dist: np.ndarray,
+               rows: Optional[np.ndarray] = None,
+               cols: Optional[np.ndarray] = None) -> np.ndarray:
+    """Canonical first-hop witnesses from (adjacency, exact closure).
+
+    next[i, j] = the smallest k != i with adj[i, k] finite and
+    adj[i, k] + dist[k, j] == dist[i, j]; -1 on the diagonal and for
+    unreachable pairs.  A pure function of the two tables — independent
+    of which kernel (or incremental relaxation) produced ``dist`` — so
+    the scratch build and every refresh path derive bit-identical
+    witness tables, extending the refresh == rebuild contract to
+    ``d2_next``.  Positive edge weights make the chase strictly
+    decrease dist[., j], so it always terminates.  ``rows``/``cols``
+    restrict the output block (the decrease fast path re-derives only
+    the rows/columns whose inputs changed).
+    """
+    n = dist.shape[0]
+    rows = np.arange(n, dtype=np.int64) if rows is None else rows
+    cols = np.arange(n, dtype=np.int64) if cols is None else cols
+    a = adj.astype(np.float32, copy=True)
+    np.fill_diagonal(a, INF)                     # k == i never witnesses
+    dc = dist[:, cols]                           # [n, m] candidate tails
+    out = np.full((rows.size, cols.size), -1, np.int32)
+    # chunk rows so the [c, n, m] candidate cube stays ~64 MiB
+    chunk = max(1, (1 << 24) // max(1, n * cols.size))
+    for i0 in range(0, rows.size, chunk):
+        ri = rows[i0:i0 + chunk]
+        ar = a[ri]                               # [c, n]
+        tgt = dist[np.ix_(ri, cols)]             # [c, m]
+        ok = (np.isfinite(ar)[:, :, None]
+              & (ar[:, :, None] + dc[None, :, :] == tgt[:, None, :]))
+        hop = np.argmax(ok, axis=1).astype(np.int32)
+        out[i0:i0 + chunk] = np.where(
+            ok.any(axis=1) & np.isfinite(tgt), hop, -1)
+    return out
+
+
 def l2_stage(hier: HierPlan, *, force=None) -> tuple[jax.Array,
                                                      jax.Array]:
-    """Top stage: dense witness FW closure of the LAST level's boundary
-    set -> (d2, d2_next) with the +inf sentinel row/col appended."""
+    """Top stage: dense FW closure of the LAST level's boundary set ->
+    (d2, d2_next) with the +inf sentinel row/col appended.  Witnesses
+    come from ``first_hops`` on the closed distances rather than the
+    FW kernel's pivot-order-dependent tie-breaks, so the decrease-only
+    refresh fast path (``l2_decrease_stage``) can reproduce them
+    array-equal without re-running the full closure."""
     S2 = hier.S2
     d2 = jnp.full((S2 + 1, S2 + 1), INF, jnp.float32)
     d2_next = jnp.full((S2 + 1, S2 + 1), -1, jnp.int32)
     if S2 == 0 or hier.l2_src.size == 0:
         return d2, d2_next
-    d_s, n_s = ops.fw_next(l2_overlay(hier), force=force)
-    return (d2.at[:S2, :S2].set(d_s), d2_next.at[:S2, :S2].set(n_s))
+    adj = np.asarray(l2_overlay(hier))
+    d_s = np.asarray(ops.fw_apsp(jnp.asarray(adj), force=force))
+    n_s = first_hops(adj, d_s)
+    return (d2.at[:S2, :S2].set(d_s),
+            d2_next.at[:S2, :S2].set(jnp.asarray(n_s)))
+
+
+#: decrease fast path bail-out: above this fraction of S2 touched, the
+#: r x r seed closure + [S2, r, S2] relaxation stops beating full FW
+DECREASE_MAX_FRAC = 8
+
+
+def l2_decrease_stage(hier: HierPlan, d2_old: jax.Array,
+                      d2_next_old: jax.Array,
+                      changed_slots: np.ndarray
+                      ) -> Optional[tuple[jax.Array, jax.Array]]:
+    """Decrease-only incremental top closure (DESIGN.md §14).
+
+    Precondition (checked by the caller): every slot in
+    ``changed_slots`` carries a weight <= its previous one and no other
+    slot changed.  Then with U = the changed slots' endpoints and
+    M* = the closed [r, r] block of min(old closure on U, new changed
+    weights), the exact new closure is
+
+        D_new = min(D_old, D_old[:, U] (x) M* (x) D_old[U, :])
+
+    — candidates never undershoot (every old path survives a decrease
+    with weight >= its new true distance), and any strictly shorter new
+    path splits at its first/last changed-edge endpoints, both in U, so
+    the three-factor contraction reaches it.  Witnesses re-derive via
+    ``first_hops`` only on the rows/columns whose adjacency row or
+    closure column changed; everything else carries over — for (i, j)
+    with both outside that set, adj[i, :], dist[:, j] and dist[i, j]
+    are all unchanged, so the canonical witness is too.
+
+    Returns the sentinel-padded (d2, d2_next) pair, or None when the
+    touched endpoint set is too large for the fast path to pay
+    (caller falls back to the full ``l2_stage``).
+    """
+    S2 = hier.S2
+    u_ids = np.unique(np.concatenate(
+        [hier.l2_src[changed_slots], hier.l2_dst[changed_slots]]
+    )).astype(np.int64)
+    r = int(u_ids.size)
+    if r == 0 or r > max(16, S2 // DECREASE_MAX_FRAC):
+        return None
+    d_old = np.asarray(d2_old)[:S2, :S2]
+    nxt_old = np.asarray(d2_next_old)[:S2, :S2]
+    # seed block: old closure restricted to U, min-merged with the NEW
+    # changed-slot weights, then closed by a tiny r x r FW
+    m = d_old[np.ix_(u_ids, u_ids)].copy()
+    pos = np.full(S2, -1, np.int64)
+    pos[u_ids] = np.arange(r)
+    pa = pos[hier.l2_src[changed_slots]]
+    pb = pos[hier.l2_dst[changed_slots]]
+    wc = hier.l2_w[changed_slots].astype(np.float32)
+    np.minimum.at(m, (pa, pb), wc)
+    np.minimum.at(m, (pb, pa), wc)
+    np.fill_diagonal(m, 0.0)
+    for k in range(r):
+        np.minimum(m, m[:, k, None] + m[None, k, :], out=m)
+    # two-sided relaxation, chunked so [c, r, S2] stays ~64 MiB
+    left = d_old[:, u_ids]                        # [S2, r]
+    right = d_old[u_ids, :]                       # [r, S2]
+    lm = np.min(left[:, :, None] + m[None, :, :], axis=1)  # [S2, r]
+    d_new = d_old.copy()
+    chunk = max(1, (1 << 24) // max(1, r * S2))
+    for i0 in range(0, S2, chunk):
+        cand = np.min(lm[i0:i0 + chunk, :, None] + right[None, :, :],
+                      axis=1)
+        np.minimum(d_new[i0:i0 + chunk], cand,
+                   out=d_new[i0:i0 + chunk])
+    # canonical witnesses on the changed rows/columns only (D stays
+    # symmetric, so changed rows == changed columns)
+    touched = np.union1d(
+        u_ids, np.nonzero((d_new != d_old).any(axis=1))[0])
+    adj = np.asarray(l2_overlay(hier))
+    nxt_new = nxt_old.copy()
+    nxt_new[touched, :] = first_hops(adj, d_new, rows=touched)
+    rest = np.setdiff1d(np.arange(S2, dtype=np.int64), touched)
+    if rest.size and touched.size:
+        nxt_new[np.ix_(rest, touched)] = first_hops(
+            adj, d_new, rows=rest, cols=touched)
+    d2 = jnp.full((S2 + 1, S2 + 1), INF, jnp.float32)
+    d2_next = jnp.full((S2 + 1, S2 + 1), -1, jnp.int32)
+    return (d2.at[:S2, :S2].set(jnp.asarray(d_new)),
+            d2_next.at[:S2, :S2].set(jnp.asarray(nxt_new)))
 
 
 # ---------------------------------------------------------------------------

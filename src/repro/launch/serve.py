@@ -281,8 +281,10 @@ def _paths_loop(engine: EpochedEngine, args) -> list:
 
 def _live_loop(engine: EpochedEngine, args) -> list:
     """Online serving runtime under open-loop load (DESIGN.md §11),
-    optionally with concurrent background refresh; returns one
-    ``section: "serve_live"`` perf record."""
+    optionally with concurrent background refresh (pipelined through
+    the prioritized staged path by default, DESIGN.md §14); returns a
+    ``section: "serve_live"`` perf record, plus a ``serve_refresh``
+    record when refresh rounds ran."""
     from ..serving import (ServingRuntime, run_load_with_refresh,
                            validate_against_epochs, workload_pairs)
 
@@ -304,6 +306,7 @@ def _live_loop(engine: EpochedEngine, args) -> list:
         refresh_frac=args.update_frac,
         refresh_interval_s=args.live_update_every,
         refresh_seed=args.seed,
+        refresh_pipelined=args.live_pipelined,
         wait_timeout_s=args.live_wait_timeout,
         join_timeout_s=args.live_join_timeout)
     runtime.close()
@@ -321,11 +324,25 @@ def _live_loop(engine: EpochedEngine, args) -> list:
           f"(full={stats['flush_full']} "
           f"deadline={stats['flush_deadline']}); epochs served "
           f"{epochs}")
+    if args.live_update_batches:
+        print(f"live staleness: max serving gap "
+              f"{report.max_serving_gap_ms:.0f}ms, "
+              f"{report.stale_responses} responses from mid-pipeline "
+              f"epochs, max lag {report.max_staleness_batches} "
+              "batch(es)")
+    evicted = driver.evicted_epochs if driver is not None else ()
     checked, bad = validate_against_epochs(
-        report.requests, graphs, sample=args.validate, seed=args.seed)
+        report.requests, graphs, sample=args.validate, seed=args.seed,
+        evicted=evicted)
     print(f"live validation: {bad} mismatches of {checked} vs the "
           "host oracle of each response's serving epoch")
     assert bad == 0
+    if args.max_serving_gap and \
+            report.max_serving_gap_ms > args.max_serving_gap * 1e3:
+        raise SystemExit(
+            f"serving stalled: max gap {report.max_serving_gap_ms:.0f}"
+            f"ms > --max-serving-gap {args.max_serving_gap}s — the "
+            "foreground paused longer than the allowed bound")
     rec = {
         "section": "serve_live",
         "graph": _label(args),
@@ -341,9 +358,24 @@ def _live_loop(engine: EpochedEngine, args) -> list:
         "oracle_bad": bad,
         **report.as_record(),
     }
+    records = [rec]
     if driver is not None:
         rec.update(driver.as_record())
-    return [rec]
+        records.append({
+            "section": "serve_refresh",
+            "graph": _label(args),
+            "backend": jax.default_backend(),
+            "mix": args.mix,
+            "rate_qps": args.rate,
+            "update_frac": args.update_frac,
+            "pipelined": args.live_pipelined,
+            "max_serving_gap_ms": report.max_serving_gap_ms,
+            "stale_responses": report.stale_responses,
+            "max_staleness_batches": report.max_staleness_batches,
+            "epochs_served": len(epochs),
+            **driver.as_record(),
+        })
+    return records
 
 
 # ---------------------------------------------------------------------------
@@ -416,6 +448,21 @@ def main() -> None:
     live.add_argument("--live-update-batches", type=int, default=0,
                       help="concurrent background refresh rounds "
                            "during the load run")
+    live.add_argument("--live-pipelined",
+                      action=argparse.BooleanOptionalAction,
+                      default=True,
+                      help="stage each refresh round through the "
+                           "prioritized pipeline (one epoch per work "
+                           "item, traffic-weighted order, staleness "
+                           "tags); --no-live-pipelined restores the "
+                           "monolithic one-epoch-per-round path")
+    live.add_argument("--max-serving-gap", type=float, default=0.0,
+                      help="fail if no response completes for longer "
+                           "than this many seconds during the live "
+                           "run (0 disables; the CI road64k smoke "
+                           "sets a bound well under the refresh "
+                           "wall time, so a stop-the-world re-close "
+                           "fails it)")
     live.add_argument("--live-wait-timeout", type=float, default=60.0,
                       help="seconds to wait for every response after "
                            "the load phase (raise at road64k scale: "

@@ -3,6 +3,8 @@ micro-batching, an epoch-consistent result cache, concurrent index
 refresh, and an open-loop load harness over the EpochedEngine.
 Workload mixes come straight from ``repro.data.queries``
 (``workload_pairs``, re-exported here for the load-harness callers)."""
+from ..core.refresh_pipeline import (RefreshPipeline, Staleness,
+                                     UpdateQueue)
 from ..data.queries import workload_pairs
 from .cache import CacheStats, EpochCache
 from .loadgen import (LoadReport, run_load, run_load_with_refresh,
@@ -12,7 +14,7 @@ from .scheduler import MicroBatcher, Request
 
 __all__ = [
     "CacheStats", "EpochCache", "LoadReport", "MicroBatcher",
-    "RefreshDriver", "Request", "ServingRuntime", "run_load",
-    "run_load_with_refresh", "validate_against_epochs",
-    "workload_pairs",
+    "RefreshDriver", "RefreshPipeline", "Request", "ServingRuntime",
+    "Staleness", "UpdateQueue", "run_load", "run_load_with_refresh",
+    "validate_against_epochs", "workload_pairs",
 ]

@@ -90,8 +90,17 @@ class EpochCache:
             return ent[1]
 
     def put(self, s: int, t: int, epoch: int, dist: float) -> None:
+        """Store only when the slot is empty or the incoming epoch is
+        >= the stored one: a slow flush still pinned at epoch e must
+        never clobber an (s, t) value already cached at e+1 — that
+        would force a spurious stale-evict + device recompute on the
+        next hot-pair lookup (and the fresher value is the one a
+        current reader can actually use)."""
         key = (s, t)
         with self._lock:
+            ent = self._od.get(key)
+            if ent is not None and ent[0] > epoch:
+                return
             self._od[key] = (epoch, dist)
             self._od.move_to_end(key)
             if len(self._od) > self.capacity:
@@ -99,7 +108,10 @@ class EpochCache:
                 self._evictions += 1
 
     def __len__(self) -> int:
-        return len(self._od)
+        # snapshot under the lock: len(dict) mid-rehash from a
+        # concurrent put is a torn read
+        with self._lock:
+            return len(self._od)
 
     def stats(self) -> CacheStats:
         with self._lock:

@@ -36,6 +36,14 @@ class LoadReport:
     p99_ms: float
     mean_ms: float
     max_ms: float
+    # serving-gap / staleness observability (DESIGN.md §14): the
+    # longest completion-time gap between consecutive responses (a
+    # stop-the-world refresh shows up here as one huge gap), how many
+    # responses were served from a mid-pipeline epoch, and the worst
+    # batch lag any response carried
+    max_serving_gap_ms: float = 0.0
+    stale_responses: int = 0
+    max_staleness_batches: int = 0
     runtime_stats: dict = field(default_factory=dict)
     requests: list = field(default_factory=list, repr=False)
 
@@ -49,6 +57,9 @@ class LoadReport:
             "p99_ms": self.p99_ms,
             "mean_ms": self.mean_ms,
             "max_ms": self.max_ms,
+            "max_serving_gap_ms": self.max_serving_gap_ms,
+            "stale_responses": self.stale_responses,
+            "max_staleness_batches": self.max_staleness_batches,
             **self.runtime_stats,
         }
 
@@ -106,10 +117,23 @@ def run_load(runtime: ServingRuntime, pairs: np.ndarray, *,
     # Request (t_sched), so cache-hit responses are measured the same
     # way as misses here AND everywhere else latency_s is read.
     lat_ms = np.array([r.latency_s for r in reqs]) * 1e3
-    return LoadReport(n_requests=n, offered_qps=rate_qps,
-                      achieved_qps=n / wall, wall_s=wall,
-                      runtime_stats=runtime.stats(), requests=reqs,
-                      **_percentiles(lat_ms))
+    # serving gap: the longest stretch of the run in which NO response
+    # completed (measured from run start through the last completion).
+    # A refresh that blocks the flusher appears here directly — the
+    # "foreground never pauses" acceptance gates on this number.
+    done = np.sort(np.array([r.t_done for r in reqs]))
+    gaps = np.diff(np.concatenate([[t0], done]))
+    stale = [r.staleness for r in reqs if r.staleness is not None]
+    return LoadReport(
+        n_requests=n, offered_qps=rate_qps,
+        achieved_qps=n / wall, wall_s=wall,
+        max_serving_gap_ms=round(float(gaps.max()) * 1e3, 3)
+        if gaps.size else 0.0,
+        stale_responses=sum(1 for s in stale if not s.complete),
+        max_staleness_batches=max(
+            (s.lag_batches for s in stale), default=0),
+        runtime_stats=runtime.stats(), requests=reqs,
+        **_percentiles(lat_ms))
 
 
 def run_load_with_refresh(runtime: ServingRuntime, pairs: np.ndarray,
@@ -118,15 +142,23 @@ def run_load_with_refresh(runtime: ServingRuntime, pairs: np.ndarray,
                           refresh_frac: float = 0.02,
                           refresh_interval_s: float = 0.0,
                           refresh_seed: int = 0,
+                          refresh_pipelined: bool = False,
                           wait_timeout_s: float = 60.0,
                           join_timeout_s: float = 120.0):
     """``run_load`` with an optional concurrent RefreshDriver — the one
     spelling of the load-phase teardown shared by ``serve.py --live``,
     benchmarks exp9, and the example.
 
+    ``refresh_pipelined`` stages each round through the prioritized
+    refresh pipeline (intermediate epochs, traffic-weighted by this
+    runtime's ``frag_traffic`` counters) instead of one monolithic
+    apply_updates per round.
+
     Returns ``(report, graphs_by_epoch, driver)``; ``driver`` is None
-    when ``refresh_rounds == 0``, and ``graphs_by_epoch`` always maps
-    every epoch a response can carry to its validation-oracle graph.
+    when ``refresh_rounds == 0``, and ``graphs_by_epoch`` maps every
+    retained epoch to its validation-oracle graph (pass
+    ``driver.evicted_epochs`` to ``validate_against_epochs`` so
+    capped-out snapshots are skipped, not miscounted).
     """
     from .runtime import RefreshDriver
 
@@ -135,40 +167,49 @@ def run_load_with_refresh(runtime: ServingRuntime, pairs: np.ndarray,
         driver = RefreshDriver(runtime.engine, rounds=refresh_rounds,
                                frac=refresh_frac,
                                interval_s=refresh_interval_s,
-                               seed=refresh_seed).start()
+                               seed=refresh_seed,
+                               pipelined=refresh_pipelined,
+                               traffic=runtime.frag_traffic).start()
     report = run_load(runtime, pairs, rate_qps=rate_qps, seed=seed,
                       wait_timeout_s=wait_timeout_s)
     if driver is not None:
         driver.join(timeout=join_timeout_s)
-        graphs = driver.graphs_by_epoch
+        graphs, _evicted = driver.graph_snapshots()
     else:
-        epoch, _dix, g = runtime.engine.snapshot()
+        epoch, _dix, g, _stale = runtime.engine.snapshot()
         graphs = {epoch: g}
     return report, graphs, driver
 
 
 def validate_against_epochs(requests, graphs_by_epoch, *,
-                            sample: int = 64,
-                            seed: int = 0) -> tuple[int, int]:
+                            sample: int = 64, seed: int = 0,
+                            evicted=()) -> tuple[int, int]:
     """Differential check: a sampled response must equal the host
     Dijkstra oracle on the graph of the epoch that served it.
 
     Returns ``(n_checked, n_bad)``; a response tagged with an epoch
     missing from ``graphs_by_epoch`` counts as bad (it was served
-    against an index no one published).
+    against an index no one published) UNLESS the epoch is in
+    ``evicted`` — the RefreshDriver's retention cap dropped its oracle
+    graph, so the response is skipped rather than miscounted.
     """
     from ..core import dijkstra
 
     rng = np.random.default_rng(seed)
     reqs = list(requests)
     idx = rng.permutation(len(reqs))[:sample]
+    checked = 0
     bad = 0
     for i in idx:
         req = reqs[i]
         g = graphs_by_epoch.get(req.epoch)
         if g is None:
+            if req.epoch in evicted:
+                continue
+            checked += 1
             bad += 1
             continue
+        checked += 1
         want = dijkstra.pair(g, req.s, req.t)
         bad += dijkstra.mismatches_oracle(want, req.dist)
-    return len(idx), bad
+    return checked, bad

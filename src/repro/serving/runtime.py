@@ -31,6 +31,7 @@ import numpy as np
 
 from ..core.dist_engine import EpochedEngine
 from ..core.graph import traffic_updates
+from ..core.refresh_pipeline import RefreshPipeline
 from .cache import EpochCache
 from .scheduler import MicroBatcher, Request
 
@@ -56,6 +57,11 @@ class ServingRuntime:
         self.engine = engine
         self.max_batch = engine.planner.bucket_sizes(max_batch)[-1]
         self.cache = EpochCache(cache_size) if cache_size else None
+        # per-fragment serving counters (both endpoints, represented
+        # nodes routed through their agent): the traffic weights the
+        # refresh pipeline prioritizes dirty groups by
+        self._traffic = np.zeros(engine.plan.k, np.int64)
+        self._traffic_lock = threading.Lock()
         self.batcher = MicroBatcher(self._serve_batch,
                                     max_batch=self.max_batch,
                                     deadline_s=deadline_s, auto=auto)
@@ -83,9 +89,27 @@ class ServingRuntime:
         on timeout or a failed flush."""
         return self.submit(s, t).result(timeout)
 
+    def frag_traffic(self) -> np.ndarray:
+        """Snapshot of the per-fragment serving counters (a copy)."""
+        with self._traffic_lock:
+            return self._traffic.copy()
+
+    def _count_traffic(self, batch) -> None:
+        plan = self.engine.plan
+        nodes = np.fromiter(
+            (x for r in batch for x in (r.s, r.t)), np.int64,
+            2 * len(batch))
+        frag = plan.frag_of[nodes]
+        frag = np.where(frag >= 0, frag,
+                        plan.frag_of[plan.agent_of[nodes]])
+        counts = np.bincount(frag[frag >= 0], minlength=plan.k)
+        with self._traffic_lock:
+            self._traffic += counts
+
     # -- the flush body (runs on the flusher thread in auto mode) ------
     def _serve_batch(self, batch) -> None:
-        epoch, dix, _g = self.engine.snapshot()
+        epoch, dix, _g, stale = self.engine.snapshot()
+        self._count_traffic(batch)
         misses = []
         for req in batch:
             hit = None if self.cache is None else \
@@ -93,6 +117,7 @@ class ServingRuntime:
             if hit is not None:
                 req.dist = hit
                 req.epoch = epoch
+                req.staleness = stale
                 req.cached = True
             else:
                 misses.append(req)
@@ -105,6 +130,7 @@ class ServingRuntime:
             for req, d in zip(misses, out):
                 req.dist = float(d)
                 req.epoch = epoch
+                req.staleness = stale
                 if self.cache is not None:
                     self.cache.put(req.s, req.t, epoch, req.dist)
 
@@ -128,22 +154,39 @@ class RefreshDriver:
     Retains ``graphs_by_epoch`` — the exact host graph published with
     each epoch — so responses tagged epoch e can be validated against
     the Dijkstra oracle *for e* even after later epochs land, and
-    records per-round refresh wall time.  ``interval_s`` spaces the
-    rounds out (0 = back-to-back).  Start with ``start()``; ``join()``
-    waits for completion.
+    records per-round refresh wall time.  Retention is capped at the
+    last ``retain_epochs`` epochs (a road64k host graph is tens of MB;
+    a long schedule retaining every epoch is an unbounded leak); the
+    ids evicted past the cap are tracked so the validation oracle can
+    tell "evicted" from "never published".  All snapshot access is
+    synchronized (``graph_snapshots``) — the foreground may sample
+    mid-run.  ``pipelined=True`` routes each round through the staged
+    ``core.refresh_pipeline.RefreshPipeline`` (one epoch per work item,
+    ``traffic``-prioritized) instead of one monolithic apply_updates.
+    ``interval_s`` spaces the rounds out (0 = back-to-back).  Start
+    with ``start()``; ``join()`` waits for completion.
     """
 
     def __init__(self, engine: EpochedEngine, *, rounds: int = 3,
                  frac: float = 0.02, interval_s: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, retain_epochs: int = 64,
+                 pipelined: bool = False, traffic=None,
+                 max_items: int = 8):
         self.engine = engine
         self.rounds = rounds
         self.frac = frac
         self.interval_s = interval_s
         self.seed = seed
-        e0, _dix, g0 = engine.snapshot()
+        self.retain_epochs = max(2, int(retain_epochs))
+        self.pipeline = RefreshPipeline(
+            engine, traffic=traffic, max_items=max_items) \
+            if pipelined else None
+        self._glock = threading.Lock()
+        e0, _dix, g0, _stale = engine.snapshot()
         self.graphs_by_epoch = {e0: g0}
+        self.evicted_epochs: set[int] = set()
         self.refresh_s: list[float] = []
+        self.items_per_round: list[int] = []
         self.error: BaseException | None = None
         self._thread = threading.Thread(target=self._run,
                                         name="refresh-driver",
@@ -170,16 +213,42 @@ class RefreshDriver:
     def done(self) -> bool:
         return not self._thread.is_alive()
 
+    def _record_epoch(self) -> None:
+        epoch, _dix, g, _stale = self.engine.snapshot()
+        with self._glock:
+            self.graphs_by_epoch[epoch] = g
+            while len(self.graphs_by_epoch) > self.retain_epochs:
+                old = min(self.graphs_by_epoch)
+                del self.graphs_by_epoch[old]
+                self.evicted_epochs.add(old)
+
+    def graph_snapshots(self) -> tuple[dict, set]:
+        """Synchronized copy of (graphs_by_epoch, evicted_epochs) —
+        safe to call from the foreground mid-run."""
+        with self._glock:
+            return dict(self.graphs_by_epoch), set(self.evicted_epochs)
+
     def _run(self) -> None:
         try:
             for r in range(self.rounds):
                 u, v, w = traffic_updates(self.engine.g, self.frac,
                                           seed=self.seed + 101 + r)
                 t0 = time.perf_counter()
-                self.engine.apply_updates(u, v, w)
+                if self.pipeline is not None:
+                    # staged: one epoch per work item, busiest groups
+                    # first — the foreground serves between items
+                    self.pipeline.submit(u, v, w)
+                    self.pipeline.plan()
+                    items = 0
+                    while self.pipeline.step() is not None:
+                        items += 1
+                        self._record_epoch()
+                    self.items_per_round.append(items)
+                else:
+                    self.engine.apply_updates(u, v, w)
+                    self._record_epoch()
+                    self.items_per_round.append(1)
                 self.refresh_s.append(time.perf_counter() - t0)
-                epoch, _dix, g = self.engine.snapshot()
-                self.graphs_by_epoch[epoch] = g
                 if self.interval_s:
                     time.sleep(self.interval_s)
         except BaseException as exc:   # surfaced by join()
@@ -188,6 +257,8 @@ class RefreshDriver:
     def as_record(self) -> dict:
         return {
             "refresh_rounds": len(self.refresh_s),
+            "refresh_pipelined": self.pipeline is not None,
+            "refresh_items": int(sum(self.items_per_round)),
             "refresh_mean_s": round(float(np.mean(self.refresh_s)), 4)
             if self.refresh_s else 0.0,
             "refresh_max_s": round(max(self.refresh_s), 4)

@@ -46,7 +46,7 @@ class Request:
     """
 
     __slots__ = ("s", "t", "t_submit", "t_sched", "t_done", "dist",
-                 "epoch", "cached", "error", "_done")
+                 "epoch", "staleness", "cached", "error", "_done")
 
     def __init__(self, s: int, t: int, t_sched: float | None = None):
         self.s = int(s)
@@ -56,6 +56,9 @@ class Request:
         self.t_done: float | None = None
         self.dist: float | None = None
         self.epoch: int | None = None
+        # the pinned epoch's recency tag (core.refresh_pipeline
+        # .Staleness), set by the serving flush alongside ``epoch``
+        self.staleness = None
         self.cached = False
         self.error: BaseException | None = None
         self._done = threading.Event()
@@ -270,13 +273,20 @@ class MicroBatcher:
         Bucketed by the planner's pow2 padding rule (floor 16) applied
         to the *whole* flush — an upper bound on executable shape,
         since the planner additionally splits each flush into per-case
-        buckets that may each pad smaller."""
-        mean = (self.flushed_requests / self.n_flushes
-                / self.max_batch) if self.n_flushes else 0.0
+        buckets that may each pad smaller.  All counters snapshot under
+        the lock: the flusher thread mutates them in ``_take``, so
+        off-lock reads could report torn mid-flush state (e.g. a bumped
+        ``n_flushes`` next to a not-yet-bumped histogram)."""
+        with self._cond:
+            n_flushes = self.n_flushes
+            flushed = self.flushed_requests
+            hist = dict(self._occ_hist)
+            reasons = dict(self.flush_reasons)
+        mean = (flushed / n_flushes / self.max_batch) if n_flushes \
+            else 0.0
         return {
-            "flushes": self.n_flushes,
+            "flushes": n_flushes,
             "mean_occupancy": round(mean, 4),
-            "occupancy_hist": {str(k): self._occ_hist[k]
-                               for k in sorted(self._occ_hist)},
-            **{f"flush_{k}": v for k, v in self.flush_reasons.items()},
+            "occupancy_hist": {str(k): hist[k] for k in sorted(hist)},
+            **{f"flush_{k}": v for k, v in reasons.items()},
         }

@@ -113,6 +113,47 @@ def test_decrease_and_increase_batches_agree():
     _assert_scratch_equal(engine)
 
 
+def test_hier_decrease_fast_path_matches_scratch():
+    """The top-closure decrease-only fast path (bounded (min,+)
+    relaxation seeded from the changed slot rows) must be taken for
+    small jam-clear batches on a hierarchical engine — and its d2 AND
+    d2_next must stay array-equal to the full FW re-close a scratch
+    rebuild runs.  An increase batch must never take it."""
+    g = road_like(420, seed=41)
+    engine = EpochedEngine(g, hierarchy_levels=2)
+
+    def assert_scratch_equal_hier():
+        # the from-scratch oracle must force the same overlay depth:
+        # "auto" would re-dense at this size and change table shapes
+        sdix = build_device_index(reweight_index(engine.ix, engine.g),
+                                  hierarchy_levels=2)
+        for f in REFRESHED_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(engine.dix, f)),
+                np.asarray(getattr(sdix, f)),
+                err_msg=f"epoch {engine.epoch}: field {f} diverged "
+                        "from from-scratch rebuild")
+
+    closures = []
+    for r in range(4):
+        u, v, w = traffic_updates(engine.g, frac=0.01, seed=60 + r,
+                                  localized=True, jam_frac=0.0)
+        stats = engine.apply_updates(u, v, w)
+        assert stats.decrease_only
+        closures.append(stats.top_closure)
+        assert_scratch_equal_hier()
+    assert "decrease" in closures, closures
+    assert "dense" not in closures       # hier engines never re-dense
+    assert stats.as_record()["top_closure"] == closures[-1]
+    # jam the whole region back up -> increases are never fast-pathed
+    u, v, w = traffic_updates(engine.g, frac=0.05, seed=60,
+                              localized=True, jam_frac=1.0)
+    stats = engine.apply_updates(u, v, w)
+    assert not stats.decrease_only
+    assert stats.top_closure in ("full_fw", "carry")
+    assert_scratch_equal_hier()
+
+
 def test_piece_only_increase_not_decrease_only():
     """Batch direction is judged against the edges' previous weights,
     not just overlay deltas: a jam entirely inside DRA pieces (no

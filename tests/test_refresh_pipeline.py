@@ -1,0 +1,273 @@
+"""Pipelined prioritized refresh tests (DESIGN.md §14).
+
+The contract: staging a coalesced update pool through per-group work
+items publishes only EXACT epochs.  Each intermediate epoch is the true
+index of a well-defined intermediate graph (device answers equal the
+host Dijkstra oracle on the engine's graph at that instant), every
+staleness descriptor tells the truth about what is still pending, and
+the final epoch of a drain is array-equal to a from-scratch rebuild on
+the fully-updated graph — staleness bounds recency, never correctness.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dijkstra
+from repro.core.device_engine import build_device_index
+from repro.core.dist_engine import EpochedEngine
+from repro.core.graph import road_like, traffic_updates
+from repro.core.refresh_pipeline import (FRESH, RefreshPipeline,
+                                         Staleness, UpdateQueue)
+from repro.core.supergraph import reweight_index
+from repro.launch.serve import REFRESHED_FIELDS
+from repro.serving import ServingRuntime
+
+
+# ---------------------------------------------------------------------------
+# queue + descriptor units (no engine)
+# ---------------------------------------------------------------------------
+def test_update_queue_coalesces_last_write_wins():
+    q = UpdateQueue()
+    s1 = q.submit([1, 2], [2, 3], [5.0, 6.0])
+    s2 = q.submit([2], [1], [9.0])      # same undirected edge, flipped
+    assert (s1, s2) == (1, 2)
+    assert len(q) == 2                   # coalesced, not 3
+    u, v, w, sub = q.take()
+    assert sub == 2 and len(q) == 0
+    pool = {(int(a), int(b)): float(x) for a, b, x in zip(u, v, w)}
+    assert pool == {(1, 2): 9.0, (2, 3): 6.0}
+    # drained: the next take is empty but keeps the sequence number
+    u, v, w, sub = q.take()
+    assert u.size == 0 and v.size == 0 and w.size == 0 and sub == 2
+
+
+def test_staleness_semantics():
+    assert FRESH.complete and FRESH.lag_batches == 0
+    s = Staleness(watermark=2, submitted=5, pending_updates=7,
+                  pending_groups=(0, 3))
+    assert not s.complete and s.lag_batches == 3
+    rec = s.as_record()
+    assert rec["pending_groups"] == 2 and rec["complete"] is False
+    assert rec["lag_batches"] == 3
+    assert Staleness(watermark=5, submitted=5).complete
+
+
+# ---------------------------------------------------------------------------
+# planning: priority order (no epochs published — plan only)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine():
+    g = road_like(380, seed=21)
+    return EpochedEngine(g)
+
+
+def _coalesced(u, v, w):
+    pool = {}
+    for a, b, x in zip(u, v, w):
+        pool[(min(int(a), int(b)), max(int(a), int(b)))] = float(x)
+    keys = np.asarray(list(pool), np.int64).reshape(-1, 2)
+    return keys[:, 0], keys[:, 1], np.asarray(list(pool.values()))
+
+
+def test_plan_orders_by_pending_dirt_without_traffic(engine):
+    """Without traffic counters, groups order by coalesced pending-edge
+    count (most dirt first) and the tail merges into one item."""
+    u, v, w = traffic_updates(engine.g, frac=0.2, seed=5)
+    pipe = RefreshPipeline(engine, max_items=4)
+    pipe.submit(u, v, w)
+    n = pipe.plan()
+    assert n == pipe.pending_items() <= 4
+    cu, cv, _cw = _coalesced(u, v, w)
+    grp = pipe._owner_group(cu, cv)
+    groups, counts = np.unique(grp, return_counts=True)
+    order = np.lexsort((groups, -counts.astype(float)))
+    heads = [it[0] for it in pipe._items]
+    # head items are single busiest-first groups; the final item is the
+    # merged remainder covering every leftover group exactly once
+    for i, gs in enumerate(heads[:-1]):
+        assert gs == (int(groups[order[i]]),)
+    assert sorted(g for gs in heads for g in gs) \
+        == sorted(int(g) for g in groups)
+    # every pooled edge landed in exactly one work item
+    assert sum(it[1][0].size for it in pipe._items) == cu.size
+
+
+def test_plan_orders_by_serving_traffic(engine):
+    """With traffic counters the busiest-SERVED group re-closes first,
+    even when another group has more pending edges."""
+    u, v, w = traffic_updates(engine.g, frac=0.2, seed=6)
+    cu, cv, _cw = _coalesced(u, v, w)
+    probe = RefreshPipeline(engine, max_items=64)
+    grp = probe._owner_group(cu, cv)
+    groups, counts = np.unique(grp, return_counts=True)
+    assert groups.size >= 2, "fixture pool touches a single group"
+    cold = int(groups[np.argmin(counts)])    # least dirty group
+    # craft traffic concentrated on `cold`'s fragments only
+    plan = engine.plan
+    frag2grp = np.asarray(plan.hier[0].sf_of_frag[:plan.k]
+                          if plan.hier else np.arange(plan.k))
+    per_frag = np.where(frag2grp == cold, 1000, 0).astype(np.int64)
+    pipe = RefreshPipeline(engine, traffic=lambda: per_frag,
+                           max_items=4)
+    pipe.submit(u, v, w)
+    assert pipe.plan() >= 2
+    assert pipe._items[0][0] == (cold,)
+
+
+def test_plan_is_noop_while_items_pending():
+    g = road_like(300, seed=7)
+    engine = EpochedEngine(g)
+    u, v, w = traffic_updates(g, frac=0.1, seed=3)
+    pipe = RefreshPipeline(engine, max_items=3)
+    pipe.submit(u, v, w)
+    n = pipe.plan()
+    assert n >= 2
+    # a new batch queues but does NOT reshuffle the in-flight plan
+    pipe.submit(u[:1], v[:1], w[:1] + 1)
+    assert pipe.plan() == n and len(pipe.queue) == 1
+    stats = pipe.drain()
+    assert len(stats) == n and pipe.pending_items() == 0
+    # the queued-mid-drain batch keeps the published descriptor honest:
+    # the drain's last epoch must NOT claim completeness over it
+    stale = engine.snapshot()[3]
+    assert not stale.complete and stale.lag_batches == 1
+    assert stale.pending_updates == 1
+    # the next plan picks up the queued batch
+    assert pipe.plan() == 1
+    assert pipe.step() is not None and pipe.step() is None
+    assert pipe.watermark == 2
+    assert engine.snapshot()[3].complete
+
+
+# ---------------------------------------------------------------------------
+# execution: staged epochs are exact, descriptors truthful
+# ---------------------------------------------------------------------------
+def _assert_epoch_exact(engine, rng, k=12):
+    pairs = rng.integers(0, engine.g.n, (k, 2))
+    got = engine.query(pairs[:, 0], pairs[:, 1])
+    for i, (a, b) in enumerate(pairs):
+        want = dijkstra.pair(engine.g, int(a), int(b))
+        assert not dijkstra.mismatches_oracle(want, got[i]), \
+            (engine.epoch, int(a), int(b), got[i], want)
+
+
+def _assert_final_matches_scratch(engine):
+    sdix = build_device_index(reweight_index(engine.ix, engine.g))
+    for f in REFRESHED_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(engine.dix, f)),
+            np.asarray(getattr(sdix, f)),
+            err_msg=f"field {f} diverged from from-scratch rebuild")
+
+
+def test_staged_epochs_exact_and_final_matches_scratch():
+    g = road_like(380, seed=33)
+    engine = EpochedEngine(g)
+    rng = np.random.default_rng(0)
+    u, v, w = traffic_updates(g, frac=0.08, seed=9)
+    pipe = RefreshPipeline(engine, max_items=4)
+    sub = pipe.submit(u, v, w)
+    n_items = pipe.plan()
+    assert n_items >= 2, "pool too small to stage"
+    e_start = engine.snapshot()[0]
+    applied = 0
+    prev_pending = None
+    while True:
+        stats = pipe.step()
+        if stats is None:
+            break
+        applied += 1
+        epoch, _dix, _g_now, stale = engine.snapshot()
+        assert epoch == e_start + applied    # one epoch per work item
+        # descriptor truthfulness at every stage
+        assert stale.submitted == sub
+        assert len(stale.pending_groups) >= pipe.pending_items() > 0 \
+            or stale.complete
+        if prev_pending is not None:
+            assert stale.pending_updates < prev_pending
+        prev_pending = stale.pending_updates
+        if pipe.pending_items():
+            assert not stale.complete and stale.lag_batches == 1
+        else:
+            assert stale.complete and stale.watermark == sub
+        # the staged epoch is EXACT for the engine's current graph
+        _assert_epoch_exact(engine, rng)
+    assert applied == n_items
+    assert pipe.watermark == sub
+    _assert_final_matches_scratch(engine)
+
+
+def test_step_failure_requeues_item_and_publishes_nothing():
+    g = road_like(300, seed=11)
+    engine = EpochedEngine(g)
+    u, v, w = traffic_updates(g, frac=0.05, seed=3)
+    pipe = RefreshPipeline(engine, max_items=3)
+    pipe.submit(u, v, w)
+    n = pipe.plan()
+    e0 = engine.snapshot()[0]
+
+    def boom(u, v, w, *, staleness=None):
+        raise RuntimeError("refresh died")
+
+    engine.apply_updates = boom          # shadow the bound method
+    with pytest.raises(RuntimeError, match="refresh died"):
+        pipe.step()
+    del engine.apply_updates
+    assert pipe.pending_items() == n     # the item went back in front
+    assert engine.snapshot()[0] == e0    # nothing was published
+    assert pipe.watermark == 0
+    # the retried drain completes and still lands on the exact index
+    assert len(pipe.drain()) == n
+    _assert_final_matches_scratch(engine)
+
+
+# ---------------------------------------------------------------------------
+# staged-epoch serving contract: scripted mid-pipeline interleaving
+# ---------------------------------------------------------------------------
+def test_staged_epoch_serving_contract():
+    """Serve between pipeline steps (deterministic, auto=False): every
+    response's staleness tag must be the descriptor of the epoch it was
+    pinned to — mid-pipeline epochs tagged incomplete with lag 1, the
+    final epoch complete — every response must equal the host oracle
+    for its epoch's graph, and the fully-refreshed index must be
+    array-equal to scratch."""
+    g = road_like(380, seed=55)
+    engine = EpochedEngine(g)
+    rt = ServingRuntime(engine, max_batch=32, cache_size=64, auto=False)
+    rng = np.random.default_rng(4)
+    graphs, stales = {}, {}
+    e0, _d, g0, s0 = engine.snapshot()
+    graphs[e0], stales[e0] = g0, s0
+    assert s0.complete                   # fresh build serves complete
+    reqs = []
+
+    def serve_some(k=6):
+        batch = [rt.submit(int(a), int(b))
+                 for a, b in rng.integers(0, g.n, (k, 2))]
+        rt.flush()
+        reqs.extend(batch)
+
+    serve_some()
+    u, v, w = traffic_updates(g, frac=0.08, seed=13)
+    pipe = RefreshPipeline(engine, traffic=rt.frag_traffic, max_items=4)
+    pipe.submit(u, v, w)
+    assert pipe.plan() >= 2
+    while pipe.step() is not None:
+        e, _d, ge, se = engine.snapshot()
+        graphs[e], stales[e] = ge, se
+        serve_some()
+    final_e = max(graphs)
+    mid = [e for e in graphs if e not in (e0, final_e)]
+    assert mid, "pipeline published no intermediate epoch"
+    assert stales[final_e].complete
+    for e in mid:
+        assert not stales[e].complete and stales[e].lag_batches == 1
+    for r in reqs:
+        assert r.done and r.error is None
+        assert r.staleness == stales[r.epoch], \
+            (r.epoch, r.staleness, stales[r.epoch])
+        want = dijkstra.pair(graphs[r.epoch], r.s, r.t)
+        assert not dijkstra.mismatches_oracle(want, r.dist), \
+            (r.epoch, r.s, r.t, r.dist, want)
+    assert any(not r.staleness.complete for r in reqs), \
+        "interleaving never served a mid-pipeline epoch"
+    _assert_final_matches_scratch(engine)

@@ -11,6 +11,7 @@ Interleavings are exercised twice: deterministically on one thread
 exactly), and as a threaded soak with a background RefreshDriver
 racing an open-loop submission stream across >= 3 published epochs.
 """
+import threading
 import time
 
 import numpy as np
@@ -68,6 +69,28 @@ def test_cache_lru_eviction():
     assert c.stats().evictions == 1 and len(c) == 2
     with pytest.raises(ValueError):
         EpochCache(capacity=0)
+
+
+def test_cache_put_never_clobbers_fresher_entry():
+    """Regression (the deterministic two-flush interleaving): flush A
+    pins epoch 0, flush B pins epoch 1; B's device serve finishes and
+    fills the cache FIRST, then A's slower serve lands its stale fill.
+    The write order below IS that interleaving — the stale put must be
+    dropped, not clobber the fresher entry (which would turn the next
+    hot-pair lookup into a spurious stale-miss, or worse, serve epoch
+    0's distance tagged fresh)."""
+    c = EpochCache(capacity=8)
+    c.put(1, 2, epoch=1, dist=7.0)       # flush B (newer epoch) lands
+    c.put(1, 2, epoch=0, dist=5.0)       # flush A (stale) arrives late
+    assert c.get(1, 2, epoch=1) == 7.0   # fresher entry survived
+    # same-epoch refills and forward progress still write through
+    c.put(1, 2, epoch=1, dist=6.5)
+    assert c.get(1, 2, epoch=1) == 6.5
+    c.put(1, 2, epoch=2, dist=9.0)
+    assert c.get(1, 2, epoch=2) == 9.0
+    # an empty slot accepts any epoch (no spurious drops on cold fills)
+    c.put(3, 4, epoch=0, dist=1.0)
+    assert c.get(3, 4, epoch=0) == 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +252,39 @@ def test_occupancy_buckets_are_planner_shapes():
     assert occ["flushes"] == 3
 
 
+def test_stats_reads_consistent_under_concurrent_flushes():
+    """Regression for the off-lock stats reads: ``occupancy()`` must
+    snapshot its counters under the batcher lock, so every report is
+    internally consistent (histogram total == flush count == reasons
+    total) even while the flusher thread is mutating them mid-flush."""
+    mb = MicroBatcher(_stub_serve, max_batch=4, deadline_s=0.0005,
+                      auto=True)
+    stop = threading.Event()
+    torn = []
+
+    def reader():
+        while not stop.is_set():
+            occ = mb.occupancy()
+            hist_total = sum(occ["occupancy_hist"].values())
+            reasons = (occ["flush_full"] + occ["flush_deadline"]
+                       + occ["flush_manual"])
+            if hist_total != occ["flushes"] or reasons != occ["flushes"]:
+                torn.append(occ)
+
+    th = threading.Thread(target=reader)
+    th.start()
+    try:
+        reqs = [mb.submit(i, i) for i in range(400)]
+        for r in reqs:
+            assert r.wait(timeout=10.0)
+    finally:
+        stop.set()
+        th.join()
+        mb.close()
+    assert not torn, torn[:3]
+    assert mb.flushed_requests == 400
+
+
 def test_batcher_close_drains_pending():
     mb = MicroBatcher(_stub_serve, max_batch=64, deadline_s=30.0,
                       auto=True)
@@ -260,14 +316,14 @@ def _check_vs_epoch_oracle(req, graphs_by_epoch):
 def _apply_round(eng, seed):
     u, v, w = traffic_updates(eng.g, frac=0.05, seed=seed)
     eng.apply_updates(u, v, w)
-    epoch, _dix, g = eng.snapshot()
+    epoch, _dix, g, _stale = eng.snapshot()
     return epoch, g
 
 
 def test_runtime_serves_exact_and_caches(engine):
     rt = ServingRuntime(engine, max_batch=64, cache_size=256,
                         auto=False)
-    epoch, _dix, g = engine.snapshot()
+    epoch, _dix, g, _stale = engine.snapshot()
     rng = np.random.default_rng(0)
     pairs = rng.integers(0, g.n, (20, 2))
     reqs = [rt.submit(int(a), int(b)) for a, b in pairs]
@@ -321,7 +377,7 @@ def test_cache_hit_latency_uses_scheduled_basis(engine):
 def test_planner_pinned_epoch_query(engine):
     """QueryPlanner.query(dix=...) serves an explicit older epoch even
     after set_index published a newer one."""
-    e0, dix0, g0 = engine.snapshot()
+    e0, dix0, g0, _stale = engine.snapshot()
     rng = np.random.default_rng(1)
     s = rng.integers(0, g0.n, 16)
     t = rng.integers(0, g0.n, 16)
@@ -343,7 +399,7 @@ def test_stale_cache_entry_detected_never_served(engine):
     against e+1's index, then cache-hit at e+1."""
     rt = ServingRuntime(engine, max_batch=64, cache_size=256,
                         auto=False)
-    e0, _dix, g0 = engine.snapshot()
+    e0, _dix, g0, _stale = engine.snapshot()
     s, t = 5, g0.n - 7
     r0 = rt.submit(s, t)
     rt.flush()
@@ -364,6 +420,31 @@ def test_stale_cache_entry_detected_never_served(engine):
     assert r3.cached and r3.epoch == e1 and r3.dist == r2.dist
 
 
+def test_slow_flush_cannot_clobber_fresh_cache(engine):
+    """The serving-level replay of the clobber regression: flush A pins
+    epoch e, the epoch bumps and flush B fills the cache at e+1, then
+    A's delayed fill (computed against e's pinned index) fires.  The
+    e+1 entry must keep hitting — before the epoch guard, the stale
+    fill overwrote it and the hot pair bounced off the stale check on
+    every subsequent flush."""
+    rt = ServingRuntime(engine, max_batch=64, cache_size=256,
+                        auto=False)
+    e0, dix0, g0, _stale = engine.snapshot()
+    s, t = 11, g0.n - 3
+    e1, _g1 = _apply_round(engine, seed=55)
+    rB = rt.submit(s, t)
+    rt.flush()                           # flush B: fills cache at e1
+    assert rB.epoch == e1 and not rB.cached
+    # flush A's serve was pinned at e0 and resolves only now
+    dA = float(engine.planner.query(np.asarray([s], np.int32),
+                                    np.asarray([t], np.int32),
+                                    dix=dix0)[0])
+    rt.cache.put(s, t, e0, dA)           # the late stale fill
+    r = rt.submit(s, t)
+    rt.flush()
+    assert r.cached and r.epoch == e1 and r.dist == rB.dist
+
+
 @pytest.mark.parametrize("order", [
     ("submit", "flush", "update", "submit", "flush"),
     ("submit", "update", "flush", "submit", "flush"),
@@ -378,7 +459,7 @@ def test_deterministic_interleavings(engine, order):
     the post-swap epoch, never torn)."""
     rt = ServingRuntime(engine, max_batch=64, cache_size=256,
                         auto=False)
-    e, _dix, g = engine.snapshot()
+    e, _dix, g, _stale = engine.snapshot()
     graphs = {e: g}
     # hash() is per-process salted; derive a stable per-order seed
     rng = np.random.default_rng(
@@ -438,17 +519,46 @@ def test_soak_concurrent_refresh(engine):
         assert r.error is None, f"flush failed mid-soak: {r.error!r}"
     rt.close()
     assert all(r.epoch == e_end for r in tail)
+    graphs, evicted = drv.graph_snapshots()
     epochs_seen = {r.epoch for r in reqs + tail}
-    assert epochs_seen <= set(drv.graphs_by_epoch)
+    assert epochs_seen <= set(graphs) | evicted
     checked, bad = validate_against_epochs(
-        reqs + tail, drv.graphs_by_epoch, sample=80, seed=1)
+        reqs + tail, graphs, sample=80, seed=1, evicted=evicted)
     assert checked >= 24 and bad == 0
     st = rt.stats()
     assert st["flushes"] > 0 and st["cache_hits"] > 0
     # sanity on the record shapes the load harness publishes
-    assert set(drv.as_record()) == {"refresh_rounds", "refresh_mean_s",
-                                    "refresh_max_s"}
-    assert drv.as_record()["refresh_rounds"] == 3
+    assert set(drv.as_record()) == {
+        "refresh_rounds", "refresh_pipelined", "refresh_items",
+        "refresh_mean_s", "refresh_max_s"}
+    rec = drv.as_record()
+    assert rec["refresh_rounds"] == 3 and not rec["refresh_pipelined"]
+
+
+def test_refresh_driver_retention_cap(engine):
+    """Regression for the unbounded graphs_by_epoch leak: retention
+    keeps only the last ``retain_epochs`` snapshots, records the ids it
+    evicted, and the validation oracle skips (never miscounts) them."""
+    e_start = engine.snapshot()[0]
+    drv = RefreshDriver(engine, rounds=5, frac=0.01, seed=7,
+                        retain_epochs=3).start()
+    drv.join(timeout=300.0)
+    graphs, evicted = drv.graph_snapshots()
+    assert len(graphs) == 3
+    # initial snapshot + 5 rounds = 6 recorded; 3 survive the cap
+    assert sorted(graphs) == [e_start + 3, e_start + 4, e_start + 5]
+    assert max(evicted) < min(graphs)        # oldest evicted first
+    assert {e_start, e_start + 1, e_start + 2} <= evicted
+
+    class _Resp:
+        def __init__(self, e):
+            self.epoch, self.s, self.t, self.dist = e, 0, 1, 0.0
+
+    reqs = [_Resp(e_start)] + [_Resp(-999)]
+    checked, bad = validate_against_epochs(reqs, graphs, sample=16,
+                                           seed=0, evicted=evicted)
+    # the evicted epoch is skipped; the never-published one counts bad
+    assert (checked, bad) == (1, 1)
 
 
 def test_resident_bucket_warm_across_epoch_swap():
