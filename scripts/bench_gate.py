@@ -27,6 +27,12 @@ foreground serving gap (``max_serving_gap_ms``) must stay within
 stop-the-world detector, failing long before wall time moves if a
 change re-serializes refresh against the serving flushes.
 
+Every fresh ``serve_live`` record must additionally carry the per-tier
+serving fields (``cache_hits`` / ``label_hits`` /
+``planner_dispatches`` plus the per-tier latencies, DESIGN.md §15); a
+record missing them fails loudly — committed history predating the hot
+tier is grandfathered, fresh runs are not.
+
     python scripts/bench_gate.py                         # CI invocation
     python scripts/bench_gate.py --live                  # live-serve p99 gate
     python scripts/bench_gate.py --refresh               # refresh + gap gate
@@ -105,6 +111,24 @@ def history_window(records: list, match: dict, metric: str,
     return window[-last:]
 
 
+# per-tier serving fields (DESIGN.md §15) every FRESH serve_live
+# record must carry; committed pre-hot-tier history is grandfathered —
+# the check runs on fresh records only, so old records stay readable
+# while a runtime that stops attributing responses per tier fails here
+TIER_FIELDS = ("cache_hits", "label_hits", "planner_dispatches",
+               "label_us_per_query", "planner_us_per_query",
+               "label_hit_rate", "hub_budget")
+
+
+def require_tier_fields(rec: dict) -> None:
+    missing = [f for f in TIER_FIELDS if f not in rec]
+    if missing:
+        raise SystemExit(
+            f"bench_gate: fresh serve_live record is missing per-tier "
+            f"fields {missing} — the serving runtime no longer "
+            "attributes responses to cache/label/planner tiers")
+
+
 def _run_serve_cmd(args, extra: list, record_filter: dict) -> dict:
     """Run the serve driver as a subprocess with ``extra`` flags and
     return the fresh record matching ``record_filter`` (or die)."""
@@ -140,21 +164,25 @@ def run_serve(args) -> dict:
 
 def run_live(args) -> dict:
     """Run the live-serving smoke as a subprocess, return its fresh
-    ``serve_live`` record."""
-    return _run_serve_cmd(
+    ``serve_live`` record (which must carry the per-tier fields)."""
+    rec = _run_serve_cmd(
         args,
         ["--live", "--rate", str(args.rate),
          "--live-seconds", str(args.live_seconds), "--mix", args.mix,
          "--live-update-batches", str(args.live_update_batches)],
         {"section": "serve_live", "mix": args.mix,
          "rate_qps": args.rate})
+    require_tier_fields(rec)
+    return rec
 
 
 def run_refresh(args) -> dict:
     """Run the live smoke WITH concurrent refresh and return its fresh
     ``serve_refresh`` record (the per-run refresh/staleness summary the
     driver emits alongside ``serve_live``)."""
-    return _run_serve_cmd(
+    from repro.perflog import latest
+
+    rec = _run_serve_cmd(
         args,
         ["--live", "--rate", str(args.rate),
          "--live-seconds", str(args.live_seconds), "--mix", args.mix,
@@ -162,6 +190,13 @@ def run_refresh(args) -> dict:
          str(max(1, args.live_update_batches))],
         {"section": "serve_refresh", "mix": args.mix,
          "rate_qps": args.rate})
+    # the same run emitted a serve_live record — hold it to the same
+    # per-tier field contract even when only the refresh path is gated
+    live_rec = latest(args.fresh, graph=f"road{args.nodes}",
+                      section="serve_live")
+    if live_rec is not None:
+        require_tier_fields(live_rec)
+    return rec
 
 
 def main() -> int:

@@ -87,11 +87,17 @@ if [[ "${CHECK_SKIP_SCALE:-}" != "1" ]]; then
     # 1024-cap flushes and 60 qps keep serving under capacity at this
     # scale (flushes are seconds each while refresh hogs the cores).
     # Responses carry staleness tags; sampled epochs oracle-validated.
+    # --hub-budget pins hub labels for the Zipf pool's head (the hot
+    # tier, DESIGN.md §15); --hot-tier fails the run unless the label
+    # merge served at least 10% of cache misses — the floor is set by
+    # the gate's cross-TOP-group requirement on a 2048-pair pool, so a
+    # selection or gating regression drops straight through it.
     run_stage "scale live smoke (road64k, pipelined refresh, gap-gated)" \
         python -m repro.launch.serve --graph road64k --live \
         --rate 60 --live-seconds 8 --mix zipf --live-batch 1024 \
         --live-update-batches 1 --update-frac 0.02 \
         --live-update-every 2 --live-pipelined \
+        --hub-budget 2048 --hot-tier 0.10 \
         --max-serving-gap 15 --validate 8 --json ""
 else
     echo "== scale smoke (road64k) =="

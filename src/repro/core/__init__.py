@@ -1,3 +1,15 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""DISLAND core: preprocessing, index builds, and query engines.
+
+The package splits along the paper's host/device boundary (DESIGN.md
+§1): host-side one-shot preprocessing (``bcc``/``agents``/``partition``
+/``landmarks``/``supergraph``), host reference engines and baselines
+(``engine``/``dijkstra``/``ch``/``arcflags``/``agent_wrap``), and the
+device-resident reformulation (``device_engine``/``dist_engine``/
+``hierarchy``/``sssp``/``paths``/``refresh_pipeline``) that serves
+batched queries as (min,+) algebra over padded tensors.
+
+The one invariant everything here answers to: every device-served
+distance equals the host float64 Dijkstra oracle exactly — integer
+edge weights keep all f32 sums below 2**24, so "exactly" means ``==``,
+not a tolerance (the differential tests enforce it that way).
+"""

@@ -4,6 +4,11 @@ Agents/DRAs are a light-weight front: X is built on the *shrink graph*
 (2/3 of the input on road graphs), and a query (s, t) becomes
 dist(s,u_s) + X(u_s, u_t) + dist(u_t,t), with same-DRA queries answered
 from the agent tables alone (paper §VI-B case 1).
+
+Role: baseline combinators for the auxiliary-workload experiments
+(DESIGN.md §8).  Invariant: wrapping never changes answers — every
+wrapped oracle stays exact vs host Dijkstra, because the agent
+decomposition is the paper's exact case split, not a heuristic.
 """
 from __future__ import annotations
 

@@ -1,4 +1,9 @@
-"""Agents and Deterministic Routing Areas (paper §IV).
+"""Agents and Deterministic Routing Areas (paper §IV; host-side
+preprocessing stage 1, DESIGN.md §7).
+
+Owned invariant: every non-agent node belongs to exactly one DRA and
+reaches the rest of G only through that DRA's agent — the case split
+every engine (host and device) keys its query routing on.
 
 An *agent* u represents a set of nodes A_u (|A_u| <= c*floor(sqrt(n)))
 whose only connection to the rest of G is through u.  The union A_u^+ of

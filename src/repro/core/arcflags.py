@@ -5,6 +5,10 @@ Partition-based edge labelling: flag[slot, r] = 1 iff the directed edge
 backward shortest-path tree per boundary node per region (the expensive
 preprocessing the paper measures in Exp-4); queries run Dijkstra pruned
 to edges flagged for the target's region.
+
+Role: comparison baseline for the auxiliary workloads (DESIGN.md §8).
+Invariant: flags are conservative (every shortest-path edge into r is
+flagged), so the pruned Dijkstra stays exact — only faster.
 """
 from __future__ import annotations
 

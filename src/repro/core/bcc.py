@@ -9,6 +9,11 @@ Outputs the pieces compDRAs needs:
   - ``bcc_nodes``: list[np.ndarray] node sets per BCC (each undirected
     edge lands in exactly one BCC; a BCC is identified by its edge set,
     the node set is the union of the edge endpoints)
+
+Role: the first host preprocessing pass (DESIGN.md §7).  Owned
+invariants: the edge partition above, and cut-mask correctness —
+removing a flagged node disconnects its component; removing an
+unflagged one never does (property-tested in tests/test_bcc_agents).
 """
 from __future__ import annotations
 

@@ -6,6 +6,11 @@ priority = edge difference + contracted-neighbour count), adding witness-
 checked shortcuts.  Query: bidirectional upward Dijkstra; only edges to
 higher-ranked endpoints are relaxed (order-rising paths; the meeting node
 is the unique order-turning apex).
+
+Role: comparison baseline for the auxiliary workloads (DESIGN.md §8).
+Invariant: every shortcut is witness-checked at insertion, so the
+contracted graph preserves all pairwise distances exactly and the
+bidirectional query equals plain Dijkstra on the original graph.
 """
 from __future__ import annotations
 

@@ -21,7 +21,17 @@ the fused minplus_twoside Pallas kernel (D_super tiles stay resident
 in VMEM); on CPU an x-chunked gather keeps the peak intermediate at
 [q, 8, mb] (DESIGN.md §4).
 
-Everything is exact (validated against the host engine).
+Also owned here: the hub-label hot tier's build (``hub_stage``) and
+serve (``serve_hub``) halves — 2-hop labels over the closed hierarchy
+for a pinned traffic-head node set, derived by batched (min,+)
+products from the same tables above, no new graph searches
+(DESIGN.md §15) — and ``refresh_index``, the staged delta path that
+re-derives every table (labels included) array-equal to a scratch
+rebuild on each epoch (DESIGN.md §9).
+
+Everything is exact (validated against the host engine): integer
+weights make every f32 (min,+) sum exactly representable, so "exact"
+means bit-for-bit, regardless of association order.
 """
 from __future__ import annotations
 
@@ -104,6 +114,18 @@ class DeviceIndex:
     # against each endpoint's own top-group boundary columns
     topgrp_of_frag: jax.Array = dataclasses.field(  # int32 [k]
         default_factory=_dummy((1,), 0, jnp.int32))
+    # 2-hop hub labels for the hot serving tier (DESIGN.md §15): row
+    # hub_of_agent[a] of hub_rows is agent a's label — its exact
+    # overlay distance to every TOP closure coordinate (dense epochs:
+    # every SUPER node).  The last row is the all-INF sentinel and
+    # unlabeled agents map to it, so a mis-gated merge degrades to
+    # +inf, never a wrong finite distance.  Derived by hub_stage from
+    # (brow, per-level tables, d2); refresh re-derives it whenever any
+    # of those inputs move, keeping refresh == rebuild array-equal.
+    hub_rows: jax.Array = dataclasses.field(        # f32 [H+1, W]
+        default_factory=_dummy((1, 1), INF, jnp.float32))
+    hub_of_agent: jax.Array = dataclasses.field(    # int32 [n]
+        default_factory=_dummy((1,), 0, jnp.int32))
 
     @property
     def hierarchy_levels(self) -> int:
@@ -185,6 +207,12 @@ class BuildPlan:
     hier: "List[hierarchy.HierPlan] | None" = None
     # resident pre-lift budget in MiB (0 disables; DESIGN.md §13)
     resident_mb: float = 0.0
+    # hub-label hot tier (DESIGN.md §15): the pinned node set whose
+    # agents get 2-hop labels (None/empty disables).  Selection is a
+    # *build input*, not derived state — refresh re-labels exactly this
+    # set, which is what keeps refresh == rebuild array-equal; a new
+    # traffic-driven selection is a new plan, not a refresh.
+    hub_nodes: "np.ndarray | None" = None
 
     @property
     def n_pieces(self) -> int:
@@ -645,6 +673,138 @@ def resident_stage(plan: BuildPlan, fields: dict) -> dict | None:
     }
 
 
+def hub_stage(plan: BuildPlan, fields: dict) -> dict | None:
+    """Stage 2c: 2-hop hub labels for the hot serving tier (§15).
+
+    For every agent of a node in ``plan.hub_nodes`` (fragment-batched),
+    compose its label row — the exact overlay distance from the agent
+    to every TOP closure coordinate:
+
+      lab[a, y] = min_{j, x} brow[f, p_a, j] + chain_f[j, x] + d2[x, y]
+
+    where ``chain_f`` is the same per-level confined lift ladder the
+    resident rows pre-compose (resident_stage), restricted to fragment
+    f's boundary slots, and the trailing d2 contraction closes the row
+    over the whole top boundary.  Dense epochs skip the ladder:
+    lab[a] = brow row (min,+) d_super.  No Dijkstras anywhere — every
+    leg is a batched (min,+) product over tables the build already
+    carries.
+
+    Exactness (the §15 merge argument): for endpoints in different TOP
+    groups (dense: different fragments) the route must touch the top
+    boundary; lab is then a pointwise-exact distance-to-hub vector, so
+    min_y lab_s[y] + lab_t[y] equals the planner's two-sided combine —
+    lower-bounded by the triangle inequality of the closed overlay
+    metric, met at the route's first top contact (d2's diagonal is 0).
+    Same-top-group pairs must fall through to the planner: their routes
+    may never touch the hubs.
+
+    Deterministic in (hub_nodes, brow, per-level tables, d2), so a
+    refresh that re-runs it lands array-equal with a from-scratch
+    build.  Returns the DeviceIndex field dict plus the planner's host
+    sidecars, or None when disabled/degenerate.
+    """
+    nodes = plan.hub_nodes
+    if nodes is None or len(nodes) == 0:
+        return None
+    nodes = np.asarray(nodes, np.int64)
+    agents = np.unique(plan.agent_of[nodes].astype(np.int64))
+    agents = agents[plan.frag_of[agents] >= 0]
+    if agents.size == 0:
+        return None
+    brow = fields["brow"]
+    levels = plan.hier
+    frag_a = plan.frag_of[agents]
+    pos_a = plan.pos_in_frag[agents]
+    # fragment-batched construction; (fragment, agent) order is the
+    # label row order, stable across build and refresh
+    order = np.lexsort((agents, frag_a))
+    agents, frag_a, pos_a = agents[order], frag_a[order], pos_a[order]
+    H = int(agents.size)
+    rows_out = []
+    topgrp_frag = None
+    if levels:
+        h0 = levels[0]
+        l2rows, sids = fields["l2row"], fields["bnd2_sid"]
+        poss, d2 = fields["pos_in_sf"], fields["d2"]
+        width = int(d2.shape[0])
+        L = len(l2rows)
+        p0 = np.asarray(poss[0])
+        chains: dict[int, tuple] = {}
+
+        def group_chain(g: int) -> tuple:
+            """(U, ids): group g's confined member rows composed up the
+            ladder (same loop as resident_stage, kept compact — the
+            trailing d2 gather makes the dense scatter unnecessary)."""
+            got = chains.get(g)
+            if got is not None:
+                return got
+            U = l2rows[0][g]
+            ids = np.asarray(sids[0][g])
+            gg = g
+            for li in range(1, L):
+                sent = levels[li - 1].S2
+                gg = int(levels[li].sf_of_frag[gg])
+                p = np.asarray(poss[li])[ids]
+                M = l2rows[li][gg][jnp.asarray(p)]
+                M = jnp.where(jnp.asarray(ids != sent)[:, None], M, INF)
+                U = _compose_minplus(U, M)
+                ids = np.asarray(sids[li][gg])
+            chains[g] = (U, ids)
+            return chains[g]
+
+        for f in np.unique(frag_a).tolist():
+            sel = frag_a == f
+            U, ids = group_chain(int(h0.sf_of_frag[f]))
+            Z = U[jnp.asarray(p0[plan.bnd_super[f]])]    # [mb, mb_top]
+            Z = jnp.where(jnp.asarray(plan.bvalid[f])[:, None], Z, INF)
+            conf = _compose_minplus(
+                brow[f][jnp.asarray(pos_a[sel])], Z)
+            # sentinel ids land on d2's +inf row: absorbing, no mask
+            rows_out.append(_compose_minplus(conf, d2[jnp.asarray(ids)]))
+        top = h0.sf_of_frag.astype(np.int64)
+        for li in range(1, L):
+            top = levels[li].sf_of_frag.astype(np.int64)[top]
+        topgrp_frag = top.astype(np.int32)
+    else:
+        d_super = fields["d_super"]
+        width = int(d_super.shape[0])
+        for f in np.unique(frag_a).tolist():
+            sel = frag_a == f
+            M = d_super[jnp.asarray(plan.bnd_super[f])]  # [mb, S+1]
+            M = jnp.where(jnp.asarray(plan.bvalid[f])[:, None], M, INF)
+            rows_out.append(_compose_minplus(
+                brow[f][jnp.asarray(pos_a[sel])], M))
+    hub_rows = jnp.concatenate(
+        rows_out + [jnp.full((1, width), INF, jnp.float32)])
+    hmap = np.full(plan.n, H, np.int32)          # sentinel row for all
+    hmap[agents] = np.arange(H, dtype=np.int32)
+    hub_agent = np.full(plan.n, -1, np.int32)    # planner gate sidecar
+    hub_agent[agents] = np.arange(H, dtype=np.int32)
+    return {
+        "fields": {"hub_rows": hub_rows,
+                   "hub_of_agent": jnp.asarray(hmap)},
+        "hub_agent": hub_agent,
+        # fragment -> TOP group, the hierarchical exactness gate — hub
+        # serving must not depend on the resident stage having run
+        "topgrp_frag": topgrp_frag,
+    }
+
+
+def hub_base_fields(plan: BuildPlan, src, brow) -> dict:
+    """The hub_stage input dict from an index/field source: ``src``
+    maps a field name to its current array (a dict from the build or
+    refresh in flight, falling back to ``dix`` attributes), ``brow``
+    is always the freshest fragment boundary rows."""
+    base = {"brow": brow}
+    if plan.hierarchy_levels >= 2:
+        base.update({name: src(name) for name in
+                     ("l2row", "bnd2_sid", "pos_in_sf", "d2")})
+    else:
+        base["d_super"] = src("d_super")
+    return base
+
+
 def resolve_hierarchy_levels(S: int, hierarchy_levels) -> int:
     """Normalize the ``hierarchy_levels`` build knob: "auto" switches
     off the dense overlay once S crosses hierarchy.AUTO_THRESHOLD (the
@@ -689,7 +849,8 @@ RESIDENT_MB_AUTO = 64.0
 def build_device_index_with_plan(
         ix: DislandIndex, *, force=None,
         hierarchy_levels: int | str = "auto",
-        resident_mb: float | str = "auto"
+        resident_mb: float | str = "auto",
+        hub_nodes=None
         ) -> tuple[DeviceIndex, BuildPlan]:
     """Full from-scratch build: compose every stage, keep the plan
     around so refresh_index can run incrementally afterwards.
@@ -701,9 +862,12 @@ def build_device_index_with_plan(
     ``hierarchy.AUTO_THRESHOLD``, deepening until the top closure fits
     under it.  ``resident_mb`` budgets the epoch-resident pre-lifted
     row cache on hierarchical indices ("auto" = RESIDENT_MB_AUTO; 0
-    disables).
+    disables).  ``hub_nodes`` pins the hub-label hot-tier node set
+    (DESIGN.md §15; None/empty disables the tier).
     """
     plan = make_build_plan(ix)
+    if hub_nodes is not None and len(hub_nodes):
+        plan.hub_nodes = np.asarray(hub_nodes, np.int64)
     lv = resolve_hierarchy_levels(plan.S, hierarchy_levels)
     if lv >= 2:
         plan.hier = hierarchy.plan_hierarchy(
@@ -731,10 +895,13 @@ def build_device_index_with_plan(
         rres = None
         hier_fields = {}
         d_super, super_next = super_stage(plan, force=force)
+    hub = hub_stage(plan, hub_base_fields(
+        plan, lambda name: hier_fields.get(name, d_super), brow))
     piece_flat, piece_next = piece_stage(plan, ix.g, force=force)
     base, stride = _node_piece_addressing(plan)
     dix = DeviceIndex(
         **hier_fields,
+        **({} if hub is None else hub["fields"]),
         agent_of=jnp.asarray(plan.agent_of),
         dist_to_agent=jnp.asarray(
             ix.dras.dist_to_agent.astype(np.float32)),
@@ -768,17 +935,24 @@ def build_device_index_with_plan(
             dix.host_topgrp_frag = rres["topgrp_frag"]
     else:
         dix.host_ov_slot = overlay_slot_table(plan)
+    if hub is not None:
+        dix.host_hub_agent = hub["hub_agent"]
+        if (hub["topgrp_frag"] is not None
+                and getattr(dix, "host_topgrp_frag", None) is None):
+            # hierarchical epoch without resident rows: the hub gate
+            # still needs the fragment -> TOP group map
+            dix.host_topgrp_frag = hub["topgrp_frag"]
     return dix, plan
 
 
 def build_device_index(ix: DislandIndex, *, force=None,
                        hierarchy_levels: int | str = "auto",
-                       resident_mb: float | str = "auto"
-                       ) -> DeviceIndex:
+                       resident_mb: float | str = "auto",
+                       hub_nodes=None) -> DeviceIndex:
     """Assemble padded tensors on host, run device APSP preprocessing."""
     return build_device_index_with_plan(
         ix, force=force, hierarchy_levels=hierarchy_levels,
-        resident_mb=resident_mb)[0]
+        resident_mb=resident_mb, hub_nodes=hub_nodes)[0]
 
 
 def index_fields_equal(a: DeviceIndex, b: DeviceIndex,
@@ -1194,6 +1368,33 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
             ov_slot = getattr(dix, "host_ov_slot", None)
         timings["super_fw"] = time.perf_counter() - t0
 
+        # ---- hub labels (DESIGN.md §15) -----------------------------
+        # a label folds a brow leg with the overlay closure, so it is
+        # stale iff the closure moved (changed.any()) OR any labeled
+        # fragment's boundary rows did (dirty_frags); otherwise every
+        # input is unchanged and carrying the rows is bit-identical to
+        # recomputing them — the refresh == rebuild invariant the
+        # differential harness in tests/test_hublabels.py enforces
+        t0 = time.perf_counter()
+        hub_fields: dict = {}
+        hub_agent = getattr(dix, "host_hub_agent", None)
+        hub_topgrp = None
+        if plan.hub_nodes is not None and len(plan.hub_nodes):
+            hub_frags = np.unique(plan.frag_of[
+                plan.agent_of[plan.hub_nodes].astype(np.int64)])
+            if changed.any() or np.intersect1d(
+                    upd.dirty_frags, hub_frags).size:
+                hub = hub_stage(plan, hub_base_fields(
+                    plan,
+                    lambda name: hier_fields.get(
+                        name, getattr(dix, name)) if name != "d_super"
+                    else d_super, brow))
+                if hub is not None:
+                    hub_fields = hub["fields"]
+                    hub_agent = hub["hub_agent"]
+                    hub_topgrp = hub["topgrp_frag"]
+        timings["hub"] = time.perf_counter() - t0
+
         # ---- pieces + dist-to-agent ---------------------------------
         t0 = time.perf_counter()
         if upd.dirty_gids.size:
@@ -1239,7 +1440,7 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
         dix, frag_apsp=frag_apsp, frag_next=frag_next, brow=brow,
         d_super=d_super, super_next=super_next,
         piece_flat=piece_flat_j, piece_next=piece_next_j,
-        dist_to_agent=dist_j, **hier_fields)
+        dist_to_agent=dist_j, **hier_fields, **hub_fields)
     if ov_slot is not None:
         new_dix.host_ov_slot = ov_slot
     if l2_slot is not None:
@@ -1247,6 +1448,16 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
     if res_frag is not None:
         new_dix.host_res_frag = res_frag
         new_dix.host_topgrp_frag = topgrp_frag
+    if hub_agent is not None:
+        new_dix.host_hub_agent = hub_agent
+        if getattr(new_dix, "host_topgrp_frag", None) is None:
+            # hierarchical epoch without resident rows: the hub gate's
+            # TOP-group map must survive the epoch swap (replace()
+            # never copies host sidecars)
+            if hub_topgrp is None:
+                hub_topgrp = getattr(dix, "host_topgrp_frag", None)
+            if hub_topgrp is not None:
+                new_dix.host_topgrp_frag = hub_topgrp
     stats = RefreshStats(
         n_updates=int(np.asarray(u).size),
         n_dirty_frags=int(upd.dirty_frags.size), n_frags=plan.k,
@@ -1799,6 +2010,27 @@ def serve_cross_res(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
         rt = _lift_res(dix, row_t, pos_t, dix.res_of_frag[ft],
                        cols=ids_t)
         mid = _top_mid_gather(dix, rs, ids_s, rt, ids_t)
+    d = ds + mid + dt
+    return jnp.where((fs >= 0) & (ft >= 0), d, INF)
+
+
+def serve_hub(dix: DeviceIndex, s: jax.Array, t: jax.Array, *,
+              force=None) -> jax.Array:
+    """Hot-tier hub-label serve (DESIGN.md §15): both endpoints'
+    agents must be labeled and in different TOP groups (dense epochs:
+    different fragments) — the planner's hub_mask guarantees both —
+    then the whole query is two label-row gathers and one O(W)
+    (min,+) merge; no per-level lifting, no d2 contraction, no planner
+    dispatch.  A mis-gated pair gathers the all-INF sentinel row and
+    returns +inf rather than a wrong distance.  Bit-equal to the
+    planner cross path: every sum is an integer-valued f32 (graph
+    weights are integers), so the merge's re-association is exact."""
+    us, ut = dix.agent_of[s], dix.agent_of[t]
+    ds, dt = dix.dist_to_agent[s], dix.dist_to_agent[t]
+    fs, ft = dix.frag_of[us], dix.frag_of[ut]
+    ls = dix.hub_rows[dix.hub_of_agent[us]]      # [q, W]
+    lt = dix.hub_rows[dix.hub_of_agent[ut]]
+    mid = ops.label_merge(ls, lt, force=force)
     d = ds + mid + dt
     return jnp.where((fs >= 0) & (ft >= 0), d, INF)
 

@@ -2,6 +2,12 @@
 
 Host-side reference implementations used (a) as the paper's baselines
 for Exp-4/Exp-5 and (b) as correctness oracles for the JAX device engine.
+
+Role: the ground truth every differential test compares against
+(DESIGN.md §2).  Owned invariants: distances are computed in float64
+(exact for the stack's integer weights), and ``mismatches_oracle`` is
+the single comparator all validation paths share — infs match only
+infs, NaN never matches, finites compare with relative tolerance.
 """
 from __future__ import annotations
 

@@ -9,7 +9,17 @@ The QueryPlanner is the host-side front end: it buckets each incoming
 batch by case (same-DRA / same-fragment / cross-fragment) and runs one
 specialized jitted program per bucket, so same-DRA queries never pay
 for the SUPER combine and cross-fragment queries never touch the piece
-tables (DESIGN.md §5).
+tables (DESIGN.md §5).  It also fronts the hub-label hot tier
+(DESIGN.md §15): ``hub_mask`` gates pairs both of whose endpoints
+carry labels in the pinned epoch, ``query_hub`` answers them with one
+O(W) label merge — NOT a planner case; the serving runtime dispatches
+it, and ``query`` stays the untouched differential reference the
+merge must equal bit-for-bit.
+
+Owned invariants: ``plan()``'s buckets cover every query exactly once;
+``set_index`` publishes the epoch's host maps atomically (one tuple
+swap); warmup compiles every executable any flush can request, so an
+epoch swap never pays XLA compile in its tail latency (DESIGN.md §9).
 
 Offline build is the heavy part (batched FW over fragments, batched BF
 over SUPER sources): both are sharded over their batch dimension with a
@@ -32,8 +42,8 @@ from . import padding, refresh_pipeline, sssp
 from .device_engine import (DeviceIndex, RefreshStats,
                             build_device_index_with_plan, refresh_index,
                             serve_cross, serve_cross_res, serve_cross_w,
-                            serve_same_dra, serve_same_dra_w, serve_step,
-                            warmup_refresh)
+                            serve_hub, serve_same_dra, serve_same_dra_w,
+                            serve_step, warmup_refresh)
 from .paths import PathUnwinder
 from .supergraph import DislandIndex, build_index
 
@@ -77,6 +87,12 @@ class QueryPlanner:
             "cross_res": jax.jit(functools.partial(
                 serve_cross_res, force=force)),
         }
+        # hub-label hot tier (DESIGN.md §15): NOT a planner case — the
+        # serving runtime gates pairs with hub_mask and dispatches them
+        # through query_hub, above/instead of the planner.  Jitting is
+        # free until called, so the program exists on every index and
+        # warmup() only compiles it when the epoch carries real labels.
+        self._hub_fn = jax.jit(functools.partial(serve_hub, force=force))
         # witness-returning (return_witness mode) sub-programs; jit
         # wrappers are free until called, so these always exist and
         # ``paths`` only decides whether warmup() compiles them.
@@ -110,7 +126,8 @@ class QueryPlanner:
         self._maps = (dix, np.asarray(dix.agent_of),
                       np.asarray(dix.frag_of),
                       getattr(dix, "host_res_frag", None),
-                      getattr(dix, "host_topgrp_frag", None))
+                      getattr(dix, "host_topgrp_frag", None),
+                      getattr(dix, "host_hub_agent", None))
 
     @staticmethod
     def bucket_sizes(batch_size: int) -> list[int]:
@@ -141,6 +158,10 @@ class QueryPlanner:
         if self.paths:
             fns += [fn for case, fn in self._wfns.items()
                     if has_res or case != "cross_res"]
+        # same guard for the hub tier: the label program only exists on
+        # epochs carrying real rows (the cold dummy is (1, 1))
+        if np.asarray(self.dix.hub_rows).shape[0] > 1:
+            fns = fns + [self._hub_fn]
         for fn in fns:
             for size in sizes:
                 jax.block_until_ready(fn(self.dix, jnp.asarray(z[:size]),
@@ -188,6 +209,63 @@ class QueryPlanner:
             "cross_frag": np.nonzero(case3)[0],
             "cross_res": np.nonzero(hot)[0],
         }
+
+    def hub_mask(self, s: np.ndarray, t: np.ndarray,
+                 dix: DeviceIndex | None = None) -> np.ndarray:
+        """Host-side gate for the hub-label hot tier (DESIGN.md §15):
+        True where both endpoints' agents are labeled AND the exactness
+        gate holds — different fragments, and on hierarchical epochs
+        different TOP groups (only then must every route touch the top
+        boundary the labels enumerate).  Everything else falls through
+        to the planner.  Reads the same atomically-published map tuple
+        as plan(), so a pinned dispatch gates with ITS epoch's labels."""
+        cached = self._maps
+        if dix is None or cached[0] is dix:
+            dix_, agent_of, frag_of = cached[0], cached[1], cached[2]
+            topgrp, hub_agent = cached[4], cached[5]
+        else:
+            dix_ = dix
+            agent_of = np.asarray(dix.agent_of)
+            frag_of = np.asarray(dix.frag_of)
+            topgrp = getattr(dix, "host_topgrp_frag", None)
+            hub_agent = getattr(dix, "host_hub_agent", None)
+        s = np.asarray(s, np.int64)
+        t = np.asarray(t, np.int64)
+        if hub_agent is None:
+            return np.zeros(s.shape, bool)
+        us, ut = agent_of[s], agent_of[t]
+        fs, ft = frag_of[us], frag_of[ut]
+        ok = ((s != t) & (fs >= 0) & (ft >= 0) & (fs != ft)
+              & (hub_agent[us] >= 0) & (hub_agent[ut] >= 0))
+        if len(dix_.sf_of) > 0:
+            # hierarchical: same-top-group routes may never touch the
+            # top boundary — the labels are silent about them
+            if topgrp is None:
+                return np.zeros(s.shape, bool)
+            ok &= (topgrp[np.where(ok, fs, 0)]
+                   != topgrp[np.where(ok, ft, 0)])
+        return ok
+
+    def query_hub(self, s, t, *, dix: DeviceIndex | None = None
+                  ) -> np.ndarray:
+        """Vectorized hub-label merge for hub_mask-gated pairs — one
+        pow2-padded program (label gathers + O(W) merge), bypassing the
+        planner's case split entirely.  A mis-gated pair gathers the
+        all-INF sentinel row and returns +inf, never a wrong finite
+        distance.  Bit-equal to query() on gated pairs (the §15
+        differential harness pins this)."""
+        dix = self.dix if dix is None else dix
+        s = np.asarray(s, np.int32)
+        t = np.asarray(t, np.int32)
+        if s.size == 0:
+            return np.zeros(s.shape, np.float32)
+        m = _pad_pow2(s.size)
+        sp = np.zeros(m, np.int32)
+        tp = np.zeros(m, np.int32)
+        sp[:s.size] = s
+        tp[:t.size] = t
+        res = self._hub_fn(dix, jnp.asarray(sp), jnp.asarray(tp))
+        return np.asarray(res)[:s.size]
 
     def _dispatch(self, fns, s, t, outs, dix=None) -> None:
         """Shared bucket/pad/dispatch loop: partition (s, t), pad each
@@ -275,12 +353,13 @@ class EpochedEngine:
                  ix: DislandIndex | None = None,
                  warm_refresh: bool = True, paths: bool = False,
                  hierarchy_levels: int | str = "auto",
-                 resident_mb: float | str = "auto"):
+                 resident_mb: float | str = "auto",
+                 hub_nodes=None):
         self.g = g
         self.ix = ix if ix is not None else build_index(g, c=c, seed=seed)
         self.dix, self.plan = build_device_index_with_plan(
             self.ix, force=force, hierarchy_levels=hierarchy_levels,
-            resident_mb=resident_mb)
+            resident_mb=resident_mb, hub_nodes=hub_nodes)
         self.planner = QueryPlanner(self.dix, force=force, paths=paths)
         self.epoch = 0
         # one-tuple publish (epoch, dix, graph, staleness): snapshot()

@@ -8,7 +8,10 @@ Given the preprocessed DislandIndex:
           Dijkstra on G[V_s] u G[V_t] u SUPER (observation of [4]).
 
 This is the paper-faithful engine; device_engine.py is the TPU-batched
-reformulation validated against it.
+reformulation validated against it (DESIGN.md §1-§2).  Owned
+invariant: answers equal host Dijkstra on the input graph exactly —
+this module is the readable middle step of that proof chain, not a
+performance path.
 """
 from __future__ import annotations
 

@@ -6,6 +6,15 @@ JAX numerics (batched Bellman-Ford, segment relaxation) consume directly.
 
 All graphs are simple, undirected, positive-weighted, as in the paper
 (Section II-A). Node ids are dense ints [0, n).
+
+Owned invariant (DESIGN.md §6): every weight this module produces —
+the ``road_like`` generator AND ``traffic_updates`` perturbations — is
+a positive *integer*, small enough that any shortest-distance sum
+stays below 2**24 and is therefore exactly representable in f32.  The
+whole stack's bit-for-bit exactness story (serve == refresh == scratch
+rebuild == host Dijkstra with ``==``, any (min,+) association order,
+DESIGN.md §10/§15) rests on this one property; do not add a
+float-weight source here without revisiting it.
 """
 from __future__ import annotations
 

@@ -9,6 +9,11 @@ Three pieces:
   3. Hybrid landmark covers with the per-node cost model
      space_L(x)=|N_x| <= space_N(x)=|P_x| (paper Example 1), built for
      the *boundary nodes of a fragment* (§V-A) — the production path.
+
+Role: preprocessing stage for the per-fragment enforced edges
+(DESIGN.md §7).  Owned invariant: a cover's enforced edges preserve
+every boundary-to-boundary shortest distance through the fragment, so
+the SUPER graph built on them is distance-exact.
 """
 from __future__ import annotations
 

@@ -25,6 +25,12 @@ weights (road travel times are noise for this objective).  Callers
 whose edge weights ARE cut multiplicities — the hierarchy planner's
 unit quotient graph, where one edge stands for N parallel cross-unit
 slots — pass ``cut_weights=True`` to optimize the weighted cut.
+
+Owned invariants: |V_i| <= Gamma is a HARD bound (refinement may only
+improve the cut within it), every node is assigned to exactly one
+fragment, and the partition is purely topological — weight refreshes
+never re-partition, which is what keeps refresh shapes stable
+(DESIGN.md §9).
 """
 from __future__ import annotations
 

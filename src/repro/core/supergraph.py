@@ -12,6 +12,13 @@ Preprocessing (paper §VI-A, Fig. 7):
 
 Everything here is host-side numpy (one-shot, linear-ish); the *products*
 are padded tensors the device engine consumes (device_engine.py).
+
+Role: the one build pipeline behind every index (DESIGN.md §7).  Owned
+invariants: the SUPER graph preserves all cross-fragment boundary
+distances of the input graph, and ``reweight_index`` reproduces
+``build_index`` on a reweighted graph with the *same structure* —
+which is what makes refresh ≡ rebuild comparisons meaningful at all
+(DESIGN.md §9).
 """
 from __future__ import annotations
 

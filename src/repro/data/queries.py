@@ -36,19 +36,8 @@ def _lattice_coords(g: Graph) -> tuple[np.ndarray, int]:
                     axis=1).astype(float), side
 
 
-def zipf_pairs(g: Graph, n_queries: int, *, a: float = 1.2,
-               pool: int = 2048, seed: int = 0) -> np.ndarray:
-    """Zipf-skewed repeated-pair workload -> [n_queries, 2] int64.
-
-    A pool of ``pool`` distinct uniform-random (s, t) pairs is ranked
-    1..pool; query i draws pair r with probability proportional to
-    r**-a.  ``top_pair_mass`` computes the resulting head mass
-    analytically so tests (and capacity planning for the result cache)
-    can assert the skew rather than eyeball it.
-    """
-    if n_queries <= 0:
-        raise ValueError(f"n_queries must be positive: {n_queries}")
-    rng = np.random.default_rng(seed)
+def _zipf_pool(g: Graph, pool: int,
+               rng: np.random.Generator) -> np.ndarray:
     pool = min(pool, max(1, g.n * (g.n - 1)))
     # over-draw, then dedupe preserving draw order so the pool really
     # holds distinct pairs (duplicates would merge two Zipf ranks into
@@ -60,12 +49,43 @@ def zipf_pairs(g: Graph, n_queries: int, *, a: float = 1.2,
                                             int(clash.sum()))) % g.n
     _, first = np.unique(s * np.int64(g.n) + t, return_index=True)
     keep = np.sort(first)[:pool]
-    s, t = s[keep], t[keep]
-    pool = len(s)
-    p = np.arange(1, pool + 1, dtype=float) ** -a
+    return np.stack([s[keep], t[keep]], axis=1).astype(np.int64)
+
+
+def zipf_pool(g: Graph, *, pool: int = 2048,
+              seed: int = 0) -> np.ndarray:
+    """The distinct OD-pair pool behind ``zipf_pairs`` -> [pool, 2]
+    int64, in Zipf rank order (row r is rank r+1, so a prefix of the
+    rows is exactly the traffic head).
+
+    Exposed separately so the hub-label hot tier (DESIGN.md §15) can
+    pin its label set from the same deterministic pool the workload
+    draws from — the pool draws lead the seeded RNG stream, so this
+    returns bit-identical rows to the pool ``zipf_pairs(seed=seed)``
+    samples from.
+    """
+    return _zipf_pool(g, pool, np.random.default_rng(seed))
+
+
+def zipf_pairs(g: Graph, n_queries: int, *, a: float = 1.2,
+               pool: int = 2048, seed: int = 0) -> np.ndarray:
+    """Zipf-skewed repeated-pair workload -> [n_queries, 2] int64.
+
+    A pool of ``pool`` distinct uniform-random (s, t) pairs
+    (``zipf_pool``) is ranked 1..pool; query i draws pair r with
+    probability proportional to r**-a.  ``top_pair_mass`` computes the
+    resulting head mass analytically so tests (and capacity planning
+    for the result cache) can assert the skew rather than eyeball it.
+    """
+    if n_queries <= 0:
+        raise ValueError(f"n_queries must be positive: {n_queries}")
+    rng = np.random.default_rng(seed)
+    pairs = _zipf_pool(g, pool, rng)
+    npool = len(pairs)
+    p = np.arange(1, npool + 1, dtype=float) ** -a
     p /= p.sum()
-    idx = rng.choice(pool, size=n_queries, p=p)
-    return np.stack([s[idx], t[idx]], axis=1).astype(np.int64)
+    idx = rng.choice(npool, size=n_queries, p=p)
+    return pairs[idx]
 
 
 def top_pair_mass(frac: float, *, a: float = 1.2,

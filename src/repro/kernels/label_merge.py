@@ -1,0 +1,77 @@
+"""Hub-label merge — the hot-tier combine step (DESIGN.md §15).
+
+    out[q] = min_j labs[q, j] + labt[q, j]
+
+Each labeled endpoint carries a dense label row over the TOP closure
+coordinates (device_engine.hub_stage); answering a gated pair is one
+elementwise tropical product of the two gathered rows followed by a row
+min — O(W) per query instead of the planner cross path's O(W^2)
+two-sided contraction.
+
+TPU mapping (VPU work, same conventions as minplus_twoside): grid is
+(q tiles, j tiles) with the contraction axis innermost and sequential,
+so the output tile is min-accumulated across all j tiles (revisiting
+pattern).  Each invocation folds its [bq, bj] add down to per-lane
+partial minima [bq, 128]; the final cross-lane min happens outside the
+kernel.  Padding is +inf (absorbing element), so padded queries and
+padded label columns can never win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+
+
+def _merge_kernel(labs_ref, labt_ref, out_ref):
+    """Min-accumulate one (q, j) tile pair into lane partials."""
+    ji = pl.program_id(1)
+
+    @pl.when(ji == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+
+    tmp = labs_ref[...] + labt_ref[...]      # [bq, bj]
+    bq, bj = tmp.shape
+    # fold the j tile down to its 128 lanes; cross-lane min is done by
+    # the caller so every store here stays (8, 128)-aligned
+    part = jnp.min(tmp.reshape(bq, bj // _LANES, _LANES), axis=1)
+    out_ref[...] = jnp.minimum(out_ref[...], part)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bj", "interpret"))
+def label_merge_pallas(labs: jax.Array, labt: jax.Array, *,
+                       bq: int = 128, bj: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    """out[q] = min_j labs[q, j] + labt[q, j].
+
+    Shapes: labs [q, W], labt [q, W] -> out [q].  Pads both axes to
+    tile multiples with +inf (absorbing element).
+    """
+    q, w = labs.shape
+    qb, wb = labt.shape
+    assert q == qb and w == wb, (labs.shape, labt.shape)
+    assert bj % _LANES == 0, bj
+    qp = -(-q // bq) * bq
+    wp = -(-w // bj) * bj
+    labs_p = jnp.full((qp, wp), jnp.inf,
+                      labs.dtype).at[:q, :w].set(labs)
+    labt_p = jnp.full((qp, wp), jnp.inf,
+                      labt.dtype).at[:q, :w].set(labt)
+    grid = (qp // bq, wp // bj)
+    part = pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bj), lambda qi, ji: (qi, ji)),
+            pl.BlockSpec((bq, bj), lambda qi, ji: (qi, ji)),
+        ],
+        out_specs=pl.BlockSpec((bq, _LANES), lambda qi, ji: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((qp, _LANES), labs.dtype),
+        interpret=interpret,
+    )(labs_p, labt_p)
+    return jnp.min(part, axis=1)[:q]

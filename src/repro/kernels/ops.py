@@ -12,6 +12,7 @@ from typing import Literal, Optional
 import jax
 
 from . import floyd_warshall as _fw
+from . import label_merge as _lm
 from . import minplus as _mp
 from . import minplus_twoside as _ts
 from . import ref as _ref
@@ -49,6 +50,17 @@ def minplus_twoside(rows: jax.Array, d: jax.Array, rowt: jax.Array, *,
         return _ts.minplus_twoside_pallas(rows, d, rowt, bq=bq, bk1=bk1,
                                           bk2=bk2, interpret=interp)
     return _ref.minplus_twoside_ref(rows, d, rowt)
+
+
+def label_merge(labs: jax.Array, labt: jax.Array, *, bq: int = 128,
+                bj: int = 512, force: Force = None) -> jax.Array:
+    """Hub-label merge: out[q] = min_j labs[q,j] + labt[q,j] — the
+    hot-tier combine (DESIGN.md §15), O(W) per query."""
+    pallas, interp = _use_pallas(force)
+    if pallas:
+        return _lm.label_merge_pallas(labs, labt, bq=bq, bj=bj,
+                                      interpret=interp)
+    return _ref.label_merge_ref(labs, labt)
 
 
 def minplus_twoside_argmin(rows: jax.Array, d: jax.Array,

@@ -15,6 +15,11 @@ def minplus_accum_ref(c: jax.Array, a: jax.Array, b: jax.Array
     return jnp.minimum(c, minplus_ref(a, b))
 
 
+def label_merge_ref(labs: jax.Array, labt: jax.Array) -> jax.Array:
+    """out[q] = min_j labs[q,j] + labt[q,j] (hub-label merge)."""
+    return jnp.min(labs + labt, axis=1)
+
+
 def minplus_twoside_ref(rows: jax.Array, d: jax.Array, rowt: jax.Array,
                         *, chunk: int = 16) -> jax.Array:
     """out[q] = min_{x,y} rows[q,x] + d[x,y] + rowt[q,y].

@@ -58,7 +58,11 @@ REFRESHED_FIELDS = ("frag_apsp", "frag_next", "brow", "d_super",
                     # so the parity check is free on dense epochs
                     "sf_closure", "sf_next", "l2row", "d2", "d2_next",
                     # resident pre-lifted rows (dummies when cold)
-                    "res_rows", "res_of_frag")
+                    "res_rows", "res_of_frag",
+                    # hub-label hot-tier tables (dummies when no hub
+                    # set is pinned) — refresh must reproduce the
+                    # scratch rebuild bit-for-bit (DESIGN.md §15)
+                    "hub_rows", "hub_of_agent")
 
 
 # ---------------------------------------------------------------------------
@@ -86,6 +90,23 @@ def _overlay_record(engine: EpochedEngine) -> dict:
             "overlay_bytes": dense, "overlay_dense_bytes": dense}
 
 
+def _hub_selection(g, args) -> np.ndarray | None:
+    """Traffic-head hub set for the label hot tier (DESIGN.md §15):
+    the endpoints of the top-ranked rows of the Zipf pool the live
+    workload draws from (same seed => bit-identical pool), first seen
+    in rank order, capped at ``--hub-budget`` nodes.  Returns None when
+    the budget is 0 (tier off)."""
+    budget = int(getattr(args, "hub_budget", 0) or 0)
+    if not budget:
+        return None
+    from ..data.queries import zipf_pool
+
+    pairs = zipf_pool(g, seed=args.seed + 4)
+    flat = pairs.ravel()        # rank-interleaved (s1, t1, s2, t2, ...)
+    _, first = np.unique(flat, return_index=True)
+    return flat[np.sort(first)][:budget]
+
+
 def _build_engine(args) -> tuple[EpochedEngine, float]:
     """Graph + host index + EpochedEngine with timing prints — the one
     setup path shared by the planner serving loops (offline batches,
@@ -101,15 +122,20 @@ def _build_engine(args) -> tuple[EpochedEngine, float]:
     # wasted work at road64k scale when the run applies no updates
     warm = bool(args.update_batches
                 or (args.live and args.live_update_batches))
+    hub_nodes = _hub_selection(g, args)
     engine = EpochedEngine(g, ix=ix, paths=args.paths,
                            hierarchy_levels=args.hierarchy_levels,
                            resident_mb=args.resident_mb,
-                           warm_refresh=warm)
+                           warm_refresh=warm, hub_nodes=hub_nodes)
     build_s = time.perf_counter() - t0
     dix = engine.dix
     ov = _overlay_record(engine)
     print(f"device index: frag_apsp={dix.frag_apsp.shape} "
           f"d_super={dix.d_super.shape} ({build_s:.1f}s)")
+    if hub_nodes is not None:
+        h, w = np.asarray(dix.hub_rows).shape
+        print(f"hub labels: {h - 1} agents x {w} hubs from "
+              f"{len(hub_nodes)}-node budget")
     if ov["hierarchy_levels"] >= 2:
         print(f"overlay hierarchy: {ov['hierarchy_levels']} levels, "
               f"S2 ladder {ov['levels_S2']} from S={ov['S']} "
@@ -196,9 +222,13 @@ def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
                            hierarchy_levels=engine.plan.hierarchy_levels)
         pipeline_s = time.perf_counter() - t0
         t0 = time.perf_counter()
+        # same hub set as the live plan: the parity check covers the
+        # hub tables too (REFRESHED_FIELDS), so the scratch oracle
+        # must label the identical node set
         sdix = build_device_index(
             reweight_index(engine.ix, engine.g),
-            hierarchy_levels=engine.plan.hierarchy_levels)
+            hierarchy_levels=engine.plan.hierarchy_levels,
+            hub_nodes=engine.plan.hub_nodes)
         reweight_s = time.perf_counter() - t0
         scratch_match = all(index_fields_equal(
             engine.dix, sdix, REFRESHED_FIELDS).values())
@@ -312,13 +342,22 @@ def _live_loop(engine: EpochedEngine, args) -> list:
     runtime.close()
     epochs = sorted({r.epoch for r in report.requests})
     stats = runtime.stats()
+    # per-tier resolution split (DESIGN.md §15): every response came
+    # from exactly one of cache / label merge / planner dispatch
+    label_rate = stats["label_hits"] / max(
+        1, stats["label_hits"] + stats["planner_dispatches"])
     print(f"live: {report.n_requests} requests at "
           f"{report.offered_qps:.0f} qps offered / "
           f"{report.achieved_qps:.0f} achieved; latency p50 "
           f"{report.p50_ms}ms p95 {report.p95_ms}ms p99 "
-          f"{report.p99_ms}ms; cache hit rate "
-          f"{stats.get('cache_hit_rate', 0.0):.1%} "
-          f"({stats.get('cache_stale', 0)} stale rejected); "
+          f"{report.p99_ms}ms; tiers: {stats['cache_hits']} cache / "
+          f"{stats['label_hits']} label / "
+          f"{stats['planner_dispatches']} planner "
+          f"({stats.get('cache_hit_rate', 0.0):.1%} cache hit rate, "
+          f"{stats.get('cache_stale', 0)} stale rejected; label tier "
+          f"took {label_rate:.1%} of misses at "
+          f"{stats['label_us_per_query']:.0f}us/q vs planner "
+          f"{stats['planner_us_per_query']:.0f}us/q); "
           f"{stats['flushes']} flushes, mean occupancy "
           f"{stats['mean_occupancy']:.1%} "
           f"(full={stats['flush_full']} "
@@ -343,6 +382,12 @@ def _live_loop(engine: EpochedEngine, args) -> list:
             f"serving stalled: max gap {report.max_serving_gap_ms:.0f}"
             f"ms > --max-serving-gap {args.max_serving_gap}s — the "
             "foreground paused longer than the allowed bound")
+    hot_tier = getattr(args, "hot_tier", 0.0) or 0.0
+    if hot_tier and label_rate < hot_tier:
+        raise SystemExit(
+            f"hot tier underused: label tier served {label_rate:.1%} "
+            f"of cache misses < --hot-tier {hot_tier:.1%} — the hub "
+            "selection no longer covers the workload head")
     rec = {
         "section": "serve_live",
         "graph": _label(args),
@@ -353,6 +398,8 @@ def _live_loop(engine: EpochedEngine, args) -> list:
         "max_batch": runtime.max_batch,
         "cache": "on" if args.cache_size else "off",
         "refresh": "on" if args.live_update_batches else "off",
+        "hub_budget": int(getattr(args, "hub_budget", 0) or 0),
+        "label_hit_rate": round(label_rate, 4),
         "epochs_served": len(epochs),
         "oracle_checked": checked,
         "oracle_bad": bad,
@@ -445,6 +492,15 @@ def main() -> None:
                            "bucket size)")
     live.add_argument("--cache-size", type=int, default=65536,
                       help="result-cache capacity (0 disables)")
+    live.add_argument("--hub-budget", type=int, default=0,
+                      help="pin hub labels (DESIGN.md §15) for up to "
+                           "this many traffic-head nodes (the Zipf "
+                           "pool's top-ranked endpoints); 0 disables "
+                           "the label hot tier")
+    live.add_argument("--hot-tier", type=float, default=0.0,
+                      help="fail unless the label tier served at "
+                           "least this fraction of cache misses "
+                           "(CI smoke gate; requires --hub-budget)")
     live.add_argument("--live-update-batches", type=int, default=0,
                       help="concurrent background refresh rounds "
                            "during the load run")
@@ -503,6 +559,12 @@ def main() -> None:
     if args.live and args.paths:
         ap.error("--paths is not supported with --live (the live "
                  "runtime serves distances only)")
+    if args.hub_budget and not args.live:
+        ap.error("--hub-budget requires --live (the label hot tier "
+                 "is a serving-runtime tier)")
+    if args.hot_tier and not args.hub_budget:
+        ap.error("--hot-tier requires --hub-budget (no labels, no "
+                 "label hits to gate on)")
 
     if args.live:
         engine, _build_s = _build_engine(args)

@@ -1,6 +1,13 @@
 """Online serving runtime (DESIGN.md §11): deadline-aware
-micro-batching, an epoch-consistent result cache, concurrent index
-refresh, and an open-loop load harness over the EpochedEngine.
+micro-batching, an epoch-consistent result cache, the hub-label hot
+tier (DESIGN.md §15), concurrent index refresh, and an open-loop load
+harness over the EpochedEngine.
+
+Owned invariant — the tier order EpochCache -> label merge -> planner
+changes only COST, never answers: every response is exact for the one
+epoch its flush pinned, whichever tier resolved it, and carries that
+tier on the Request for per-tier accounting.
+
 Workload mixes come straight from ``repro.data.queries``
 (``workload_pairs``, re-exported here for the load-harness callers)."""
 from ..core.refresh_pipeline import (RefreshPipeline, Staleness,

@@ -6,8 +6,17 @@ serving stack (DESIGN.md §11).  A request flows
     submit(s, t) -> MicroBatcher buffer -> flush
         -> pin (epoch, dix, graph) via EpochedEngine.snapshot()
         -> EpochCache lookups keyed by that epoch
-        -> one QueryPlanner.query(..., dix=pinned) for the misses
+        -> hub-label merge (QueryPlanner.query_hub) for the misses
+           whose endpoints are both labeled in the pinned epoch
+        -> one QueryPlanner.query(..., dix=pinned) for the rest
         -> cache fill + resolve, every response tagged with the epoch
+
+The middle tier is the DESIGN.md §15 hot tier: when the build pinned
+hub labels for a traffic-heavy node set, any miss whose (s, t) pair
+``hub_mask`` admits is answered by an O(W) label merge instead of the
+full planner contraction — exact by construction, so tiers differ in
+cost only, never in answers.  Per-tier counters and wall-clock splits
+(``stats()``) make the label-vs-planner latency claim measurable.
 
 The epoch pin is the consistency argument in one line: everything a
 flush does — cache reads, device serve, cache writes, the tag on each
@@ -62,6 +71,13 @@ class ServingRuntime:
         # refresh pipeline prioritizes dirty groups by
         self._traffic = np.zeros(engine.plan.k, np.int64)
         self._traffic_lock = threading.Lock()
+        # per-tier accounting (DESIGN.md §15): every cache miss is
+        # resolved by exactly one of the label tier (hub merge) or the
+        # planner; the wall-clock split makes the label-vs-planner
+        # latency comparison a measured serve_live field, not a claim
+        self._tier_lock = threading.Lock()
+        self._tiers = {"label_hits": 0, "planner_dispatches": 0,
+                       "label_s": 0.0, "planner_s": 0.0}
         self.batcher = MicroBatcher(self._serve_batch,
                                     max_batch=self.max_batch,
                                     deadline_s=deadline_s, auto=auto)
@@ -119,20 +135,45 @@ class ServingRuntime:
                 req.epoch = epoch
                 req.staleness = stale
                 req.cached = True
+                req.tier = "cache"
             else:
                 misses.append(req)
         if misses:
+            planner = self.engine.planner
             s = np.fromiter((r.s for r in misses), np.int32,
                             len(misses))
             t = np.fromiter((r.t for r in misses), np.int32,
                             len(misses))
-            out = self.engine.planner.query(s, t, dix=dix)
-            for req, d in zip(misses, out):
+            # label tier: pairs whose endpoints are both hub-labeled
+            # in the pinned epoch bypass the planner entirely — the
+            # merge is exact (§15), so this changes cost, not answers
+            hub = planner.hub_mask(s, t, dix=dix)
+            out = np.empty(len(misses), np.float64)
+            label_n = planner_n = 0
+            label_s = planner_s = 0.0
+            if hub.any():
+                t0 = time.perf_counter()
+                out[hub] = planner.query_hub(s[hub], t[hub], dix=dix)
+                label_s = time.perf_counter() - t0
+                label_n = int(hub.sum())
+            rest = ~hub
+            if rest.any():
+                t0 = time.perf_counter()
+                out[rest] = planner.query(s[rest], t[rest], dix=dix)
+                planner_s = time.perf_counter() - t0
+                planner_n = int(rest.sum())
+            for req, d, h in zip(misses, out, hub):
                 req.dist = float(d)
                 req.epoch = epoch
                 req.staleness = stale
+                req.tier = "label" if h else "planner"
                 if self.cache is not None:
                     self.cache.put(req.s, req.t, epoch, req.dist)
+            with self._tier_lock:
+                self._tiers["label_hits"] += label_n
+                self._tiers["planner_dispatches"] += planner_n
+                self._tiers["label_s"] += label_s
+                self._tiers["planner_s"] += planner_s
 
     def flush(self) -> int:
         return self.batcher.flush()
@@ -141,7 +182,22 @@ class ServingRuntime:
         self.batcher.close()
 
     def stats(self) -> dict:
+        """Occupancy + per-tier counters.  ``cache_hits`` is always
+        present (0 when the cache is disabled — the cache stats record
+        overrides it otherwise); ``label_us_per_query`` vs
+        ``planner_us_per_query`` is the measured hot-tier speedup."""
         out = self.batcher.occupancy()
+        with self._tier_lock:
+            tiers = dict(self._tiers)
+        out["cache_hits"] = 0
+        out["label_hits"] = tiers["label_hits"]
+        out["planner_dispatches"] = tiers["planner_dispatches"]
+        out["label_us_per_query"] = round(
+            1e6 * tiers["label_s"] / tiers["label_hits"], 3) \
+            if tiers["label_hits"] else 0.0
+        out["planner_us_per_query"] = round(
+            1e6 * tiers["planner_s"] / tiers["planner_dispatches"], 3) \
+            if tiers["planner_dispatches"] else 0.0
         if self.cache is not None:
             out.update(self.cache.stats().as_record())
         return out

@@ -43,10 +43,16 @@ class Request:
     hiding it (coordinated omission).  The basis is a property of the
     request, not of the serve path that resolved it — a cache hit and
     a device miss measure from the same clock.
+
+    ``tier`` records which serving tier resolved the request —
+    "cache", "label" (hub-label merge, DESIGN.md §15) or "planner" —
+    so responses stay attributable per tier; ``cached`` is the
+    backwards-compatible boolean view of the first.
     """
 
     __slots__ = ("s", "t", "t_submit", "t_sched", "t_done", "dist",
-                 "epoch", "staleness", "cached", "error", "_done")
+                 "epoch", "staleness", "cached", "tier", "error",
+                 "_done")
 
     def __init__(self, s: int, t: int, t_sched: float | None = None):
         self.s = int(s)
@@ -60,6 +66,7 @@ class Request:
         # .Staleness), set by the serving flush alongside ``epoch``
         self.staleness = None
         self.cached = False
+        self.tier: str | None = None
         self.error: BaseException | None = None
         self._done = threading.Event()
 

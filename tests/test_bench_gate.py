@@ -113,6 +113,21 @@ def test_fresh_equals_history_rejected(tmp_path):
                                      str(p))    # distinct: fine
 
 
+def test_fresh_serve_live_requires_tier_fields():
+    """A fresh serve_live record missing the per-tier counters
+    (DESIGN.md §15) fails loudly; a complete record passes.  Committed
+    history is grandfathered — require_tier_fields runs on fresh
+    records only, which test_committed_history_is_gate_clean relies
+    on."""
+    full = {f: 0 for f in bench_gate.TIER_FIELDS}
+    bench_gate.require_tier_fields(full)            # no raise
+    for f in bench_gate.TIER_FIELDS:
+        broken = dict(full)
+        del broken[f]
+        with pytest.raises(SystemExit, match=f):
+            bench_gate.require_tier_fields(broken)
+
+
 def test_committed_history_is_gate_clean():
     """The repo's own BENCH_serve.json must stay loud-failure-free for
     every config the CI gates query."""
