@@ -31,7 +31,12 @@ Every fresh ``serve_live`` record must additionally carry the per-tier
 serving fields (``cache_hits`` / ``label_hits`` /
 ``planner_dispatches`` plus the per-tier latencies, DESIGN.md §15); a
 record missing them fails loudly — committed history predating the hot
-tier is grandfathered, fresh runs are not.
+tier is grandfathered, fresh runs are not.  The same rule covers the
+histogram-latency fields (DESIGN.md §16): a fresh ``serve_live`` record
+must report p50/p95/p99 derived from the runtime's streaming latency
+histogram (``latency_source == "histogram"``, with ``latency_n``
+observations), so the gated p99 is the same bounded-memory number a
+production metrics scraper would read.
 
     python scripts/bench_gate.py                         # CI invocation
     python scripts/bench_gate.py --live                  # live-serve p99 gate
@@ -129,6 +134,32 @@ def require_tier_fields(rec: dict) -> None:
             "attributes responses to cache/label/planner tiers")
 
 
+# histogram-provenance fields (DESIGN.md §16) every FRESH serve_live
+# record must carry: the gated p99_ms comes from the runtime's streaming
+# latency histogram, and latency_source/latency_n say so explicitly.
+# Same grandfathering rule as TIER_FIELDS — committed pre-§16 history
+# stays readable, a fresh run that stops reporting histogram-derived
+# percentiles (or silently falls back to the sampled path) fails here.
+HIST_FIELDS = ("p50_ms", "p95_ms", "p99_ms", "latency_source",
+               "latency_n")
+
+
+def require_hist_fields(rec: dict) -> None:
+    missing = [f for f in HIST_FIELDS if f not in rec]
+    if missing:
+        raise SystemExit(
+            f"bench_gate: fresh serve_live record is missing "
+            f"histogram-latency fields {missing} — the load report no "
+            "longer carries streaming-histogram percentiles "
+            "(DESIGN.md §16)")
+    if rec.get("latency_source") != "histogram":
+        raise SystemExit(
+            f"bench_gate: fresh serve_live record has latency_source="
+            f"{rec.get('latency_source')!r}, not 'histogram' — the "
+            "runtime's streaming latency histogram missed requests and "
+            "the report fell back to the sampled path")
+
+
 def _run_serve_cmd(args, extra: list, record_filter: dict) -> dict:
     """Run the serve driver as a subprocess with ``extra`` flags and
     return the fresh record matching ``record_filter`` (or die)."""
@@ -173,6 +204,7 @@ def run_live(args) -> dict:
         {"section": "serve_live", "mix": args.mix,
          "rate_qps": args.rate})
     require_tier_fields(rec)
+    require_hist_fields(rec)
     return rec
 
 
@@ -196,6 +228,7 @@ def run_refresh(args) -> dict:
                       section="serve_live")
     if live_rec is not None:
         require_tier_fields(live_rec)
+        require_hist_fields(live_rec)
     return rec
 
 

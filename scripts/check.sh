@@ -56,10 +56,14 @@ run_stage "live-traffic refresh smoke" \
     --batch-size 256 --validate 32 --update-batches 1 \
     --update-frac 0.02 --json ""
 
+# --metrics-out/--trace-out exercise the observability exporters
+# (DESIGN.md §16) end to end on every check run; CI uploads the
+# resulting snapshot + Chrome trace as workflow artifacts (ci.yml)
 run_stage "live serving smoke (open-loop + concurrent refresh)" \
     python -m repro.launch.serve --nodes 2000 --live --rate 400 \
     --live-seconds 2 --mix zipf --live-update-batches 1 \
-    --validate 24 --json ""
+    --validate 24 --json "" \
+    --metrics-out obs_metrics.json --trace-out obs_trace.json
 
 # Scale smoke (DESIGN.md §12/§13): road64k must build the deep
 # overlay — --expect-hierarchy 3 fails the run if the build

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from ..obs import trace
 from . import hierarchy, padding
 from .supergraph import DislandIndex
 
@@ -213,6 +214,10 @@ class BuildPlan:
     # set, which is what keeps refresh == rebuild array-equal; a new
     # traffic-driven selection is a new plan, not a refresh.
     hub_nodes: "np.ndarray | None" = None
+    # per-stage wall times of the build that produced this plan
+    # (DESIGN.md §16; filled by build_device_index_with_plan through
+    # the trace.timed span API, same measurement the trace events see)
+    build_timings: "dict | None" = None
 
     @property
     def n_pieces(self) -> int:
@@ -865,39 +870,54 @@ def build_device_index_with_plan(
     disables).  ``hub_nodes`` pins the hub-label hot-tier node set
     (DESIGN.md §15; None/empty disables the tier).
     """
-    plan = make_build_plan(ix)
-    if hub_nodes is not None and len(hub_nodes):
-        plan.hub_nodes = np.asarray(hub_nodes, np.int64)
-    lv = resolve_hierarchy_levels(plan.S, hierarchy_levels)
-    if lv >= 2:
-        plan.hier = hierarchy.plan_hierarchy(
-            plan, levels="auto" if hierarchy_levels == "auto" else lv)
-        # the planner may stop early on degenerate levels (or deepen,
-        # under "auto"): the built depth is authoritative
-        plan.hierarchy_levels = 1 + len(plan.hier)
-        plan.resident_mb = (RESIDENT_MB_AUTO
-                            if resident_mb == "auto"
-                            else float(resident_mb))
-    else:
-        plan.hierarchy_levels = 1
-    frag_apsp, brow, frag_next = frag_stage(plan, force=force)
-    super_weights(plan, np.asarray(frag_apsp))
+    bt: dict = {}
+    with trace.timed("build.plan", bt, "plan"):
+        plan = make_build_plan(ix)
+        if hub_nodes is not None and len(hub_nodes):
+            plan.hub_nodes = np.asarray(hub_nodes, np.int64)
+        lv = resolve_hierarchy_levels(plan.S, hierarchy_levels)
+        if lv >= 2:
+            plan.hier = hierarchy.plan_hierarchy(
+                plan,
+                levels="auto" if hierarchy_levels == "auto" else lv)
+            # the planner may stop early on degenerate levels (or
+            # deepen, under "auto"): the built depth is authoritative
+            plan.hierarchy_levels = 1 + len(plan.hier)
+            plan.resident_mb = (RESIDENT_MB_AUTO
+                                if resident_mb == "auto"
+                                else float(resident_mb))
+        else:
+            plan.hierarchy_levels = 1
+    plan.build_timings = bt
+    with trace.timed("build.frag_stage", bt, "frag_stage",
+                     k=plan.k):
+        frag_apsp, brow, frag_next = frag_stage(plan, force=force)
+        super_weights(plan, np.asarray(frag_apsp))
     if plan.hierarchy_levels >= 2:
-        hres = hier_super_stage(plan, force=force)
-        hier_fields = dict(hres["fields"])
-        rres = resident_stage(plan, hier_fields)
-        if rres is not None:
-            hier_fields.update(rres["fields"])
+        with trace.timed("build.hier_super_stage", bt, "super_stage",
+                         levels=plan.hierarchy_levels):
+            hres = hier_super_stage(plan, force=force)
+            hier_fields = dict(hres["fields"])
+        with trace.timed("build.resident_stage", bt,
+                         "resident_stage"):
+            rres = resident_stage(plan, hier_fields)
+            if rres is not None:
+                hier_fields.update(rres["fields"])
         d_super = jnp.full((1, 1), INF, jnp.float32)
         super_next = jnp.full((1, 1), -1, jnp.int32)
     else:
         hres = None
         rres = None
         hier_fields = {}
-        d_super, super_next = super_stage(plan, force=force)
-    hub = hub_stage(plan, hub_base_fields(
-        plan, lambda name: hier_fields.get(name, d_super), brow))
-    piece_flat, piece_next = piece_stage(plan, ix.g, force=force)
+        with trace.timed("build.super_stage", bt, "super_stage",
+                         S=plan.S):
+            d_super, super_next = super_stage(plan, force=force)
+    with trace.timed("build.hub_stage", bt, "hub_stage"):
+        hub = hub_stage(plan, hub_base_fields(
+            plan, lambda name: hier_fields.get(name, d_super), brow))
+    with trace.timed("build.piece_stage", bt, "piece_stage",
+                     pieces=plan.n_pieces):
+        piece_flat, piece_next = piece_stage(plan, ix.g, force=force)
     base, stride = _node_piece_addressing(plan)
     dix = DeviceIndex(
         **hier_fields,
@@ -1094,6 +1114,13 @@ class RefreshStats:
             "decrease_only": self.decrease_only,
             "top_closure": self.top_closure,
             "refresh_s": round(self.timings.get("total", 0.0), 4),
+            # full per-stage split (classify/frag_fw/super_fw/hub/
+            # pieces), so a refresh regression in the record history is
+            # attributable to a stage, not just a bigger total
+            "stage_timings": {
+                k: round(v, 4)
+                for k, v in sorted(self.timings.items())
+                if k != "total"},
         }
 
 
@@ -1300,73 +1327,79 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
     array-equal to a from-scratch build on g_new — the property the
     differential harness in tests/test_refresh.py enforces per epoch.
     """
+    # stage timings flow through the one span API (DESIGN.md §16):
+    # trace.timed always fills ``timings`` (the RefreshStats contract)
+    # and additionally emits a trace span when the tracer is enabled
     timings: dict = {}
     t_all = time.perf_counter()
 
-    t0 = time.perf_counter()
-    upd = classify_updates(plan, u, v, w)
-    timings["classify"] = time.perf_counter() - t0
+    with trace.timed("refresh.classify", timings, "classify",
+                     n_updates=len(u)):
+        upd = classify_updates(plan, u, v, w)
 
     frag_w_before = plan.frag_adj[upd.frag_fi, upd.frag_pu,
                                   upd.frag_pv].copy()
     sup_w_before = plan.sup_w.copy()
     hier_undo: dict = {}
     try:
-        t0 = time.perf_counter()
-        frag_apsp, brow, frag_next, blocks = refresh_frag_stage(
-            plan, dix.frag_apsp, dix.brow, dix.frag_next, upd,
-            force=force)
-        timings["frag_fw"] = time.perf_counter() - t0
+        with trace.timed("refresh.frag_fw", timings, "frag_fw",
+                         dirty=int(upd.dirty_frags.size)):
+            frag_apsp, brow, frag_next, blocks = refresh_frag_stage(
+                plan, dix.frag_apsp, dix.brow, dix.frag_next, upd,
+                force=force)
 
         # ---- SUPER: regather dirty slot weights, re-close overlay ---
-        t0 = time.perf_counter()
-        touched = np.isin(plan.sup_fi, upd.dirty_frags)
-        touched_slots = np.concatenate([np.nonzero(touched)[0],
-                                        upd.eb_slots]).astype(np.int64)
-        slot_w_old = sup_w_before[touched_slots]
-        if upd.dirty_frags.size:
-            super_weights(plan, blocks, frags=upd.dirty_frags)
-        plan.sup_w[upd.eb_slots] = upd.eb_w
-        slot_w_new = plan.sup_w[touched_slots]
-        changed = slot_w_old != slot_w_new
-        hier_fields: dict = {}
-        l2_slot = getattr(dix, "host_l2_slot", None)
-        res_frag = getattr(dix, "host_res_frag", None)
-        topgrp_frag = getattr(dix, "host_topgrp_frag", None)
-        top_closure = "carry"
-        if changed.any():
-            if plan.hierarchy_levels >= 2:
-                hres = refresh_hier_stage(plan, dix,
-                                          touched_slots[changed],
-                                          hier_undo, force=force)
-                hier_fields = dict(hres["fields"])
-                ov_slot = hres["ov_slot"]
-                l2_slot = hres["l2_slot"]
-                top_closure = hres["top_closure"]
-                d_super, super_next = dix.d_super, dix.super_next
-                # re-lift the resident rows against the refreshed
-                # per-level tables (same deterministic stage as the
-                # build, so refresh == rebuild stays array-equal)
-                rbase = {name: hier_fields.get(name, getattr(dix, name))
-                         for name in ("l2row", "bnd2_sid", "pos_in_sf",
-                                      "d2")}
-                rres = resident_stage(plan, rbase)
-                if rres is not None:
-                    hier_fields.update(rres["fields"])
-                    res_frag = rres["res_frag"]
-                    topgrp_frag = rres["topgrp_frag"]
+        with trace.timed("refresh.super_fw", timings, "super_fw"):
+            touched = np.isin(plan.sup_fi, upd.dirty_frags)
+            touched_slots = np.concatenate(
+                [np.nonzero(touched)[0],
+                 upd.eb_slots]).astype(np.int64)
+            slot_w_old = sup_w_before[touched_slots]
+            if upd.dirty_frags.size:
+                super_weights(plan, blocks, frags=upd.dirty_frags)
+            plan.sup_w[upd.eb_slots] = upd.eb_w
+            slot_w_new = plan.sup_w[touched_slots]
+            changed = slot_w_old != slot_w_new
+            hier_fields: dict = {}
+            l2_slot = getattr(dix, "host_l2_slot", None)
+            res_frag = getattr(dix, "host_res_frag", None)
+            topgrp_frag = getattr(dix, "host_topgrp_frag", None)
+            top_closure = "carry"
+            if changed.any():
+                if plan.hierarchy_levels >= 2:
+                    hres = refresh_hier_stage(plan, dix,
+                                              touched_slots[changed],
+                                              hier_undo, force=force)
+                    hier_fields = dict(hres["fields"])
+                    ov_slot = hres["ov_slot"]
+                    l2_slot = hres["l2_slot"]
+                    top_closure = hres["top_closure"]
+                    d_super, super_next = dix.d_super, dix.super_next
+                    # re-lift the resident rows against the refreshed
+                    # per-level tables (same deterministic stage as
+                    # the build, so refresh == rebuild stays
+                    # array-equal)
+                    rbase = {name: hier_fields.get(name,
+                                                   getattr(dix, name))
+                             for name in ("l2row", "bnd2_sid",
+                                          "pos_in_sf", "d2")}
+                    rres = resident_stage(plan, rbase)
+                    if rres is not None:
+                        hier_fields.update(rres["fields"])
+                        res_frag = rres["res_frag"]
+                        topgrp_frag = rres["topgrp_frag"]
+                else:
+                    d_super, super_next = super_stage(plan,
+                                                      force=force)
+                    ov_slot = overlay_slot_table(plan)
+                    top_closure = "dense"
             else:
-                d_super, super_next = super_stage(plan, force=force)
-                ov_slot = overlay_slot_table(plan)
-                top_closure = "dense"
-        else:
-            # no overlay weight changed: closure AND witnesses are
-            # still exact, so the path tables carry over too
-            # (hier_fields stays empty — per-level tables and the
-            # resident rows carry too)
-            d_super, super_next = dix.d_super, dix.super_next
-            ov_slot = getattr(dix, "host_ov_slot", None)
-        timings["super_fw"] = time.perf_counter() - t0
+                # no overlay weight changed: closure AND witnesses are
+                # still exact, so the path tables carry over too
+                # (hier_fields stays empty — per-level tables and the
+                # resident rows carry too)
+                d_super, super_next = dix.d_super, dix.super_next
+                ov_slot = getattr(dix, "host_ov_slot", None)
 
         # ---- hub labels (DESIGN.md §15) -----------------------------
         # a label folds a brow leg with the overlay closure, so it is
@@ -1375,42 +1408,42 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
         # input is unchanged and carrying the rows is bit-identical to
         # recomputing them — the refresh == rebuild invariant the
         # differential harness in tests/test_hublabels.py enforces
-        t0 = time.perf_counter()
-        hub_fields: dict = {}
-        hub_agent = getattr(dix, "host_hub_agent", None)
-        hub_topgrp = None
-        if plan.hub_nodes is not None and len(plan.hub_nodes):
-            hub_frags = np.unique(plan.frag_of[
-                plan.agent_of[plan.hub_nodes].astype(np.int64)])
-            if changed.any() or np.intersect1d(
-                    upd.dirty_frags, hub_frags).size:
-                hub = hub_stage(plan, hub_base_fields(
-                    plan,
-                    lambda name: hier_fields.get(
-                        name, getattr(dix, name)) if name != "d_super"
-                    else d_super, brow))
-                if hub is not None:
-                    hub_fields = hub["fields"]
-                    hub_agent = hub["hub_agent"]
-                    hub_topgrp = hub["topgrp_frag"]
-        timings["hub"] = time.perf_counter() - t0
+        with trace.timed("refresh.hub", timings, "hub"):
+            hub_fields: dict = {}
+            hub_agent = getattr(dix, "host_hub_agent", None)
+            hub_topgrp = None
+            if plan.hub_nodes is not None and len(plan.hub_nodes):
+                hub_frags = np.unique(plan.frag_of[
+                    plan.agent_of[plan.hub_nodes].astype(np.int64)])
+                if changed.any() or np.intersect1d(
+                        upd.dirty_frags, hub_frags).size:
+                    hub = hub_stage(plan, hub_base_fields(
+                        plan,
+                        lambda name: hier_fields.get(
+                            name, getattr(dix, name))
+                        if name != "d_super" else d_super, brow))
+                    if hub is not None:
+                        hub_fields = hub["fields"]
+                        hub_agent = hub["hub_agent"]
+                        hub_topgrp = hub["topgrp_frag"]
 
         # ---- pieces + dist-to-agent ---------------------------------
-        t0 = time.perf_counter()
-        if upd.dirty_gids.size:
-            piece_flat = np.asarray(dix.piece_flat).copy()
-            piece_next = np.asarray(dix.piece_next).copy()
-            dist_to_agent = np.asarray(dix.dist_to_agent).copy()
-            refresh_piece_stage(plan, g_new, upd.dirty_gids, piece_flat,
-                                piece_next, dist_to_agent, force=force)
-            piece_flat_j = jnp.asarray(piece_flat)
-            piece_next_j = jnp.asarray(piece_next)
-            dist_j = jnp.asarray(dist_to_agent)
-        else:
-            piece_flat_j = dix.piece_flat
-            piece_next_j = dix.piece_next
-            dist_j = dix.dist_to_agent
-        timings["pieces"] = time.perf_counter() - t0
+        with trace.timed("refresh.pieces", timings, "pieces",
+                         dirty=int(upd.dirty_gids.size)):
+            if upd.dirty_gids.size:
+                piece_flat = np.asarray(dix.piece_flat).copy()
+                piece_next = np.asarray(dix.piece_next).copy()
+                dist_to_agent = np.asarray(dix.dist_to_agent).copy()
+                refresh_piece_stage(plan, g_new, upd.dirty_gids,
+                                    piece_flat, piece_next,
+                                    dist_to_agent, force=force)
+                piece_flat_j = jnp.asarray(piece_flat)
+                piece_next_j = jnp.asarray(piece_next)
+                dist_j = jnp.asarray(dist_to_agent)
+            else:
+                piece_flat_j = dix.piece_flat
+                piece_next_j = dix.piece_next
+                dist_j = dix.dist_to_agent
     except BaseException:
         # roll the weight caches back: the caller never published a new
         # epoch, so the plan must keep describing the old one
@@ -1436,6 +1469,9 @@ def refresh_index(dix: DeviceIndex, plan: BuildPlan, g_new, u, v, w, *,
             0.0, slot_w_new[fin] - slot_w_old[fin]).sum())
 
     timings["total"] = time.perf_counter() - t_all
+    trace.event("refresh.apply", t_all, t_all + timings["total"],
+                n_updates=len(u), top_closure=top_closure,
+                dirty_frags=int(upd.dirty_frags.size))
     new_dix = dataclasses.replace(
         dix, frag_apsp=frag_apsp, frag_next=frag_next, brow=brow,
         d_super=d_super, super_next=super_next,

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from ..obs import trace
 from . import padding
 from .partition import partition_bgp
 from .graph import Graph
@@ -502,12 +503,14 @@ def sf_stage(hier: HierPlan, *, force=None) -> tuple[jax.Array,
     """Per-level stage: batched witness FW over every group's induced
     overlay subgraph at the one pow2 tile shape [nsf, m2, m2] ->
     (sf_closure, sf_next, l2row), sentinel block appended."""
-    closure, nxt = ops.fw_batch_next(jnp.asarray(hier.sf_adj),
-                                     force=force)
-    rows = l2row_from(closure, hier.bnd2_pos, hier.bnd2_valid)
-    closure, nxt = _pad_sentinel(closure, nxt)
-    r_s = jnp.full((1,) + rows.shape[1:], INF, rows.dtype)
-    return closure, nxt, jnp.concatenate([rows, r_s])
+    with trace.span("hierarchy.sf_stage", nsf=int(hier.nsf),
+                    m2=int(hier.m2)):
+        closure, nxt = ops.fw_batch_next(jnp.asarray(hier.sf_adj),
+                                         force=force)
+        rows = l2row_from(closure, hier.bnd2_pos, hier.bnd2_valid)
+        closure, nxt = _pad_sentinel(closure, nxt)
+        r_s = jnp.full((1,) + rows.shape[1:], INF, rows.dtype)
+        return closure, nxt, jnp.concatenate([rows, r_s])
 
 
 def l2_overlay(hier: HierPlan) -> jax.Array:
@@ -567,15 +570,16 @@ def l2_stage(hier: HierPlan, *, force=None) -> tuple[jax.Array,
     refresh fast path (``l2_decrease_stage``) can reproduce them
     array-equal without re-running the full closure."""
     S2 = hier.S2
-    d2 = jnp.full((S2 + 1, S2 + 1), INF, jnp.float32)
-    d2_next = jnp.full((S2 + 1, S2 + 1), -1, jnp.int32)
-    if S2 == 0 or hier.l2_src.size == 0:
-        return d2, d2_next
-    adj = np.asarray(l2_overlay(hier))
-    d_s = np.asarray(ops.fw_apsp(jnp.asarray(adj), force=force))
-    n_s = first_hops(adj, d_s)
-    return (d2.at[:S2, :S2].set(d_s),
-            d2_next.at[:S2, :S2].set(jnp.asarray(n_s)))
+    with trace.span("hierarchy.l2_stage", S2=int(S2)):
+        d2 = jnp.full((S2 + 1, S2 + 1), INF, jnp.float32)
+        d2_next = jnp.full((S2 + 1, S2 + 1), -1, jnp.int32)
+        if S2 == 0 or hier.l2_src.size == 0:
+            return d2, d2_next
+        adj = np.asarray(l2_overlay(hier))
+        d_s = np.asarray(ops.fw_apsp(jnp.asarray(adj), force=force))
+        n_s = first_hops(adj, d_s)
+        return (d2.at[:S2, :S2].set(d_s),
+                d2_next.at[:S2, :S2].set(jnp.asarray(n_s)))
 
 
 #: decrease fast path bail-out: above this fraction of S2 touched, the
@@ -617,47 +621,49 @@ def l2_decrease_stage(hier: HierPlan, d2_old: jax.Array,
     r = int(u_ids.size)
     if r == 0 or r > max(16, S2 // DECREASE_MAX_FRAC):
         return None
-    d_old = np.asarray(d2_old)[:S2, :S2]
-    nxt_old = np.asarray(d2_next_old)[:S2, :S2]
-    # seed block: old closure restricted to U, min-merged with the NEW
-    # changed-slot weights, then closed by a tiny r x r FW
-    m = d_old[np.ix_(u_ids, u_ids)].copy()
-    pos = np.full(S2, -1, np.int64)
-    pos[u_ids] = np.arange(r)
-    pa = pos[hier.l2_src[changed_slots]]
-    pb = pos[hier.l2_dst[changed_slots]]
-    wc = hier.l2_w[changed_slots].astype(np.float32)
-    np.minimum.at(m, (pa, pb), wc)
-    np.minimum.at(m, (pb, pa), wc)
-    np.fill_diagonal(m, 0.0)
-    for k in range(r):
-        np.minimum(m, m[:, k, None] + m[None, k, :], out=m)
-    # two-sided relaxation, chunked so [c, r, S2] stays ~64 MiB
-    left = d_old[:, u_ids]                        # [S2, r]
-    right = d_old[u_ids, :]                       # [r, S2]
-    lm = np.min(left[:, :, None] + m[None, :, :], axis=1)  # [S2, r]
-    d_new = d_old.copy()
-    chunk = max(1, (1 << 24) // max(1, r * S2))
-    for i0 in range(0, S2, chunk):
-        cand = np.min(lm[i0:i0 + chunk, :, None] + right[None, :, :],
-                      axis=1)
-        np.minimum(d_new[i0:i0 + chunk], cand,
-                   out=d_new[i0:i0 + chunk])
-    # canonical witnesses on the changed rows/columns only (D stays
-    # symmetric, so changed rows == changed columns)
-    touched = np.union1d(
-        u_ids, np.nonzero((d_new != d_old).any(axis=1))[0])
-    adj = np.asarray(l2_overlay(hier))
-    nxt_new = nxt_old.copy()
-    nxt_new[touched, :] = first_hops(adj, d_new, rows=touched)
-    rest = np.setdiff1d(np.arange(S2, dtype=np.int64), touched)
-    if rest.size and touched.size:
-        nxt_new[np.ix_(rest, touched)] = first_hops(
-            adj, d_new, rows=rest, cols=touched)
-    d2 = jnp.full((S2 + 1, S2 + 1), INF, jnp.float32)
-    d2_next = jnp.full((S2 + 1, S2 + 1), -1, jnp.int32)
-    return (d2.at[:S2, :S2].set(jnp.asarray(d_new)),
-            d2_next.at[:S2, :S2].set(jnp.asarray(nxt_new)))
+    with trace.span("hierarchy.l2_decrease_stage",
+                    S2=int(S2), r=r):
+        d_old = np.asarray(d2_old)[:S2, :S2]
+        nxt_old = np.asarray(d2_next_old)[:S2, :S2]
+        # seed block: old closure restricted to U, min-merged with the NEW
+        # changed-slot weights, then closed by a tiny r x r FW
+        m = d_old[np.ix_(u_ids, u_ids)].copy()
+        pos = np.full(S2, -1, np.int64)
+        pos[u_ids] = np.arange(r)
+        pa = pos[hier.l2_src[changed_slots]]
+        pb = pos[hier.l2_dst[changed_slots]]
+        wc = hier.l2_w[changed_slots].astype(np.float32)
+        np.minimum.at(m, (pa, pb), wc)
+        np.minimum.at(m, (pb, pa), wc)
+        np.fill_diagonal(m, 0.0)
+        for k in range(r):
+            np.minimum(m, m[:, k, None] + m[None, k, :], out=m)
+        # two-sided relaxation, chunked so [c, r, S2] stays ~64 MiB
+        left = d_old[:, u_ids]                        # [S2, r]
+        right = d_old[u_ids, :]                       # [r, S2]
+        lm = np.min(left[:, :, None] + m[None, :, :], axis=1)  # [S2, r]
+        d_new = d_old.copy()
+        chunk = max(1, (1 << 24) // max(1, r * S2))
+        for i0 in range(0, S2, chunk):
+            cand = np.min(lm[i0:i0 + chunk, :, None] + right[None, :, :],
+                          axis=1)
+            np.minimum(d_new[i0:i0 + chunk], cand,
+                       out=d_new[i0:i0 + chunk])
+        # canonical witnesses on the changed rows/columns only (D stays
+        # symmetric, so changed rows == changed columns)
+        touched = np.union1d(
+            u_ids, np.nonzero((d_new != d_old).any(axis=1))[0])
+        adj = np.asarray(l2_overlay(hier))
+        nxt_new = nxt_old.copy()
+        nxt_new[touched, :] = first_hops(adj, d_new, rows=touched)
+        rest = np.setdiff1d(np.arange(S2, dtype=np.int64), touched)
+        if rest.size and touched.size:
+            nxt_new[np.ix_(rest, touched)] = first_hops(
+                adj, d_new, rows=rest, cols=touched)
+        d2 = jnp.full((S2 + 1, S2 + 1), INF, jnp.float32)
+        d2_next = jnp.full((S2 + 1, S2 + 1), -1, jnp.int32)
+        return (d2.at[:S2, :S2].set(jnp.asarray(d_new)),
+                d2_next.at[:S2, :S2].set(jnp.asarray(nxt_new)))
 
 
 # ---------------------------------------------------------------------------

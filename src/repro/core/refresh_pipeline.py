@@ -29,6 +29,8 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace
+
 
 @dataclasses.dataclass(frozen=True)
 class Staleness:
@@ -237,7 +239,11 @@ class RefreshPipeline:
                 pending_updates=int(pending_updates),
                 pending_groups=pending_groups)
         try:
-            stats = self.engine.apply_updates(u, v, w, staleness=desc)
+            with trace.span("refresh.item", groups=len(_groups),
+                            n_updates=int(u.size),
+                            pending=int(pending_updates)):
+                stats = self.engine.apply_updates(u, v, w,
+                                                  staleness=desc)
         except BaseException:
             # the engine rolled its caches back and published nothing:
             # put the item back so the pool is never silently dropped

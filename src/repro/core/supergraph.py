@@ -28,6 +28,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from ..obs import trace
 from .agents import DRAResult, compute_dras
 from .graph import Graph
 from .landmarks import HybridCover, hybrid_cover
@@ -79,22 +80,22 @@ class DislandIndex:
 def build_index(g: Graph, c: int = 2, use_cost_model: bool = True,
                 seed: int = 0) -> DislandIndex:
     """Run the full preprocessing module (paper Fig. 7)."""
+    # stage wall-times flow through the one span API (DESIGN.md §16):
+    # the same measurement fills the index's ``timings`` dict and, when
+    # tracing is on, the build trace
     timings = {}
-    t0 = time.perf_counter()
-    dras = compute_dras(g, c=c)
-    timings["compDRAs"] = time.perf_counter() - t0
+    with trace.timed("build.compDRAs", timings, "compDRAs", n=g.n):
+        dras = compute_dras(g, c=c)
 
-    t0 = time.perf_counter()
-    shrink_nodes = dras.shrink_nodes()
-    shrink, shrink_ids = g.subgraph(shrink_nodes)
-    shrink_id_of = -np.ones(g.n, dtype=np.int64)
-    shrink_id_of[shrink_ids] = np.arange(shrink_ids.size)
-    timings["shrink_graph"] = time.perf_counter() - t0
+    with trace.timed("build.shrink_graph", timings, "shrink_graph"):
+        shrink_nodes = dras.shrink_nodes()
+        shrink, shrink_ids = g.subgraph(shrink_nodes)
+        shrink_id_of = -np.ones(g.n, dtype=np.int64)
+        shrink_id_of[shrink_ids] = np.arange(shrink_ids.size)
 
-    t0 = time.perf_counter()
-    gamma = max(4, c * int(np.floor(np.sqrt(g.n))))
-    part = partition_bgp(shrink, gamma, seed=seed)
-    timings["partition"] = time.perf_counter() - t0
+    with trace.timed("build.partition", timings, "partition"):
+        gamma = max(4, c * int(np.floor(np.sqrt(g.n))))
+        part = partition_bgp(shrink, gamma, seed=seed)
 
     t0 = time.perf_counter()
     boundary = part.boundary_mask(shrink)
@@ -112,10 +113,12 @@ def build_index(g: Graph, c: int = 2, use_cost_model: bool = True,
         fragments.append(Fragment(nodes=shrink_ids[fids], graph=fg,
                                   boundary_local=bl, cover=cover))
     timings["hybrid_covers"] = time.perf_counter() - t0
+    trace.event("build.hybrid_covers", t0,
+                t0 + timings["hybrid_covers"],
+                k=part.n_fragments)
 
-    t0 = time.perf_counter()
-    sg = _assemble_super(g, shrink, shrink_ids, part, fragments)
-    timings["super_graph"] = time.perf_counter() - t0
+    with trace.timed("build.super_graph", timings, "super_graph"):
+        sg = _assemble_super(g, shrink, shrink_ids, part, fragments)
 
     return DislandIndex(g=g, dras=dras, shrink=shrink,
                         shrink_ids=shrink_ids, shrink_id_of=shrink_id_of,

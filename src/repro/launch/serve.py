@@ -33,7 +33,6 @@ validated against the host oracle *of the epoch that served it*.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +45,7 @@ from ..core.dist_engine import EpochedEngine, serve_sharded
 from ..core.graph import road_like, traffic_updates
 from ..core.paths import path_weight
 from ..core.supergraph import build_index, reweight_index
+from ..obs import trace
 from ..perflog import append_records, latest
 from ..runtime import StragglerMonitor
 from .mesh import make_host_mesh
@@ -110,24 +110,29 @@ def _hub_selection(g, args) -> np.ndarray | None:
 def _build_engine(args) -> tuple[EpochedEngine, float]:
     """Graph + host index + EpochedEngine with timing prints — the one
     setup path shared by the planner serving loops (offline batches,
-    --paths, --update-batches, --live)."""
-    t0 = time.perf_counter()
-    g = road_like(args.nodes, seed=args.seed)
-    print(f"graph: n={g.n} m={g.m} ({time.perf_counter() - t0:.1f}s)")
-    t0 = time.perf_counter()
-    ix = build_index(g)
-    print(f"index: {ix.timings} ({time.perf_counter() - t0:.1f}s)")
-    t0 = time.perf_counter()
+    --paths, --update-batches, --live).  All stage wall-times flow
+    through the span API (DESIGN.md §16): the console prints, the
+    returned ``build_s``, and the build trace all read one
+    measurement."""
+    bt: dict = {}
+    with trace.timed("build.graph", bt, "graph", nodes=args.nodes):
+        g = road_like(args.nodes, seed=args.seed)
+    print(f"graph: n={g.n} m={g.m} ({bt['graph']:.1f}s)")
+    with trace.timed("build.host_index", bt, "host_index"):
+        ix = build_index(g)
+    print(f"index: {ix.timings} ({bt['host_index']:.1f}s)")
     # refresh-path warmup compiles the delta-FW programs — minutes of
     # wasted work at road64k scale when the run applies no updates
     warm = bool(args.update_batches
                 or (args.live and args.live_update_batches))
     hub_nodes = _hub_selection(g, args)
-    engine = EpochedEngine(g, ix=ix, paths=args.paths,
-                           hierarchy_levels=args.hierarchy_levels,
-                           resident_mb=args.resident_mb,
-                           warm_refresh=warm, hub_nodes=hub_nodes)
-    build_s = time.perf_counter() - t0
+    with trace.timed("build.device_engine", bt, "device_engine",
+                     warm_refresh=warm):
+        engine = EpochedEngine(g, ix=ix, paths=args.paths,
+                               hierarchy_levels=args.hierarchy_levels,
+                               resident_mb=args.resident_mb,
+                               warm_refresh=warm, hub_nodes=hub_nodes)
+    build_s = bt["device_engine"]
     dix = engine.dix
     ov = _overlay_record(engine)
     print(f"device index: frag_apsp={dix.frag_apsp.shape} "
@@ -198,14 +203,19 @@ def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
     for r in range(args.update_batches):
         u, v, w = traffic_updates(engine.g, args.update_frac,
                                   seed=args.seed + 10 + r)
-        t0 = time.perf_counter()
-        stats = engine.apply_updates(u, v, w)
-        refresh_s = time.perf_counter() - t0
+        # one measurement per stage (span API): record fields, prints,
+        # and the trace all read the same numbers
+        tm: dict = {}
+        with trace.timed("refresh.apply_updates", tm, "refresh",
+                         round=r, n_updates=len(u)):
+            stats = engine.apply_updates(u, v, w)
+        refresh_s = tm["refresh"]
         s = rng.integers(0, engine.g.n, args.batch_size)
         t = rng.integers(0, engine.g.n, args.batch_size)
-        t0 = time.perf_counter()
-        out = engine.query(s, t)
-        serve_s = time.perf_counter() - t0
+        with trace.timed("serve.epoch_batch", tm, "serve",
+                         epoch=engine.epoch):
+            out = engine.query(s, t)
+        serve_s = tm["serve"]
         bad = _validate_sample(engine.g, s, t, out, args.validate,
                                label=f"epoch {engine.epoch} validation")
         # Two from-scratch baselines on the updated graph, re-measured
@@ -217,19 +227,20 @@ def _update_loop(engine: EpochedEngine, args, build_s: float) -> list:
         #  * reweight + device rebuild (same structure) — itself only
         #    possible because overlay weights are derived; also the
         #    array-parity exactness reference (checked on round 0).
-        t0 = time.perf_counter()
-        build_device_index(build_index(engine.g),
-                           hierarchy_levels=engine.plan.hierarchy_levels)
-        pipeline_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
+        with trace.timed("refresh.scratch_pipeline", tm, "pipeline"):
+            build_device_index(
+                build_index(engine.g),
+                hierarchy_levels=engine.plan.hierarchy_levels)
+        pipeline_s = tm["pipeline"]
         # same hub set as the live plan: the parity check covers the
         # hub tables too (REFRESHED_FIELDS), so the scratch oracle
         # must label the identical node set
-        sdix = build_device_index(
-            reweight_index(engine.ix, engine.g),
-            hierarchy_levels=engine.plan.hierarchy_levels,
-            hub_nodes=engine.plan.hub_nodes)
-        reweight_s = time.perf_counter() - t0
+        with trace.timed("refresh.scratch_reweight", tm, "reweight"):
+            sdix = build_device_index(
+                reweight_index(engine.ix, engine.g),
+                hierarchy_levels=engine.plan.hierarchy_levels,
+                hub_nodes=engine.plan.hub_nodes)
+        reweight_s = tm["reweight"]
         scratch_match = all(index_fields_equal(
             engine.dix, sdix, REFRESHED_FIELDS).values())
         rec = {
@@ -309,6 +320,55 @@ def _paths_loop(engine: EpochedEngine, args) -> list:
     }]
 
 
+def _start_obs(args, runtime) -> dict:
+    """Wire the live runtime's registry to the exporters the CLI asked
+    for (--metrics-out periodic snapshots + Prometheus text sidecar,
+    --metrics-port HTTP endpoint).  Returns the handles to stop."""
+    handles: dict = {}
+    if getattr(args, "metrics_out", ""):
+        from ..obs import MetricsExporter
+
+        handles["exporter"] = MetricsExporter(
+            runtime.registry, args.metrics_out,
+            interval_s=getattr(args, "metrics_every", 2.0),
+            extra=lambda: {
+                "slow_queries": runtime.slow_log.records()}).start()
+    port = getattr(args, "metrics_port", 0)
+    if port:
+        from ..obs import MetricsServer
+
+        srv = MetricsServer(runtime.registry, port).start()
+        handles["server"] = srv
+        print(f"metrics: http://127.0.0.1:{srv.port}/metrics")
+    return handles
+
+
+def _stop_obs(args, handles: dict) -> None:
+    exporter = handles.get("exporter")
+    if exporter is not None:
+        exporter.stop()
+        print(f"metrics: {exporter.writes} snapshot(s) -> "
+              f"{args.metrics_out} (+ .prom exposition)")
+    server = handles.get("server")
+    if server is not None:
+        server.stop()
+
+
+def _write_trace(args) -> None:
+    """Drain the default tracer into a Chrome-trace file
+    (--trace-out; load it in chrome://tracing or Perfetto)."""
+    if not getattr(args, "trace_out", ""):
+        return
+    from ..obs.export import write_chrome_trace
+
+    tr = trace.get_tracer()
+    events = tr.events()
+    write_chrome_trace(args.trace_out, events)
+    dropped = f" ({tr.dropped} dropped)" if tr.dropped else ""
+    print(f"trace: {len(events)} event(s) -> {args.trace_out}"
+          f"{dropped}")
+
+
 def _live_loop(engine: EpochedEngine, args) -> list:
     """Online serving runtime under open-loop load (DESIGN.md §11),
     optionally with concurrent background refresh (pipelined through
@@ -321,25 +381,30 @@ def _live_loop(engine: EpochedEngine, args) -> list:
     runtime = ServingRuntime(engine, max_batch=args.live_batch,
                              deadline_s=args.deadline_ms * 1e-3,
                              cache_size=args.cache_size)
-    t0 = time.perf_counter()
-    runtime.warmup()
+    tm: dict = {}
+    with trace.timed("serve.warmup", tm, "warmup"):
+        runtime.warmup()
     print(f"live: warmed {runtime.max_batch}-cap buckets in "
-          f"{time.perf_counter() - t0:.1f}s; deadline "
+          f"{tm['warmup']:.1f}s; deadline "
           f"{args.deadline_ms}ms, cache "
           f"{args.cache_size or 'off'}, mix {args.mix}")
     n = max(1, int(round(args.rate * args.live_seconds)))
     pairs = workload_pairs(engine.g, args.mix, n, seed=args.seed + 4,
                            zipf_a=args.zipf_a)
-    report, graphs, driver = run_load_with_refresh(
-        runtime, pairs, rate_qps=args.rate, seed=args.seed + 5,
-        refresh_rounds=args.live_update_batches,
-        refresh_frac=args.update_frac,
-        refresh_interval_s=args.live_update_every,
-        refresh_seed=args.seed,
-        refresh_pipelined=args.live_pipelined,
-        wait_timeout_s=args.live_wait_timeout,
-        join_timeout_s=args.live_join_timeout)
-    runtime.close()
+    obs_handles = _start_obs(args, runtime)
+    try:
+        report, graphs, driver = run_load_with_refresh(
+            runtime, pairs, rate_qps=args.rate, seed=args.seed + 5,
+            refresh_rounds=args.live_update_batches,
+            refresh_frac=args.update_frac,
+            refresh_interval_s=args.live_update_every,
+            refresh_seed=args.seed,
+            refresh_pipelined=args.live_pipelined,
+            wait_timeout_s=args.live_wait_timeout,
+            join_timeout_s=args.live_join_timeout)
+        runtime.close()
+    finally:
+        _stop_obs(args, obs_handles)
     epochs = sorted({r.epoch for r in report.requests})
     stats = runtime.stats()
     # per-tier resolution split (DESIGN.md §15): every response came
@@ -350,7 +415,9 @@ def _live_loop(engine: EpochedEngine, args) -> list:
           f"{report.offered_qps:.0f} qps offered / "
           f"{report.achieved_qps:.0f} achieved; latency p50 "
           f"{report.p50_ms}ms p95 {report.p95_ms}ms p99 "
-          f"{report.p99_ms}ms; tiers: {stats['cache_hits']} cache / "
+          f"{report.p99_ms}ms "
+          f"({report.latency_source}, n={report.latency_n}); "
+          f"tiers: {stats['cache_hits']} cache / "
           f"{stats['label_hits']} label / "
           f"{stats['planner_dispatches']} planner "
           f"({stats.get('cache_hit_rate', 0.0):.1%} cache hit rate, "
@@ -363,6 +430,14 @@ def _live_loop(engine: EpochedEngine, args) -> list:
           f"(full={stats['flush_full']} "
           f"deadline={stats['flush_deadline']}); epochs served "
           f"{epochs}")
+    slow = runtime.slow_log.records()
+    if slow:
+        w0 = slow[0]
+        print(f"slow queries: worst {w0['latency_ms']:.0f}ms "
+              f"(tier {w0['tier']}, epoch {w0['epoch']}, waited "
+              f"{w0['batch_wait_ms']:.0f}ms in a "
+              f"{w0['batch_size']}-request batch); {len(slow)} logged "
+              f"of {runtime.slow_log.offered}")
     if args.live_update_batches:
         print(f"live staleness: max serving gap "
               f"{report.max_serving_gap_ms:.0f}ms, "
@@ -531,6 +606,22 @@ def main() -> None:
                            "on CPU)")
     live.add_argument("--live-update-every", type=float, default=0.25,
                       help="seconds between background refresh rounds")
+    obs = ap.add_argument_group("observability (DESIGN.md §16)")
+    obs.add_argument("--metrics-out", default="",
+                     help="write periodic metrics snapshots (JSON + "
+                          "Prometheus .prom sidecar) to this path "
+                          "during --live ('' disables)")
+    obs.add_argument("--metrics-every", type=float, default=2.0,
+                     help="seconds between metrics snapshots")
+    obs.add_argument("--metrics-port", type=int, default=0,
+                     help="serve live Prometheus text at "
+                          "127.0.0.1:PORT/metrics during --live "
+                          "(0 disables)")
+    obs.add_argument("--trace-out", default="",
+                     help="enable tracing spans and write the Chrome-"
+                          "trace JSON here at exit (build, refresh, "
+                          "and per-request serve spans; load in "
+                          "chrome://tracing)")
     args = ap.parse_args()
     preset = None
     if args.graph:
@@ -565,6 +656,13 @@ def main() -> None:
     if args.hot_tier and not args.hub_budget:
         ap.error("--hot-tier requires --hub-budget (no labels, no "
                  "label hits to gate on)")
+    if (args.metrics_out or args.metrics_port) and not args.live:
+        ap.error("--metrics-out/--metrics-port require --live (the "
+                 "metrics registry lives on the serving runtime)")
+    if args.trace_out:
+        # enable before the build so the build/refresh stage spans
+        # land in the same trace as the serve lifecycle events
+        trace.get_tracer().enable()
 
     if args.live:
         engine, _build_s = _build_engine(args)
@@ -578,6 +676,7 @@ def main() -> None:
               prev_key="p99_ms")
         if args.update_batches:
             _emit(args, _update_loop(engine, args, _build_s), "refresh")
+        _write_trace(args)
         return
 
     engine = None
@@ -585,17 +684,18 @@ def main() -> None:
         engine, build_s = _build_engine(args)
         dix = engine.dix
     else:
-        t0 = time.perf_counter()
-        g = road_like(args.nodes, seed=args.seed)
-        print(f"graph: n={g.n} m={g.m} "
-              f"({time.perf_counter() - t0:.1f}s)")
-        t0 = time.perf_counter()
-        ix = build_index(g)
-        print(f"index: {ix.timings} ({time.perf_counter() - t0:.1f}s)")
-        t0 = time.perf_counter()
-        dix = build_device_index(
-            ix, hierarchy_levels=args.hierarchy_levels)
-        build_s = time.perf_counter() - t0
+        bt: dict = {}
+        with trace.timed("build.graph", bt, "graph",
+                         nodes=args.nodes):
+            g = road_like(args.nodes, seed=args.seed)
+        print(f"graph: n={g.n} m={g.m} ({bt['graph']:.1f}s)")
+        with trace.timed("build.host_index", bt, "host_index"):
+            ix = build_index(g)
+        print(f"index: {ix.timings} ({bt['host_index']:.1f}s)")
+        with trace.timed("build.device_index", bt, "device_index"):
+            dix = build_device_index(
+                ix, hierarchy_levels=args.hierarchy_levels)
+        build_s = bt["device_index"]
         print(f"device index: frag_apsp={dix.frag_apsp.shape} "
               f"d_super={dix.d_super.shape} ({build_s:.1f}s)")
     g = engine.g if engine is not None else g
@@ -662,6 +762,7 @@ def main() -> None:
               prev_key="us_per_path")
     if args.update_batches:
         _emit(args, _update_loop(engine, args, build_s), "refresh")
+    _write_trace(args)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,8 @@ import threading
 from collections import OrderedDict
 from dataclasses import dataclass
 
+from ..obs.metrics import MetricsRegistry
+
 
 @dataclass
 class CacheStats:
@@ -59,17 +61,23 @@ class EpochCache:
     e is simply unreachable from a flush pinned at e+1.
     """
 
-    def __init__(self, capacity: int = 65536):
+    def __init__(self, capacity: int = 65536,
+                 registry: MetricsRegistry | None = None):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive: {capacity}")
         self.capacity = capacity
         self._od: OrderedDict[tuple[int, int], tuple[int, float]] = \
             OrderedDict()
         self._lock = threading.Lock()
-        self._hits = 0
-        self._misses = 0
-        self._stale = 0
-        self._evictions = 0
+        # hit/miss/stale/evict tallies are registry counters (DESIGN.md
+        # §16) so exporters see them live; mutated only under
+        # self._lock, so stats() snapshots stay mutually consistent
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._hits = self.registry.counter("serve.cache.hits")
+        self._misses = self.registry.counter("serve.cache.misses")
+        self._stale = self.registry.counter("serve.cache.stale")
+        self._evictions = self.registry.counter("serve.cache.evictions")
 
     def get(self, s: int, t: int, epoch: int) -> float | None:
         """Value for ``(s, t)`` computed on ``epoch``, else None.  An
@@ -78,14 +86,14 @@ class EpochCache:
         with self._lock:
             ent = self._od.get(key)
             if ent is None:
-                self._misses += 1
+                self._misses.inc()
                 return None
             if ent[0] != epoch:
-                self._stale += 1
-                self._misses += 1
+                self._stale.inc()
+                self._misses.inc()
                 del self._od[key]
                 return None
-            self._hits += 1
+            self._hits.inc()
             self._od.move_to_end(key)
             return ent[1]
 
@@ -105,7 +113,7 @@ class EpochCache:
             self._od.move_to_end(key)
             if len(self._od) > self.capacity:
                 self._od.popitem(last=False)
-                self._evictions += 1
+                self._evictions.inc()
 
     def __len__(self) -> int:
         # snapshot under the lock: len(dict) mid-rehash from a
@@ -115,8 +123,9 @@ class EpochCache:
 
     def stats(self) -> CacheStats:
         with self._lock:
-            return CacheStats(hits=self._hits, misses=self._misses,
-                              stale=self._stale,
-                              evictions=self._evictions,
+            return CacheStats(hits=int(self._hits.value),
+                              misses=int(self._misses.value),
+                              stale=int(self._stale.value),
+                              evictions=int(self._evictions.value),
                               size=len(self._od),
                               capacity=self.capacity)

@@ -44,6 +44,12 @@ class LoadReport:
     max_serving_gap_ms: float = 0.0
     stale_responses: int = 0
     max_staleness_batches: int = 0
+    # provenance of the reported percentiles (DESIGN.md §16): "histogram"
+    # means p50/p95/p99 come from the runtime's streaming latency
+    # histogram scoped to this phase (n = latency_n observations);
+    # "sampled" is the pre-§16 sorted-request-list fallback
+    latency_source: str = "histogram"
+    latency_n: int = 0
     runtime_stats: dict = field(default_factory=dict)
     requests: list = field(default_factory=list, repr=False)
 
@@ -57,6 +63,8 @@ class LoadReport:
             "p99_ms": self.p99_ms,
             "mean_ms": self.mean_ms,
             "max_ms": self.max_ms,
+            "latency_source": self.latency_source,
+            "latency_n": self.latency_n,
             "max_serving_gap_ms": self.max_serving_gap_ms,
             "stale_responses": self.stale_responses,
             "max_staleness_batches": self.max_staleness_batches,
@@ -64,13 +72,32 @@ class LoadReport:
         }
 
 
-def _percentiles(lat_ms: np.ndarray) -> dict:
+def _percentiles(lat_ms: np.ndarray, hist_window=None) -> dict:
+    """Latency fields for the report.  p50/p95/p99 come from the
+    runtime's streaming histogram scoped to this phase (``hist_window``,
+    a ``HistogramSnapshot``) when it saw every request — the same
+    bounded-memory numbers a production scraper reads, within one 5%
+    bucket of exact.  mean/max stay exact from the request list, and
+    the list is also the fallback when no histogram is available."""
+    if hist_window is not None and hist_window.count == len(lat_ms) \
+            and hist_window.count > 0:
+        return {
+            "p50_ms": round(hist_window.percentile(50) * 1e3, 3),
+            "p95_ms": round(hist_window.percentile(95) * 1e3, 3),
+            "p99_ms": round(hist_window.percentile(99) * 1e3, 3),
+            "mean_ms": round(float(lat_ms.mean()), 3),
+            "max_ms": round(float(lat_ms.max()), 3),
+            "latency_source": "histogram",
+            "latency_n": hist_window.count,
+        }
     return {
         "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
         "p95_ms": round(float(np.percentile(lat_ms, 95)), 3),
         "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
         "mean_ms": round(float(lat_ms.mean()), 3),
         "max_ms": round(float(lat_ms.max()), 3),
+        "latency_source": "sampled",
+        "latency_n": int(len(lat_ms)),
     }
 
 
@@ -89,6 +116,10 @@ def run_load(runtime: ServingRuntime, pairs: np.ndarray, *,
     n = len(pairs)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
     reqs: list[Request] = []
+    # scope the runtime's streaming latency histogram to this phase:
+    # freeze before the first submit, diff after the last response
+    hist = getattr(runtime, "latency_histogram", lambda: None)()
+    h0 = hist.freeze() if hist is not None else None
     t0 = time.perf_counter()
     for i in range(n):
         delay = arrivals[i] - (time.perf_counter() - t0)
@@ -133,7 +164,8 @@ def run_load(runtime: ServingRuntime, pairs: np.ndarray, *,
         max_staleness_batches=max(
             (s.lag_batches for s in stale), default=0),
         runtime_stats=runtime.stats(), requests=reqs,
-        **_percentiles(lat_ms))
+        **_percentiles(lat_ms,
+                       hist.since(h0) if hist is not None else None))
 
 
 def run_load_with_refresh(runtime: ServingRuntime, pairs: np.ndarray,

@@ -41,6 +41,9 @@ import numpy as np
 from ..core.dist_engine import EpochedEngine
 from ..core.graph import traffic_updates
 from ..core.refresh_pipeline import RefreshPipeline
+from ..obs import trace
+from ..obs.export import SlowQueryLog
+from ..obs.metrics import MetricsRegistry
 from .cache import EpochCache
 from .scheduler import MicroBatcher, Request
 
@@ -58,29 +61,46 @@ class ServingRuntime:
 
     def __init__(self, engine: EpochedEngine, *, max_batch: int = 256,
                  deadline_s: float = 0.002, cache_size: int = 65536,
-                 auto: bool = True):
+                 auto: bool = True,
+                 registry: MetricsRegistry | None = None,
+                 slow_log_n: int = 16):
         if max_batch <= 0:
             # bucket_sizes would silently floor this to 16; reject it
             # instead (cache_size=0 is the disable idiom, not this)
             raise ValueError(f"max_batch must be positive: {max_batch}")
         self.engine = engine
         self.max_batch = engine.planner.bucket_sizes(max_batch)[-1]
-        self.cache = EpochCache(cache_size) if cache_size else None
+        # one registry per runtime (DESIGN.md §16): the cache, batcher,
+        # tier ladder, and traffic counters all record into it, and the
+        # exporters (--metrics-out/--metrics-port) read it live
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.slow_log = SlowQueryLog(slow_log_n)
+        self.cache = EpochCache(cache_size, registry=self.registry) \
+            if cache_size else None
         # per-fragment serving counters (both endpoints, represented
         # nodes routed through their agent): the traffic weights the
         # refresh pipeline prioritizes dirty groups by
-        self._traffic = np.zeros(engine.plan.k, np.int64)
-        self._traffic_lock = threading.Lock()
+        self._traffic = self.registry.array_counter(
+            "serve.frag_traffic", engine.plan.k)
         # per-tier accounting (DESIGN.md §15): every cache miss is
         # resolved by exactly one of the label tier (hub merge) or the
         # planner; the wall-clock split makes the label-vs-planner
         # latency comparison a measured serve_live field, not a claim
-        self._tier_lock = threading.Lock()
-        self._tiers = {"label_hits": 0, "planner_dispatches": 0,
-                       "label_s": 0.0, "planner_s": 0.0}
+        self._m_label_hits = self.registry.counter(
+            "serve.tier.label.hits")
+        self._m_planner_hits = self.registry.counter(
+            "serve.tier.planner.dispatches")
+        self._m_label_s = self.registry.counter(
+            "serve.tier.label.seconds")
+        self._m_planner_s = self.registry.counter(
+            "serve.tier.planner.seconds")
+        self._m_epoch = self.registry.gauge("serve.epoch")
         self.batcher = MicroBatcher(self._serve_batch,
                                     max_batch=self.max_batch,
-                                    deadline_s=deadline_s, auto=auto)
+                                    deadline_s=deadline_s, auto=auto,
+                                    registry=self.registry,
+                                    slow_log=self.slow_log)
 
     def warmup(self) -> None:
         """Compile every planner sub-program at every bucket size a
@@ -107,8 +127,13 @@ class ServingRuntime:
 
     def frag_traffic(self) -> np.ndarray:
         """Snapshot of the per-fragment serving counters (a copy)."""
-        with self._traffic_lock:
-            return self._traffic.copy()
+        return self._traffic.snapshot()
+
+    def latency_histogram(self):
+        """The request-latency histogram (seconds; observed per
+        resolved request on the open-loop ``t_sched`` basis) — the
+        load harness derives its reported percentiles from this."""
+        return self.registry.histogram("serve.request.latency_s")
 
     def _count_traffic(self, batch) -> None:
         plan = self.engine.plan
@@ -119,25 +144,27 @@ class ServingRuntime:
         frag = np.where(frag >= 0, frag,
                         plan.frag_of[plan.agent_of[nodes]])
         counts = np.bincount(frag[frag >= 0], minlength=plan.k)
-        with self._traffic_lock:
-            self._traffic += counts
+        self._traffic.add(counts)
 
     # -- the flush body (runs on the flusher thread in auto mode) ------
     def _serve_batch(self, batch) -> None:
         epoch, dix, _g, stale = self.engine.snapshot()
+        self._m_epoch.set(epoch)
         self._count_traffic(batch)
         misses = []
-        for req in batch:
-            hit = None if self.cache is None else \
-                self.cache.get(req.s, req.t, epoch)
-            if hit is not None:
-                req.dist = hit
-                req.epoch = epoch
-                req.staleness = stale
-                req.cached = True
-                req.tier = "cache"
-            else:
-                misses.append(req)
+        with trace.span("serve.cache_lookup", epoch=epoch,
+                        size=len(batch)):
+            for req in batch:
+                hit = None if self.cache is None else \
+                    self.cache.get(req.s, req.t, epoch)
+                if hit is not None:
+                    req.dist = hit
+                    req.epoch = epoch
+                    req.staleness = stale
+                    req.cached = True
+                    req.tier = "cache"
+                else:
+                    misses.append(req)
         if misses:
             planner = self.engine.planner
             s = np.fromiter((r.s for r in misses), np.int32,
@@ -151,17 +178,24 @@ class ServingRuntime:
             out = np.empty(len(misses), np.float64)
             label_n = planner_n = 0
             label_s = planner_s = 0.0
+            lag = stale.lag_batches if stale is not None else 0
             if hub.any():
                 t0 = time.perf_counter()
                 out[hub] = planner.query_hub(s[hub], t[hub], dix=dix)
-                label_s = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                label_s = t1 - t0
                 label_n = int(hub.sum())
+                trace.event("serve.tier.label", t0, t1, n=label_n,
+                            epoch=epoch, staleness=lag)
             rest = ~hub
             if rest.any():
                 t0 = time.perf_counter()
                 out[rest] = planner.query(s[rest], t[rest], dix=dix)
-                planner_s = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                planner_s = t1 - t0
                 planner_n = int(rest.sum())
+                trace.event("serve.tier.planner", t0, t1, n=planner_n,
+                            epoch=epoch, staleness=lag)
             for req, d, h in zip(misses, out, hub):
                 req.dist = float(d)
                 req.epoch = epoch
@@ -169,11 +203,12 @@ class ServingRuntime:
                 req.tier = "label" if h else "planner"
                 if self.cache is not None:
                     self.cache.put(req.s, req.t, epoch, req.dist)
-            with self._tier_lock:
-                self._tiers["label_hits"] += label_n
-                self._tiers["planner_dispatches"] += planner_n
-                self._tiers["label_s"] += label_s
-                self._tiers["planner_s"] += planner_s
+            if label_n:
+                self._m_label_hits.inc(label_n)
+                self._m_label_s.inc(label_s)
+            if planner_n:
+                self._m_planner_hits.inc(planner_n)
+                self._m_planner_s.inc(planner_s)
 
     def flush(self) -> int:
         return self.batcher.flush()
@@ -187,17 +222,17 @@ class ServingRuntime:
         overrides it otherwise); ``label_us_per_query`` vs
         ``planner_us_per_query`` is the measured hot-tier speedup."""
         out = self.batcher.occupancy()
-        with self._tier_lock:
-            tiers = dict(self._tiers)
+        label_hits = int(self._m_label_hits.value)
+        planner_hits = int(self._m_planner_hits.value)
         out["cache_hits"] = 0
-        out["label_hits"] = tiers["label_hits"]
-        out["planner_dispatches"] = tiers["planner_dispatches"]
+        out["label_hits"] = label_hits
+        out["planner_dispatches"] = planner_hits
         out["label_us_per_query"] = round(
-            1e6 * tiers["label_s"] / tiers["label_hits"], 3) \
-            if tiers["label_hits"] else 0.0
+            1e6 * self._m_label_s.value / label_hits, 3) \
+            if label_hits else 0.0
         out["planner_us_per_query"] = round(
-            1e6 * tiers["planner_s"] / tiers["planner_dispatches"], 3) \
-            if tiers["planner_dispatches"] else 0.0
+            1e6 * self._m_planner_s.value / planner_hits, 3) \
+            if planner_hits else 0.0
         if self.cache is not None:
             out.update(self.cache.stats().as_record())
         return out
@@ -290,25 +325,31 @@ class RefreshDriver:
                 u, v, w = traffic_updates(self.engine.g, self.frac,
                                           seed=self.seed + 101 + r)
                 t0 = time.perf_counter()
-                if self.pipeline is not None:
-                    # staged: one epoch per work item, busiest groups
-                    # first — the foreground serves between items
-                    self.pipeline.submit(u, v, w)
-                    self.pipeline.plan()
-                    items = 0
-                    while self.pipeline.step() is not None:
-                        items += 1
-                        self._record_epoch()
-                    self.items_per_round.append(items)
-                else:
-                    self.engine.apply_updates(u, v, w)
-                    self._record_epoch()
-                    self.items_per_round.append(1)
+                span = trace.span("refresh.round", round=r,
+                                  pipelined=self.pipeline is not None)
+                with span:
+                    self._one_round(u, v, w)
                 self.refresh_s.append(time.perf_counter() - t0)
                 if self.interval_s:
                     time.sleep(self.interval_s)
         except BaseException as exc:   # surfaced by join()
             self.error = exc
+
+    def _one_round(self, u, v, w) -> None:
+        if self.pipeline is not None:
+            # staged: one epoch per work item, busiest groups
+            # first — the foreground serves between items
+            self.pipeline.submit(u, v, w)
+            self.pipeline.plan()
+            items = 0
+            while self.pipeline.step() is not None:
+                items += 1
+                self._record_epoch()
+            self.items_per_round.append(items)
+        else:
+            self.engine.apply_updates(u, v, w)
+            self._record_epoch()
+            self.items_per_round.append(1)
 
     def as_record(self) -> dict:
         return {

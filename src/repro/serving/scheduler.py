@@ -29,6 +29,8 @@ import time
 from typing import Callable, Sequence
 
 from ..core.dist_engine import pad_pow2
+from ..obs import trace
+from ..obs.metrics import MetricsRegistry
 
 
 class Request:
@@ -112,7 +114,8 @@ class MicroBatcher:
 
     def __init__(self, serve_batch: Callable[[Sequence[Request]], None],
                  *, max_batch: int = 256, deadline_s: float = 0.002,
-                 auto: bool = True):
+                 auto: bool = True, registry: MetricsRegistry | None = None,
+                 slow_log=None):
         if max_batch <= 0:
             raise ValueError(f"max_batch must be positive: {max_batch}")
         self._serve_batch = serve_batch
@@ -122,12 +125,21 @@ class MicroBatcher:
         self._cond = threading.Condition()
         self._closed = False
         self.error: BaseException | None = None
-        # per-flush accounting, O(1) space: pow2-bucket histogram of
-        # flush sizes plus running count/total
-        self._occ_hist: dict[int, int] = {}
-        self.n_flushes = 0
-        self.flushed_requests = 0
-        self.flush_reasons = {"full": 0, "deadline": 0, "manual": 0}
+        # per-flush accounting lives in registry metrics (DESIGN.md
+        # §16), O(1) space: pow2-bucket labeled counter of flush sizes
+        # plus flush-reason counters and the request-latency histogram.
+        # All flush counters mutate only in _take (under self._cond),
+        # so occupancy() snapshots them under the same lock and never
+        # reports torn mid-flush state.
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._m_occ = self.registry.labeled("serve.batch.occupancy")
+        self._m_reasons = self.registry.labeled("serve.batch.flushes")
+        self._m_requests = self.registry.counter(
+            "serve.batch.flushed_requests")
+        self._m_latency = self.registry.histogram(
+            "serve.request.latency_s")
+        self._slow_log = slow_log
         self._thread: threading.Thread | None = None
         if auto:
             self._thread = threading.Thread(target=self._run,
@@ -163,12 +175,25 @@ class MicroBatcher:
         batch = self._pending[:self.max_batch]
         self._pending = self._pending[self.max_batch:]
         if batch:
-            b = pad_pow2(len(batch))
-            self._occ_hist[b] = self._occ_hist.get(b, 0) + 1
-            self.n_flushes += 1
-            self.flushed_requests += len(batch)
-            self.flush_reasons[reason] += 1
+            self._m_occ.inc(pad_pow2(len(batch)))
+            self._m_requests.inc(len(batch))
+            self._m_reasons.inc(reason)
         return batch
+
+    # Backwards-compatible counter views (the pre-§16 attribute API),
+    # all reading the registry metrics _take maintains.
+    @property
+    def n_flushes(self) -> int:
+        return int(self._m_reasons.total)
+
+    @property
+    def flushed_requests(self) -> int:
+        return int(self._m_requests.value)
+
+    @property
+    def flush_reasons(self) -> dict:
+        return {"full": 0, "deadline": 0, "manual": 0,
+                **self._m_reasons.snapshot()}
 
     def _fail(self, batch: list[Request], exc: BaseException) -> None:
         """Resolve ``batch`` (and anything still pending) with ``exc``
@@ -200,8 +225,11 @@ class MicroBatcher:
         """
         if not batch:
             return
+        t_flush = time.perf_counter()
         try:
-            self._serve_batch(batch)
+            with trace.span("serve.flush", size=len(batch),
+                            bucket=pad_pow2(len(batch))):
+                self._serve_batch(batch)
             for req in batch:
                 if req.dist is None or req.epoch is None:
                     raise RuntimeError(
@@ -218,6 +246,36 @@ class MicroBatcher:
         for req in batch:
             req.t_done = now
             req._done.set()
+        self._observe(batch, t_flush, now)
+
+    def _observe(self, batch: list[Request], t_flush: float,
+                 now: float) -> None:
+        """Post-resolution accounting: latency histogram, slow-query
+        log, and (tracing on) one lifecycle event per request covering
+        scheduled-arrival -> respond, tagged with the tier/epoch/
+        staleness the flush stamped."""
+        tr = trace.get_tracer()
+        emit = tr.enabled
+        for req in batch:
+            lat = now - req.t_sched
+            self._m_latency.observe(lat)
+            lag = req.staleness.lag_batches \
+                if req.staleness is not None else 0
+            if self._slow_log is not None:
+                self._slow_log.offer(lat, {
+                    "s": req.s, "t": req.t, "tier": req.tier,
+                    "epoch": req.epoch, "staleness_batches": lag,
+                    "batch_wait_ms": round(
+                        (t_flush - req.t_submit) * 1e3, 3),
+                    "flush_ms": round((now - t_flush) * 1e3, 3),
+                    "batch_size": len(batch),
+                })
+            if emit:
+                tr.event("serve.request", req.t_sched, now,
+                         tier=req.tier, epoch=req.epoch,
+                         staleness=lag, bucket=pad_pow2(len(batch)),
+                         wait_ms=round(
+                             (t_flush - req.t_submit) * 1e3, 3))
 
     def flush(self) -> int:
         """Synchronously flush one batch of whatever is pending (the
@@ -280,20 +338,21 @@ class MicroBatcher:
         Bucketed by the planner's pow2 padding rule (floor 16) applied
         to the *whole* flush — an upper bound on executable shape,
         since the planner additionally splits each flush into per-case
-        buckets that may each pad smaller.  All counters snapshot under
-        the lock: the flusher thread mutates them in ``_take``, so
-        off-lock reads could report torn mid-flush state (e.g. a bumped
-        ``n_flushes`` next to a not-yet-bumped histogram)."""
+        buckets that may each pad smaller.  The registry metrics are
+        mutated only in ``_take`` under ``self._cond``, so snapshotting
+        them here under the same lock can never report torn mid-flush
+        state (e.g. a bumped flush count next to a not-yet-bumped
+        histogram) — the concurrency test asserts exactly this."""
         with self._cond:
-            n_flushes = self.n_flushes
-            flushed = self.flushed_requests
-            hist = dict(self._occ_hist)
-            reasons = dict(self.flush_reasons)
+            hist = self._m_occ.snapshot()
+            reasons = self.flush_reasons
+            flushed = int(self._m_requests.value)
+        n_flushes = sum(reasons.values())
         mean = (flushed / n_flushes / self.max_batch) if n_flushes \
             else 0.0
         return {
             "flushes": n_flushes,
             "mean_occupancy": round(mean, 4),
-            "occupancy_hist": {str(k): hist[k] for k in sorted(hist)},
+            "occupancy_hist": hist,
             **{f"flush_{k}": v for k, v in reasons.items()},
         }

@@ -128,6 +128,26 @@ def test_fresh_serve_live_requires_tier_fields():
             bench_gate.require_tier_fields(broken)
 
 
+def test_fresh_serve_live_requires_hist_fields():
+    """A fresh serve_live record must carry histogram-derived latency
+    percentiles (DESIGN.md §16): all of HIST_FIELDS present AND
+    latency_source == 'histogram'.  Missing fields or a sampled-path
+    fallback fail loudly; committed pre-§16 history is grandfathered
+    (require_hist_fields runs on fresh records only)."""
+    full = {"p50_ms": 1.0, "p95_ms": 2.0, "p99_ms": 3.0,
+            "latency_source": "histogram", "latency_n": 100}
+    bench_gate.require_hist_fields(full)            # no raise
+    for f in bench_gate.HIST_FIELDS:
+        broken = dict(full)
+        del broken[f]
+        with pytest.raises(SystemExit, match="histogram"):
+            bench_gate.require_hist_fields(broken)
+    # present-but-degraded: the report fell back to the sampled path
+    with pytest.raises(SystemExit, match="sampled"):
+        bench_gate.require_hist_fields(
+            {**full, "latency_source": "sampled"})
+
+
 def test_committed_history_is_gate_clean():
     """The repo's own BENCH_serve.json must stay loud-failure-free for
     every config the CI gates query."""

@@ -74,8 +74,13 @@ def test_update_loop_record_shape():
         "initial_build_s", "post_refresh_mismatches", "scratch_match",
         "serve_batch_ms", "n_updates", "dirty_frags",
         "dirty_frag_frac", "dirty_pieces", "decrease_only",
+        "stage_timings",
     }
     assert want_keys <= set(rec)
+    # the per-stage refresh breakdown rides on every record
+    # (DESIGN.md §16) — full dict, not just the total
+    assert {"classify", "frag_fw", "super_fw", "hub", "pieces"} \
+        <= set(rec["stage_timings"])
     assert rec["section"] == "refresh"
     assert rec["graph"] == "road300"
     assert rec["epoch"] == 1

@@ -268,6 +268,15 @@ def test_refresh_stats_shape():
     assert 0 < stats.n_dirty_frags <= stats.n_frags
     assert stats.dirty_frag_frac <= 1.0
     assert stats.timings["total"] > 0
+    # as_record carries the full per-stage breakdown (DESIGN.md §16):
+    # every stage refresh_index timed is in the dict, totals excluded
+    rec = stats.as_record()
+    assert {"classify", "frag_fw", "super_fw", "hub", "pieces"} \
+        <= set(rec["stage_timings"])
+    assert "total" not in rec["stage_timings"]
+    assert all(v >= 0 for v in rec["stage_timings"].values())
+    assert sum(rec["stage_timings"].values()) \
+        <= stats.timings["total"] + 1e-3
     # untouched fields are shared by reference across epochs (immutable
     # double-buffering, not copies)
     for f in ("agent_of", "frag_of", "pos_in_frag", "piece_gid",
