@@ -340,15 +340,21 @@ def exp10_scale(out: List[str]) -> None:
     from repro.data.roads import road_preset
 
     names = os.environ.get("EXP10_GRAPHS", "road4000,road64k")
+    workers = int(os.environ.get("EXP10_BUILD_WORKERS", "1"))
     out.append("exp10,graph,n,S,levels,nsf,S2,overlay_bytes,"
                "overlay_dense_bytes,build_s,device_s,refresh_s,"
                "us_per_query,oracle_bad")
+    out.append("host_build,graph,build_workers,wall_s")
     for name in names.split(","):
         preset = road_preset(name.strip())
         g = preset.make()
         t0 = time.perf_counter()
-        ix = build_index(g)
+        ix = build_index(g, build_workers=workers)
         build_s = time.perf_counter() - t0
+        # the staged-pipeline wall record the host-build bench gate
+        # reads (DESIGN.md §17), emitted here so scale graphs get a
+        # host_build history without a second serve-driver build
+        out.append(f"host_build,{name},{workers},{build_s:.4f}")
         t0 = time.perf_counter()
         eng = EpochedEngine(g, ix=ix,
                             hierarchy_levels=preset.hierarchy)

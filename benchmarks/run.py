@@ -78,6 +78,13 @@ def _perf_records(rows: list[str]) -> list[dict]:
                 "us_per_query": float(parts[12]),
                 "oracle_bad": int(parts[13]),
             })
+        elif parts[0] == "host_build" and parts[1] != "graph":
+            records.append({
+                "section": "host_build",
+                "graph": parts[1],
+                "build_workers": int(parts[2]),
+                "wall_s": float(parts[3]),
+            })
         elif parts[0] == "exp7" and parts[1] != "graph":
             records.append({
                 "section": "exp7_refresh",

@@ -27,6 +27,12 @@ foreground serving gap (``max_serving_gap_ms``) must stay within
 stop-the-world detector, failing long before wall time moves if a
 change re-serializes refresh against the serving flushes.
 
+``--host-build`` gates the staged host preprocessing pipeline
+(``section: "host_build"``, emitted by every planner-mode serve run)
+on wall seconds, keyed (section, graph) — same 2.5x median rule.  It
+catches a host build stage quietly regressing to a Python-loop
+implementation long before any serve-path number moves.
+
 Every fresh ``serve_live`` record must additionally carry the per-tier
 serving fields (``cache_hits`` / ``label_hits`` /
 ``planner_dispatches`` plus the per-tier latencies, DESIGN.md §15); a
@@ -232,6 +238,18 @@ def run_refresh(args) -> dict:
     return rec
 
 
+def run_host_build(args) -> dict:
+    """Run a minimal serve smoke and return its fresh ``host_build``
+    record — the staged host preprocessing pipeline's wall seconds
+    (DESIGN.md §17), emitted by every planner-mode serve run."""
+    return _run_serve_cmd(
+        args,
+        ["--batches", "1", "--batch-size", "256",
+         "--build-workers", str(args.build_workers)],
+        {"section": "host_build",
+         "build_workers": args.build_workers})
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--history", default=os.path.join(
@@ -272,6 +290,15 @@ def main() -> int:
     live.add_argument("--live-update-batches", type=int, default=1,
                       help="concurrent refresh rounds during the "
                            "live smoke")
+    hb = ap.add_argument_group("host-build gate (--host-build)")
+    hb.add_argument("--host-build", action="store_true",
+                    help="gate the staged host preprocessing pipeline "
+                         "(section host_build) on wall seconds, keyed "
+                         "(section, graph) — same median rule; catches "
+                         "a host stage regressing to a Python loop "
+                         "long before the serve numbers move")
+    hb.add_argument("--build-workers", type=int, default=2,
+                    help="cover workers for the host-build smoke")
     live.add_argument("--refresh", action="store_true",
                       help="gate the concurrent-refresh path (section "
                            "serve_refresh) instead: refresh wall time "
@@ -283,7 +310,15 @@ def main() -> int:
     from repro.perflog import read_records
 
     ensure_distinct_files(args.fresh, args.history)
-    if args.refresh:
+    if args.host_build:
+        fresh = run_host_build(args)
+        checks = [("wall_s", "s host build")]
+        # keyed (section, graph) only: the serial-parity contract makes
+        # the worker count a non-identity knob — every worker setting
+        # must stay within the factor of the committed wall time
+        match = {"section": "host_build", "graph": f"road{args.nodes}"}
+        desc = f"road{args.nodes}/host_build"
+    elif args.refresh:
         fresh = run_refresh(args)
         # two metrics gate together: the refresh must not get slower
         # AND the foreground must keep serving while it runs (a

@@ -56,6 +56,15 @@ run_stage "live-traffic refresh smoke" \
     --batch-size 256 --validate 32 --update-batches 1 \
     --update-frac 0.02 --json ""
 
+# Staged host build (DESIGN.md §17): the worker-parallel cover build
+# must be array-equal to the serial build on every index table —
+# --check-build-parity rebuilds serially in-run and diffs, failing
+# loudly on the first diverging field.
+run_stage "host-build parity smoke (road4000, 2 workers)" \
+    python -m repro.launch.serve --nodes 4000 --batches 1 \
+    --batch-size 256 --validate 16 --build-workers 2 \
+    --check-build-parity --json ""
+
 # --metrics-out/--trace-out exercise the observability exporters
 # (DESIGN.md §16) end to end on every check run; CI uploads the
 # resulting snapshot + Chrome trace as workflow artifacts (ci.yml)

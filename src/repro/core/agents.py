@@ -102,17 +102,24 @@ def compute_dras(g: Graph, c: int = 2) -> DRAResult:
     # sketch node ids: cut-node c_v -> ('c', v); BCC regions get dict ids.
     cut_ids = np.nonzero(bcc.cut)[0]
     is_cut = bcc.cut
-    # region state (BCC sketch nodes, merged over time)
-    region_contents: Dict[int, set] = {}   # rid -> graph node set (incl. border cuts)
+    # region state (BCC sketch nodes, merged over time).  Contents are
+    # kept as lazy lists of member arrays with an exact size counter:
+    # regions adjacent to one cut node pairwise intersect in exactly
+    # that node (the sketch is a tree), so merged sizes follow by
+    # arithmetic and the arrays are unioned only once, for the leaf
+    # regions that survive into agent pieces — the peeling loop never
+    # pays an O(region) set union.
+    region_parts: Dict[int, List[np.ndarray]] = {}  # rid -> member arrays
+    region_size: Dict[int, int] = {}       # rid -> exact |contents|
     region_adj: Dict[int, set] = {}        # rid -> adjacent cut graph-node ids
     cut_adj: Dict[int, set] = {}           # cut graph-node id -> rids
     next_rid = 0
     for comp in bcc.bcc_nodes:
         rid = next_rid
         next_rid += 1
-        cs = set(comp.tolist())
-        region_contents[rid] = cs
-        borders = {int(v) for v in comp if is_cut[v]}
+        region_parts[rid] = [comp.astype(np.int32)]
+        region_size[rid] = int(comp.size)
+        borders = {int(v) for v in comp[is_cut[comp]]}
         region_adj[rid] = borders
         for v in borders:
             cut_adj.setdefault(v, set()).add(rid)
@@ -140,24 +147,25 @@ def compute_dras(g: Graph, c: int = 2) -> DRAResult:
         if len(nonleaf) == 0:
             # all-leaf cut node: keep v as a surviving agent candidate
             continue
-        alpha = sum(len(region_contents[r]) for r in X) - len(X) + 1
+        alpha = sum(region_size[r] for r in X) - len(X) + 1
         if alpha > threshold:
             continue  # v survives as a potential maximal agent
         # merge X and v into a new region replacing the non-leaf one
         y0 = nonleaf[0]
-        merged = set()
+        merged: List[np.ndarray] = []
         for r in X:
-            merged |= region_contents[r]
-        merged.add(v)
+            merged.extend(region_parts[r])
+        merged.append(np.array([v], dtype=np.int32))
         new_borders = (region_adj[y0] - {v})
         rid = next_rid
         next_rid += 1
-        region_contents[rid] = merged
+        region_parts[rid] = merged
+        region_size[rid] = alpha
         region_adj[rid] = set(new_borders)
         for r in X:
             for w in region_adj[r]:
                 cut_adj[w].discard(r)
-            del region_contents[r], region_adj[r]
+            del region_parts[r], region_adj[r], region_size[r]
         for w in new_borders:
             cut_adj[w].add(rid)
         alive_cut.discard(v)
@@ -174,35 +182,37 @@ def compute_dras(g: Graph, c: int = 2) -> DRAResult:
     dist_to_agent = np.zeros(n, dtype=np.float64)
     piece_of = -np.ones(n, dtype=np.int32)
     for v in sorted(alive_cut):
-        leaf_pieces = [r for r in cut_adj[v]
+        leaf_pieces = [r for r in sorted(cut_adj[v])
                        if len(region_adj[r]) == 1
-                       and len(region_contents[r]) <= threshold]
+                       and region_size[r] <= threshold]
         # piece must contain more than just {v, one other}?  No: any size
         # >= 2 region represents >= 1 non-agent node.
         pieces = []
-        rep_nodes: List[int] = []
-        ppiece: List[int] = []
-        for idx, r in enumerate(leaf_pieces):
-            nodes = np.array(sorted(region_contents[r]), dtype=np.int32)
+        rep_parts: List[np.ndarray] = []
+        pp_parts: List[np.ndarray] = []
+        for r in leaf_pieces:
+            # the one union a surviving leaf region ever pays
+            nodes = np.unique(np.concatenate(region_parts[r])).astype(
+                np.int32)
             if nodes.size <= 1:
                 continue
             pieces.append(nodes)
-            for x in region_contents[r]:
-                if x != v:
-                    rep_nodes.append(x)
-                    ppiece.append(len(pieces) - 1)
-        if not rep_nodes:
+            rep_r = nodes[nodes != v]
+            rep_parts.append(rep_r)
+            pp_parts.append(np.full(rep_r.size, len(pieces) - 1,
+                                    dtype=np.int32))
+        if not rep_parts:
             continue
-        rep = np.array(rep_nodes, dtype=np.int32)
+        rep = np.concatenate(rep_parts)
+        ppiece = np.concatenate(pp_parts)
         allp = np.unique(np.concatenate(pieces))
         dmap = _sssp_within(g, v, allp)
         d = np.array([dmap.get(int(x), np.inf) for x in rep])
         agents.append(AgentInfo(agent=int(v), pieces=pieces, nodes=rep,
-                                dist_to_agent=d,
-                                piece_of=np.array(ppiece, dtype=np.int32)))
+                                dist_to_agent=d, piece_of=ppiece))
         agent_of[rep] = v
         dist_to_agent[rep] = d
-        piece_of[rep] = np.array(ppiece, dtype=np.int32)
+        piece_of[rep] = ppiece
     return DRAResult(agents=agents, agent_of=agent_of,
                      dist_to_agent=dist_to_agent, piece_of=piece_of,
                      threshold=threshold)

@@ -272,46 +272,42 @@ def make_build_plan(ix: DislandIndex) -> BuildPlan:
         bvalid[fi, :nb] = True
         bnd_super[fi, :nb] = super_id_of[f.nodes[f.boundary_local]]
 
-    # ---- SUPER edge slots ----------------------------------------------
+    # ---- SUPER edge slots (vectorized; slot order is E_B in shrink
+    # edge order, then per-fragment cliques row-major — the exact
+    # layout the per-slot Python loops this replaces produced) --------
     shrink = ix.shrink
     lab = ix.partition.labels
-    sup_src: List[int] = []
-    sup_dst: List[int] = []
-    sup_w: List[float] = []
-    sup_fi: List[int] = []
-    sup_pu: List[int] = []
-    sup_pv: List[int] = []
-    eb_keys: List[int] = []
-    eb_slots: List[int] = []
     # E_B: cross-fragment shrink edges (both endpoints boundary by
     # construction); same-fragment boundary-boundary edges are subsumed
     # by that fragment's clique, so every edge has ONE owning slot kind
     cross = lab[shrink.edge_u] != lab[shrink.edge_v]
-    for u, v, w in zip(shrink.edge_u[cross], shrink.edge_v[cross],
-                       shrink.edge_w[cross]):
-        ou, ov = int(ix.shrink_ids[u]), int(ix.shrink_ids[v])
-        eb_keys.append(min(ou, ov) * n + max(ou, ov))
-        eb_slots.append(len(sup_src))
-        sup_src.append(int(super_id_of[ou]))
-        sup_dst.append(int(super_id_of[ov]))
-        sup_w.append(float(w))
-        sup_fi.append(-1)
-        sup_pu.append(-1)
-        sup_pv.append(-1)
+    ou = ix.shrink_ids[shrink.edge_u[cross]].astype(np.int64)
+    ov = ix.shrink_ids[shrink.edge_v[cross]].astype(np.int64)
+    ek = np.minimum(ou, ov) * n + np.maximum(ou, ov)
+    es = np.arange(ou.size, dtype=np.int64)
+    src_parts = [super_id_of[ou].astype(np.int32)]
+    dst_parts = [super_id_of[ov].astype(np.int32)]
+    w_parts = [shrink.edge_w[cross].astype(np.float32)]
+    fi_parts = [np.full(ou.size, -1, dtype=np.int32)]
+    pu_parts = [np.full(ou.size, -1, dtype=np.int32)]
+    pv_parts = [np.full(ou.size, -1, dtype=np.int32)]
     # per-fragment boundary cliques (paper §V-A Upsilon weights, derived)
     for fi, f in enumerate(ix.fragments):
         bl = f.boundary_local
         ids = super_id_of[f.nodes[bl]]
-        for i in range(bl.size):
-            for j in range(i + 1, bl.size):
-                sup_src.append(int(ids[i]))
-                sup_dst.append(int(ids[j]))
-                sup_w.append(float("inf"))   # filled by super_weights
-                sup_fi.append(fi)
-                sup_pu.append(int(bl[i]))
-                sup_pv.append(int(bl[j]))
-    ek = np.asarray(eb_keys, dtype=np.int64)
-    es = np.asarray(eb_slots, dtype=np.int64)
+        ii, jj = np.triu_indices(bl.size, k=1)
+        src_parts.append(ids[ii].astype(np.int32))
+        dst_parts.append(ids[jj].astype(np.int32))
+        w_parts.append(np.full(ii.size, INF, dtype=np.float32))
+        fi_parts.append(np.full(ii.size, fi, dtype=np.int32))
+        pu_parts.append(bl[ii].astype(np.int32))
+        pv_parts.append(bl[jj].astype(np.int32))
+    sup_src = np.concatenate(src_parts)
+    sup_dst = np.concatenate(dst_parts)
+    sup_w = np.concatenate(w_parts)
+    sup_fi = np.concatenate(fi_parts)
+    sup_pu = np.concatenate(pu_parts)
+    sup_pv = np.concatenate(pv_parts)
     order = np.argsort(ek)
 
     # ---- piece registry + per-node lookups ------------------------------
@@ -324,8 +320,7 @@ def make_build_plan(ix: DislandIndex) -> BuildPlan:
     for a in ix.dras.agents:
         for piece in a.pieces:
             cap = next(c for c in PIECE_BUCKETS if piece.size <= c)
-            ids = np.asarray(sorted(set(int(x) for x in piece)),
-                             dtype=np.int32)
+            ids = np.unique(np.asarray(piece, dtype=np.int32))
             gid = len(piece_members)
             piece_members.append(ids)
             piece_agent.append(int(a.agent))

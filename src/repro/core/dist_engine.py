@@ -45,7 +45,7 @@ from .device_engine import (DeviceIndex, RefreshStats,
                             serve_hub, serve_same_dra, serve_same_dra_w,
                             serve_step, warmup_refresh)
 from .paths import PathUnwinder
-from .supergraph import DislandIndex, build_index
+from .supergraph import DislandIndex, start_build
 
 
 # ---------------------------------------------------------------------------
@@ -354,12 +354,24 @@ class EpochedEngine:
                  warm_refresh: bool = True, paths: bool = False,
                  hierarchy_levels: int | str = "auto",
                  resident_mb: float | str = "auto",
-                 hub_nodes=None):
+                 hub_nodes=None, build_workers: int = 1):
         self.g = g
-        self.ix = ix if ix is not None else build_index(g, c=c, seed=seed)
+        # streaming handoff (DESIGN.md §17): the device build needs only
+        # the structural index (it never reads covers — make_build_plan
+        # regathers all overlay weights from frag_apsp), so it runs
+        # while the worker pool is still computing covers; finish()
+        # joins them before the engine is returned to the caller.
+        host_build = None
+        if ix is None:
+            host_build = start_build(g, c=c, seed=seed,
+                                     build_workers=build_workers)
+            ix = host_build.structural_index()
+        self.ix = ix
         self.dix, self.plan = build_device_index_with_plan(
             self.ix, force=force, hierarchy_levels=hierarchy_levels,
             resident_mb=resident_mb, hub_nodes=hub_nodes)
+        if host_build is not None:
+            host_build.finish()
         self.planner = QueryPlanner(self.dix, force=force, paths=paths)
         self.epoch = 0
         # one-tuple publish (epoch, dix, graph, staleness): snapshot()

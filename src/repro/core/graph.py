@@ -19,7 +19,8 @@ float-weight source here without revisiting it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from multiprocessing import shared_memory
+from typing import Iterable, List, Sequence, Tuple
 
 import numpy as np
 
@@ -94,13 +95,55 @@ class Graph:
     # ---- subgraphs ----------------------------------------------------
     def subgraph(self, nodes: Sequence[int]) -> tuple["Graph", np.ndarray]:
         """Induced subgraph G[nodes]; returns (graph, old_ids[new_id])."""
-        nodes = np.asarray(sorted(set(int(x) for x in nodes)), dtype=np.int32)
+        nodes = np.unique(np.asarray(nodes, dtype=np.int64)).astype(np.int32)
         remap = -np.ones(self.n, dtype=np.int32)
         remap[nodes] = np.arange(nodes.size, dtype=np.int32)
         mask = (remap[self.edge_u] >= 0) & (remap[self.edge_v] >= 0)
         g = Graph.from_edges(nodes.size, remap[self.edge_u[mask]],
                              remap[self.edge_v[mask]], self.edge_w[mask])
         return g, nodes
+
+    def extract_fragments(self, labels) -> List[Tuple["Graph", np.ndarray]]:
+        """Batched ``subgraph`` for a complete partition of the nodes.
+
+        ``labels[v]`` in [0, k) assigns every node to one fragment.
+        Returns ``[(graph_i, old_ids_i)]`` for i in [0, k), each equal to
+        ``self.subgraph(nonzero(labels == i))`` — one vectorized pass over
+        the edge list instead of k O(m) masks, which is what keeps host
+        fragment extraction linear when k ~ sqrt(n).  Equality holds
+        because ``from_edges`` canonicalizes (lexsort + dedupe), so edge
+        grouping order never leaks into the product.
+        """
+        labels = np.asarray(labels, dtype=np.int64)
+        if labels.size != self.n:
+            raise ValueError("labels must assign every node")
+        k = int(labels.max()) + 1 if labels.size else 0
+        if labels.size and labels.min() < 0:
+            raise ValueError("labels must be a complete partition (>= 0)")
+        # nodes per fragment, ascending within each (stable argsort)
+        order = np.argsort(labels, kind="stable")
+        counts = np.bincount(labels, minlength=k)
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        local = np.empty(self.n, dtype=np.int32)
+        local[order] = (np.arange(self.n, dtype=np.int64)
+                        - starts[labels[order]]).astype(np.int32)
+        # internal edges grouped by fragment
+        el = labels[self.edge_u]
+        internal = el == labels[self.edge_v]
+        eu, ev = self.edge_u[internal], self.edge_v[internal]
+        ew, el = self.edge_w[internal], el[internal]
+        eorder = np.argsort(el, kind="stable")
+        eu, ev, ew = eu[eorder], ev[eorder], ew[eorder]
+        ecounts = np.bincount(el, minlength=k)
+        estarts = np.concatenate([[0], np.cumsum(ecounts)])
+        out: List[Tuple[Graph, np.ndarray]] = []
+        for i in range(k):
+            nodes = order[starts[i]:starts[i + 1]].astype(np.int32)
+            es, ee = estarts[i], estarts[i + 1]
+            fg = Graph.from_edges(nodes.size, local[eu[es:ee]],
+                                  local[ev[es:ee]], ew[es:ee])
+            out.append((fg, nodes))
+        return out
 
     # ---- weight updates (live traffic; DESIGN.md §9) ------------------
     def edge_ids(self, u, v) -> np.ndarray:
@@ -177,6 +220,87 @@ class Graph:
         big = np.bincount(comp).argmax()
         g, _ = self.subgraph(np.nonzero(comp == big)[0])
         return g
+
+    # ---- shared-memory views (parallel host build; DESIGN.md §17) ------
+    def to_shared(self) -> "SharedGraph":
+        """Export all six CSR/edge arrays into one shared-memory block.
+
+        Worker processes attach with ``Graph.from_shared(handle.meta)``
+        and get zero-copy read-only views — nothing but the small
+        ``meta`` dict ever crosses the pickle boundary.  The caller owns
+        the block: call ``close()`` in every attached process and
+        ``unlink()`` exactly once (the creator) when the build is done.
+        """
+        arrays = [self.indptr, self.indices, self.weights,
+                  self.edge_u, self.edge_v, self.edge_w]
+        offsets, total = [], 0
+        for a in arrays:
+            total = (total + 7) & ~7          # 8-byte alignment
+            offsets.append(total)
+            total += a.nbytes
+        shm = shared_memory.SharedMemory(create=True, size=max(total, 1))
+        for a, off in zip(arrays, offsets):
+            view = np.ndarray(a.shape, dtype=a.dtype, buffer=shm.buf,
+                              offset=off)
+            view[:] = a
+        meta = {
+            "name": shm.name,
+            "n": int(self.n),
+            "shapes": [tuple(a.shape) for a in arrays],
+            "dtypes": [str(a.dtype) for a in arrays],
+            "offsets": offsets,
+        }
+        return SharedGraph(shm=shm, meta=meta)
+
+    @staticmethod
+    def from_shared(meta: dict) -> "SharedGraph":
+        """Attach to a block exported by ``to_shared``; zero-copy views.
+
+        The views are marked read-only: the shared CSR is a broadcast
+        input, never a communication channel.  Keep the returned handle
+        alive as long as ``handle.graph`` is in use (the buffer dies
+        with it), and ``close()`` when done.
+        """
+        shm = shared_memory.SharedMemory(name=meta["name"])
+        views = []
+        for shape, dtype, off in zip(meta["shapes"], meta["dtypes"],
+                                     meta["offsets"]):
+            v = np.ndarray(shape, dtype=np.dtype(dtype), buffer=shm.buf,
+                           offset=off)
+            v.flags.writeable = False
+            views.append(v)
+        g = Graph(n=meta["n"], indptr=views[0], indices=views[1],
+                  weights=views[2], edge_u=views[3], edge_v=views[4],
+                  edge_w=views[5])
+        return SharedGraph(shm=shm, meta=dict(meta), graph=g)
+
+
+@dataclasses.dataclass
+class SharedGraph:
+    """Handle for a Graph living in a shared-memory block.
+
+    ``meta`` is the picklable attach token (block name + array layout);
+    ``graph`` is set on the attach side (``from_shared``).  Lifecycle:
+    every process that holds the handle calls ``close()``; the creating
+    process additionally calls ``unlink()`` once to free the block.
+    """
+    shm: shared_memory.SharedMemory
+    meta: dict
+    graph: "Graph | None" = None
+
+    def close(self) -> None:
+        try:
+            self.shm.close()
+        except BufferError:
+            # numpy views still alive in this process; the block is
+            # freed by unlink regardless, so this is not a leak
+            pass
+
+    def unlink(self) -> None:
+        try:
+            self.shm.unlink()
+        except FileNotFoundError:
+            pass
 
 
 # ---- synthetic road-network generators --------------------------------

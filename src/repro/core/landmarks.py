@@ -185,13 +185,76 @@ def _dijkstra_with_parent(g: Graph, s: int):
     return dist, parent
 
 
+def multi_source_sssp(g: Graph, sources: np.ndarray):
+    """Exact distances + a shortest-path-tree parent for every source at
+    once: vectorized Bellman-Ford to fixpoint over the CSR.
+
+    Returns ``(dist [ns, n], parent [ns, n])``.  Integer weights keep
+    every path sum exactly representable, so the fixpoint distances
+    equal Dijkstra's bit for bit.  The parent rule is deterministic and
+    order-free: ``parent[i, v]`` is the neighbour u minimising
+    ``(dist[i, u] + w(u, v), u)`` lexicographically (-1 at sources and
+    unreachable nodes), so every process — serial or worker — derives
+    the identical tree from the same graph (the serial-parity
+    contract, DESIGN.md §17).
+    """
+    sources = np.asarray(sources, dtype=np.int64)
+    ns, n = sources.size, g.n
+    # node-major layout [n, ns]: every relaxation step is then a
+    # contiguous row gather/scatter instead of a strided column one
+    distT = np.full((n, ns), np.inf)
+    parentT = -np.ones((n, ns), dtype=np.int64)
+    if ns:
+        distT[sources, np.arange(ns)] = 0.0
+    if ns == 0 or g.indices.size == 0:
+        return (np.ascontiguousarray(distT.T),
+                np.ascontiguousarray(parentT.T))
+    # padded incoming adjacency [n, D] (undirected: a node's CSR row IS
+    # its incoming-tail list), rows sorted by neighbour id so argmax of
+    # the tie mask lands on the smallest tail.  The relaxation becomes
+    # one contiguous axis-reduce per iteration — no reduceat, no
+    # variable-length groups.
+    deg = np.diff(g.indptr)
+    total = int(g.indices.size)
+    rows = np.repeat(np.arange(n, dtype=np.int64), deg)
+    order = np.lexsort((g.indices, rows))
+    nbr = g.indices[order].astype(np.int64)
+    nbw = g.weights[order]
+    D = int(deg.max())
+    cols = np.arange(total, dtype=np.int64) - g.indptr[rows]
+    pad_src = np.zeros((n, D), dtype=np.int64)
+    pad_w = np.full((n, D), np.inf)
+    pad_src[rows, cols] = nbr
+    pad_w[rows, cols] = nbw
+    pad_w3 = pad_w[:, :, None]
+    while True:
+        cand = distT[pad_src] + pad_w3        # [n, D, ns]
+        best = cand.min(axis=1)               # [n, ns]
+        upd = np.minimum(distT, best)
+        if not (upd < distT).any():
+            break
+        distT = upd
+    # one more candidate pass at the fixpoint extracts the parents
+    cand = distT[pad_src] + pad_w3
+    best = cand.min(axis=1)
+    # a node gets a parent only where the best incoming relaxation
+    # equals its final distance: true for every reachable non-source
+    # (inf == inf would otherwise hand parents to unreachable nodes)
+    ok = np.isfinite(best) & (best == distT)
+    col = (cand == best[:, None, :]).argmax(axis=1)
+    parentT = np.where(ok, pad_src[np.arange(n)[:, None], col], -1)
+    return np.ascontiguousarray(distT.T), np.ascontiguousarray(parentT.T)
+
+
 def hybrid_cover(frag: Graph, boundary: np.ndarray,
                  use_cost_model: bool = True) -> HybridCover:
     """Build a hybrid landmark cover for ``boundary`` nodes of a fragment.
 
-    One Dijkstra per boundary node gives (a) the local boundary-to-
-    boundary distances and (b) one canonical shortest path per pair, whose
-    *internal* nodes are the landmark candidates (Example 1 semantics).
+    One vectorized multi-source SSSP over all boundary nodes gives (a)
+    the local boundary-to-boundary distances and (b) one canonical
+    shortest path per pair (the deterministic lexicographic parent
+    tree, ``multi_source_sssp``), whose *internal* nodes are the
+    landmark candidates (Example 1 semantics).
 
     Greedy selection under the cost model: repeatedly pick the node x
     maximising |P_x| among those with |N_x| <= |P_x| over the still-
@@ -200,80 +263,96 @@ def hybrid_cover(frag: Graph, boundary: np.ndarray,
     reproduces the paper's Table V ablation: any node on >= 1 path is
     eligible (classical landmark-cover greedy).
     """
-    boundary = np.asarray(sorted(set(int(b) for b in boundary)),
-                          dtype=np.int32)
+    boundary = np.unique(np.asarray(boundary, dtype=np.int64)).astype(
+        np.int32)
     nb = boundary.size
     if nb <= 1:
         return HybridCover(landmarks=np.empty(0, np.int32),
                            landmark_edges=np.empty((0, 3)),
                            direct_edges=np.empty((0, 3)))
-    bset = {int(b): i for i, b in enumerate(boundary)}
-    dist_bb = np.full((nb, nb), np.inf)
-    # pair -> internal nodes of one canonical shortest path
-    pair_internal: Dict[Tuple[int, int], List[int]] = {}
-    # node -> set of pair keys through it
+    dist, parent = multi_source_sssp(frag, boundary)
+    dist_bb = dist[:, boundary]
+    # walk every pair's canonical parent chain t -> b simultaneously:
+    # each step is one [n_active] gather, arrays compacting as chains
+    # terminate.  Pairs are encoded as i*nb + j (i < j).
+    iu, ju = np.triu_indices(nb, k=1)
+    finite = np.isfinite(dist_bb[iu, ju])
+    iu, ju = iu[finite], ju[finite]
+    pairid = iu.astype(np.int64) * nb + ju
+    bsrc = boundary[iu].astype(np.int64)
+    cur = parent[iu, boundary[ju]]
+    xs_parts: List[np.ndarray] = []
+    ps_parts: List[np.ndarray] = []
+    walking = (cur >= 0) & (cur != bsrc)
+    while walking.any():
+        iu, cur = iu[walking], cur[walking]
+        bsrc, pairid = bsrc[walking], pairid[walking]
+        xs_parts.append(cur)
+        ps_parts.append(pairid)
+        cur = parent[iu, cur]
+        walking = (cur >= 0) & (cur != bsrc)
+    # node -> set of pair ids whose canonical path passes through it
     through: Dict[int, set] = {}
-    for i, b in enumerate(boundary):
-        dist, parent = _dijkstra_with_parent(frag, int(b))
-        dist_bb[i] = dist[boundary]
-        for j in range(i + 1, nb):
-            t = int(boundary[j])
-            if not np.isfinite(dist[t]):
-                continue
-            # walk the parent chain t -> b, collect internal nodes
-            internal = []
-            x = parent[t]
-            while x != -1 and x != b:
-                internal.append(int(x))
-                x = parent[x]
-            key = (i, j)
-            pair_internal[key] = internal
-            for x in internal:
-                through.setdefault(x, set()).add(key)
+    if xs_parts:
+        xs = np.concatenate(xs_parts)
+        ps = np.concatenate(ps_parts)
+        order = np.argsort(xs, kind="stable")
+        xs, ps = xs[order], ps[order]
+        ux, ustarts = np.unique(xs, return_index=True)
+        bounds = np.append(ustarts, xs.size).tolist()
+        pslist = ps.tolist()
+        through = {int(x): set(pslist[s:e]) for x, s, e in
+                   zip(ux.tolist(), bounds[:-1], bounds[1:])}
 
     covered: set = set()
     landmarks: List[int] = []
     lm_edges: List[Tuple[int, int, float]] = []
-    # greedy: max |P_x| with cost-model gate
-    alive = dict(through)
-    while alive:
-        best_x, best_pairs = None, None
-        for x, pairs in alive.items():
-            live = pairs - covered
-            if not live:
-                continue
-            if best_pairs is None or len(live) > len(best_pairs):
-                best_x, best_pairs = x, live
-        if best_x is None:
-            break
-        nx = set()
-        for (i, j) in best_pairs:
-            nx.add(i)
-            nx.add(j)
-        if use_cost_model and len(nx) > len(best_pairs):
+    # greedy max |P_x| with cost-model gate, via a lazy max-heap: live
+    # pair counts only ever shrink, so a popped entry whose count is
+    # still current is the global argmax (CELF-style lazy greedy).
+    # Ties break toward the smaller node id — value-determined, so
+    # every process selects the identical landmark sequence.
+    heap = [(-len(pairs), x) for x, pairs in through.items()]
+    heapq.heapify(heap)
+    while heap:
+        negc, x = heapq.heappop(heap)
+        pairs = through.get(x)
+        if pairs is None:
+            continue
+        live = pairs - covered
+        if not live:
+            del through[x]
+            continue
+        if len(live) != -negc:
+            through[x] = live
+            heapq.heappush(heap, (-len(live), x))
+            continue
+        nx = {p // nb for p in live} | {p % nb for p in live}
+        del through[x]
+        if use_cost_model and len(nx) > len(live):
             # space_L > space_N: cheaper to materialise pairs directly;
             # drop x from candidacy (its surviving pairs go to E_D^-)
-            del alive[best_x]
             continue
-        landmarks.append(best_x)
-        # enforced edges (u, x) for u in N_x with local shortest distance
-        dist_x, _ = _dijkstra_with_parent(frag, best_x)
-        for bi in nx:
-            lm_edges.append((int(boundary[bi]), best_x,
-                             float(dist_x[boundary[bi]])))
-        covered |= best_pairs
-        del alive[best_x]
+        landmarks.append(int(x))
+        # enforced edges (u, x) for u in N_x with local shortest
+        # distance: dist(b_u, x) is a row gather from the multi-source
+        # run (undirected symmetry), not another SSSP.  sorted(nx) so
+        # edge order is value-determined, identical in every process.
+        for bi in sorted(nx):
+            lm_edges.append((int(boundary[bi]), int(x),
+                             float(dist[bi, x])))
+        covered |= live
 
-    direct = []
-    for i in range(nb):
-        for j in range(i + 1, nb):
-            if not np.isfinite(dist_bb[i, j]):
-                continue
-            if (i, j) in covered:
-                continue
-            direct.append((int(boundary[i]), int(boundary[j]),
-                           float(dist_bb[i, j])))
+    # E_D^-: finite, still-uncovered pairs become direct edges
+    iu, ju = np.triu_indices(nb, k=1)
+    dvals = dist_bb[iu, ju]
+    keep = np.isfinite(dvals)
+    if covered:
+        cov = np.fromiter(covered, dtype=np.int64, count=len(covered))
+        keep &= ~np.isin(iu.astype(np.int64) * nb + ju, cov)
+    direct = np.column_stack([boundary[iu[keep]], boundary[ju[keep]],
+                              dvals[keep]]).astype(np.float64)
     return HybridCover(
         landmarks=np.array(landmarks, dtype=np.int32),
         landmark_edges=np.array(lm_edges, dtype=np.float64).reshape(-1, 3),
-        direct_edges=np.array(direct, dtype=np.float64).reshape(-1, 3))
+        direct_edges=direct.reshape(-1, 3))

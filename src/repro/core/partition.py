@@ -71,27 +71,47 @@ class PartitionResult:
 # ---------------------------------------------------------------------------
 def _heavy_edge_matching(g: Graph, node_w: np.ndarray, max_node_w: int,
                          rng: np.random.Generator):
-    """Match each node to its heaviest unmatched neighbour (METIS HEM)."""
-    match = -np.ones(g.n, dtype=np.int64)
-    visit = rng.permutation(g.n)
-    for u in visit:
-        if match[u] >= 0:
-            continue
-        s, e = g.indptr[u], g.indptr[u + 1]
-        best, best_w = -1, -1.0
-        for v, w in zip(g.indices[s:e], g.weights[s:e]):
-            v = int(v)
-            if match[v] >= 0 or v == u:
-                continue
-            if node_w[u] + node_w[v] > max_node_w:
-                continue
-            if w > best_w:
-                best, best_w = v, w
-        if best >= 0:
-            match[u] = best
-            match[best] = u
-        else:
-            match[u] = u
+    """Heavy-edge matching via vectorized propose-accept rounds.
+
+    Every unmatched node proposes its incident live edge of maximal
+    global rank (weight, then a random per-edge priority — one strict
+    total order shared by all nodes); mutual proposals match.  The
+    globally top-ranked live edge is always mutual, so every round
+    makes progress and the loop terminates.  Same METIS-HEM contract
+    as the sequential visit-order scan this replaces — match heavy
+    edges first under the ``max_node_w`` balance bound — but each
+    round is O(live edges) numpy instead of a Python adjacency walk.
+    """
+    n = g.n
+    match = -np.ones(n, dtype=np.int64)
+    m = g.edge_u.size
+    if m == 0:
+        match[:] = np.arange(n)
+        return match
+    # directed edge list with undirected ids for the shared rank
+    eprio = rng.permutation(m)
+    src = np.concatenate([g.edge_u, g.edge_v]).astype(np.int64)
+    dst = np.concatenate([g.edge_v, g.edge_u]).astype(np.int64)
+    eid = np.concatenate([np.arange(m), np.arange(m)])
+    feasible = (node_w[src] + node_w[dst]) <= max_node_w
+    src, dst, eid = src[feasible], dst[feasible], eid[feasible]
+    # sort once by (src, weight, priority); per round the last live
+    # entry of each src group is that node's proposal
+    order = np.lexsort((eprio[eid], g.edge_w[eid], src))
+    src, dst = src[order], dst[order]
+    while src.size:
+        live = (match[src] < 0) & (match[dst] < 0)
+        src, dst = src[live], dst[live]
+        if not src.size:
+            break
+        last = np.flatnonzero(np.r_[src[1:] != src[:-1], True])
+        proposal = -np.ones(n, dtype=np.int64)
+        proposal[src[last]] = dst[last]
+        u = src[last]
+        mutual = u[proposal[proposal[u]] == u]
+        if not mutual.size:
+            break
+        match[mutual] = proposal[mutual]
     match[match < 0] = np.nonzero(match < 0)[0]
     return match
 

@@ -44,7 +44,8 @@ from ..core.device_engine import (build_device_index, index_fields_equal,
 from ..core.dist_engine import EpochedEngine, serve_sharded
 from ..core.graph import road_like, traffic_updates
 from ..core.paths import path_weight
-from ..core.supergraph import build_index, reweight_index
+from ..core.supergraph import (build_index, index_arrays_equal,
+                               reweight_index)
 from ..obs import trace
 from ..perflog import append_records, latest
 from ..runtime import StragglerMonitor
@@ -107,32 +108,69 @@ def _hub_selection(g, args) -> np.ndarray | None:
     return flat[np.sort(first)][:budget]
 
 
+def _host_build_record(args, timings: dict) -> list:
+    """``section: "host_build"`` perf record from the host index stage
+    timings (DESIGN.md §17) — the measurement behind the staged-
+    pipeline speedup claim and the bench-gate ``host_build`` section."""
+    stages = {k: round(float(v), 4) for k, v in timings.items()
+              if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    return [{
+        "section": "host_build",
+        "graph": _label(args),
+        "backend": jax.default_backend(),
+        "build_workers": int(getattr(args, "build_workers", 1) or 1),
+        "wall_s": round(sum(stages.values()), 4),
+        **{f"stage_{k}_s": v for k, v in stages.items()},
+    }]
+
+
 def _build_engine(args) -> tuple[EpochedEngine, float]:
     """Graph + host index + EpochedEngine with timing prints — the one
     setup path shared by the planner serving loops (offline batches,
     --paths, --update-batches, --live).  All stage wall-times flow
     through the span API (DESIGN.md §16): the console prints, the
     returned ``build_s``, and the build trace all read one
-    measurement."""
+    measurement.
+
+    The host index is built *inside* ``EpochedEngine`` via the staged
+    streaming handoff (DESIGN.md §17): with ``--build-workers N`` the
+    per-fragment covers run process-parallel and overlap the device
+    build, so the ``device_engine`` span covers the whole index
+    pipeline end to end."""
+    workers = int(getattr(args, "build_workers", 1) or 1)
     bt: dict = {}
     with trace.timed("build.graph", bt, "graph", nodes=args.nodes):
         g = road_like(args.nodes, seed=args.seed)
     print(f"graph: n={g.n} m={g.m} ({bt['graph']:.1f}s)")
-    with trace.timed("build.host_index", bt, "host_index"):
-        ix = build_index(g)
-    print(f"index: {ix.timings} ({bt['host_index']:.1f}s)")
     # refresh-path warmup compiles the delta-FW programs — minutes of
     # wasted work at road64k scale when the run applies no updates
     warm = bool(args.update_batches
                 or (args.live and args.live_update_batches))
     hub_nodes = _hub_selection(g, args)
     with trace.timed("build.device_engine", bt, "device_engine",
-                     warm_refresh=warm):
-        engine = EpochedEngine(g, ix=ix, paths=args.paths,
+                     warm_refresh=warm, build_workers=workers):
+        engine = EpochedEngine(g, paths=args.paths,
                                hierarchy_levels=args.hierarchy_levels,
                                resident_mb=args.resident_mb,
-                               warm_refresh=warm, hub_nodes=hub_nodes)
+                               warm_refresh=warm, hub_nodes=hub_nodes,
+                               build_workers=workers)
     build_s = bt["device_engine"]
+    print(f"index: {engine.ix.timings} (workers={workers})")
+    if getattr(args, "check_build_parity", False):
+        with trace.timed("build.parity_check", bt, "parity"):
+            eq = index_arrays_equal(engine.ix, build_index(g))
+        bad = [k for k, v in eq.items() if not v]
+        if bad:
+            raise SystemExit(
+                f"build parity FAILED: --build-workers {workers} "
+                f"diverges from the serial build on {bad}")
+        print(f"build parity: workers={workers} == serial on all "
+              f"index tables ({bt['parity']:.1f}s)")
+    _emit(args, _host_build_record(args, engine.ix.timings),
+          "host_build",
+          prev_filter={"section": "host_build", "graph": _label(args),
+                       "build_workers": workers},
+          prev_key="wall_s")
     dix = engine.dix
     ov = _overlay_record(engine)
     print(f"device index: frag_apsp={dix.frag_apsp.shape} "
@@ -529,6 +567,15 @@ def main() -> None:
                          "pre-lifted row cache on hierarchical "
                          "indices; 0 disables, auto uses the "
                          "built-in default")
+    ap.add_argument("--build-workers", type=int, default=1,
+                    help="process-parallel per-fragment cover workers "
+                         "for the host build (DESIGN.md §17); the "
+                         "parallel build is array-equal to --build-"
+                         "workers 1 by contract")
+    ap.add_argument("--check-build-parity", action="store_true",
+                    help="rebuild the host index serially and fail "
+                         "unless the --build-workers build is array-"
+                         "equal on every index table (CI smoke)")
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--batch-size", type=int, default=1024)
     ap.add_argument("--validate", type=int, default=64)
@@ -643,6 +690,9 @@ def main() -> None:
         ap.error("--expect-hierarchy requires --mode planner")
     if args.update_batches and mode != "planner":
         ap.error("--update-batches requires --mode planner")
+    if args.check_build_parity and mode != "planner":
+        ap.error("--check-build-parity requires --mode planner "
+                 "(the parity check lives in the planner setup path)")
     if args.paths and mode != "planner":
         ap.error("--paths requires --mode planner")
     if args.live and mode != "planner":
@@ -689,9 +739,15 @@ def main() -> None:
                          nodes=args.nodes):
             g = road_like(args.nodes, seed=args.seed)
         print(f"graph: n={g.n} m={g.m} ({bt['graph']:.1f}s)")
-        with trace.timed("build.host_index", bt, "host_index"):
-            ix = build_index(g)
+        with trace.timed("build.host_index", bt, "host_index",
+                         build_workers=args.build_workers):
+            ix = build_index(g, build_workers=args.build_workers)
         print(f"index: {ix.timings} ({bt['host_index']:.1f}s)")
+        _emit(args, _host_build_record(args, ix.timings), "host_build",
+              prev_filter={"section": "host_build",
+                           "graph": _label(args),
+                           "build_workers": args.build_workers},
+              prev_key="wall_s")
         with trace.timed("build.device_index", bt, "device_index"):
             dix = build_device_index(
                 ix, hierarchy_levels=args.hierarchy_levels)

@@ -148,6 +148,31 @@ def test_fresh_serve_live_requires_hist_fields():
             {**full, "latency_source": "sampled"})
 
 
+def test_host_build_window_keyed_section_graph():
+    """host_build records gate on wall seconds keyed (section, graph):
+    serve records (µs/query units) and other graphs' host builds must
+    both be invisible to the window."""
+    hb = {"section": "host_build", "graph": "road4000", "wall_s": 0.1}
+    recs = [_rec(9.0), hb,
+            {**hb, "graph": "road64k", "wall_s": 4.3},
+            {**hb, "wall_s": 0.12}]
+    win = bench_gate.history_window(
+        recs, {"section": "host_build", "graph": "road4000"},
+        "wall_s", 5)
+    assert win == [0.1, 0.12]
+
+
+def test_host_build_record_without_wall_s_fails_loudly():
+    """A matching host_build record with no numeric wall_s is a
+    half-written entry — loud failure, not a smaller window."""
+    broken = {"section": "host_build", "graph": "road4000",
+              "build_workers": 2}
+    with pytest.raises(SystemExit, match="numeric"):
+        bench_gate.history_window(
+            [broken], {"section": "host_build", "graph": "road4000"},
+            "wall_s", 5)
+
+
 def test_committed_history_is_gate_clean():
     """The repo's own BENCH_serve.json must stay loud-failure-free for
     every config the CI gates query."""
@@ -166,3 +191,6 @@ def test_committed_history_is_gate_clean():
     bench_gate.history_window(
         recs, {"section": "serve_live", "graph": "road4000"},
         "p99_ms", 5)
+    bench_gate.history_window(
+        recs, {"section": "host_build", "graph": "road4000"},
+        "wall_s", 5)
